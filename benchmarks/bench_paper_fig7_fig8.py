@@ -1,0 +1,178 @@
+"""Paper Fig. 7 (scatter: time & memory per query) + Fig. 8 (box plots) +
+§4.3 (Wilcoxon / Mann-Whitney significance tests).
+
+Reproduces the paper's experiment:
+  * extract high-frequency words from the dataset, use them as filter
+    conditions;
+  * per query, build the co-occurrence network with (a) the traditional
+    traversal algorithm (Algorithm 1 over the documents matching the
+    filter) and (b) the optimized inverted-index BFS (Algorithm 3,
+    ``bfs_construct_host_fast`` — postings intersection + forward-index
+    aggregation, exactly the paper's CPU+search-engine deployment);
+  * record runtime and memory per query; compare distributions with the
+    paper's Wilcoxon + Mann-Whitney tests.
+
+A third column times the TPU-native bit-packed form of Algorithm 3
+(``bfs_construct`` under jit) on this CPU: it is a *throughput* design
+(dense index passes that map to MXU/VPU at pod scale — see §Roofline),
+so its single-query CPU latency is reported for completeness, not as the
+paper's claim.  Memory accounting: tracemalloc peak for both host
+algorithms (the traversal sparse-matrix dict vs the BFS count arrays).
+The traversal baseline is given pre-tokenised documents (the paper's
+baseline re-tokenises per query — ours is conservative in its favour).
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy import stats
+
+from repro.core import (
+    bfs_construct,
+    bfs_construct_host_fast,
+    build_host_index,
+    pack_docs,
+    traversal_construct_host,
+)
+from repro.data import synthetic_csl
+from benchmarks.common import section, write_csv
+
+
+def traversal_query(postings, docs, vocab, seed_term):
+    """The traditional algorithm for one query: retrieve matching docs,
+    enumerate term pairs (Algorithm 1)."""
+    matched = [docs[d] for d in postings[seed_term]]
+    return traversal_construct_host(matched, vocab)
+
+
+def run(n_docs: int = 20000, vocab: int = 8192, n_queries: int = 60,
+        depth: int = 3, topk: int = 16, beam: int = 32) -> Dict:
+    docs = synthetic_csl(n_docs, vocab, seed=0)
+    hidx = build_host_index(docs, vocab)
+    index = pack_docs(docs, vocab)
+
+    # high-frequency words as filter conditions (paper §4)
+    df = np.asarray(index.doc_freq)
+    seeds = np.argsort(-df)[:n_queries]
+
+    device_query = jax.jit(lambda idx, s: bfs_construct(
+        idx, s, depth=depth, topk=topk, beam=beam))
+    pad = np.full((4,), -1, np.int32)
+    pad[0] = int(seeds[0])
+    jax.block_until_ready(device_query(index, jnp.asarray(pad)).src)  # compile
+
+    rows = []
+    for q, s in enumerate(seeds):
+        s = int(s)
+        # traditional traversal
+        tracemalloc.start()
+        t0 = time.perf_counter()
+        trav = traversal_query(hidx.postings, docs, vocab, s)
+        t_trav = time.perf_counter() - t0
+        _, m_trav = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+
+        # optimized (paper Algorithm 3, host deployment)
+        tracemalloc.start()
+        t0 = time.perf_counter()
+        opt = bfs_construct_host_fast(hidx, [s], depth=depth, topk=topk,
+                                      beam=beam)
+        t_opt = time.perf_counter() - t0
+        _, m_opt = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+
+        # TPU-native form (jitted), for reference
+        pad = np.full((4,), -1, np.int32)
+        pad[0] = s
+        t0 = time.perf_counter()
+        net = device_query(index, jnp.asarray(pad))
+        jax.block_until_ready(net.src)
+        t_dev = time.perf_counter() - t0
+
+        rows.append({
+            "query": q, "seed": s, "df": int(df[s]),
+            "t_traversal_s": t_trav, "t_optimized_s": t_opt,
+            "t_tpu_form_s": t_dev,
+            "mem_traversal_b": int(m_trav), "mem_optimized_b": int(m_opt),
+            "edges_traversal": len(trav), "edges_optimized": len(opt),
+        })
+
+    tt = np.array([r["t_traversal_s"] for r in rows])
+    to = np.array([r["t_optimized_s"] for r in rows])
+    mt = np.array([r["mem_traversal_b"] for r in rows], np.float64)
+    mo = np.array([r["mem_optimized_b"] for r in rows], np.float64)
+
+    # Paper §4.3: Wilcoxon (paired) and Mann-Whitney (independent)
+    w_t = stats.wilcoxon(tt, to)
+    mw_t = stats.mannwhitneyu(tt, to, alternative="greater")
+    w_m = stats.wilcoxon(mt, mo)
+    mw_m = stats.mannwhitneyu(mt, mo, alternative="greater")
+
+    def q_(x, p):
+        return float(np.percentile(x, p))
+
+    summary = {
+        "n_queries": n_queries,
+        "time": {
+            "traversal": {"median_s": q_(tt, 50), "p95_s": q_(tt, 95),
+                          "iqr_s": q_(tt, 75) - q_(tt, 25)},
+            "optimized": {"median_s": q_(to, 50), "p95_s": q_(to, 95),
+                          "iqr_s": q_(to, 75) - q_(to, 25)},
+            "speedup_median": q_(tt, 50) / max(q_(to, 50), 1e-12),
+            "wilcoxon": {"stat": float(w_t.statistic), "p": float(w_t.pvalue)},
+            "mannwhitney": {"stat": float(mw_t.statistic), "p": float(mw_t.pvalue)},
+        },
+        "memory": {
+            "traversal": {"median_b": q_(mt, 50), "p95_b": q_(mt, 95)},
+            "optimized": {"median_b": q_(mo, 50), "p95_b": q_(mo, 95)},
+            "ratio_median": q_(mt, 50) / max(q_(mo, 50), 1e-12),
+            "wilcoxon": {"stat": float(w_m.statistic), "p": float(w_m.pvalue)},
+            "mannwhitney": {"stat": float(mw_m.statistic), "p": float(mw_m.pvalue)},
+        },
+        "optimized_below_0p16s": float(np.mean(to < 0.16)),
+    }
+    return {"rows": rows, "summary": summary}
+
+
+def main() -> List[Dict]:
+    section("Paper Fig.7/8 + §4.3 — traversal vs optimized (time & memory)")
+    out = run()
+    s = out["summary"]
+    path = write_csv("paper_fig7_fig8", out["rows"])
+    print(f"per-query CSV -> {path}")
+    t, m = s["time"], s["memory"]
+    print(f"time   median: traversal {t['traversal']['median_s']*1e3:8.2f} ms"
+          f"  optimized {t['optimized']['median_s']*1e3:8.2f} ms"
+          f"  speedup x{t['speedup_median']:.1f}")
+    print(f"       IQR   : traversal {t['traversal']['iqr_s']*1e3:8.2f} ms"
+          f"  optimized {t['optimized']['iqr_s']*1e3:8.2f} ms  (stability)")
+    print(f"memory median: traversal {m['traversal']['median_b']/2**20:8.2f} MiB"
+          f"  optimized {m['optimized']['median_b']/2**20:8.2f} MiB"
+          f"  ratio x{m['ratio_median']:.1f}")
+    print(f"Wilcoxon  time p={t['wilcoxon']['p']:.2e}  "
+          f"memory p={m['wilcoxon']['p']:.2e}")
+    print(f"MannWhit  time p={t['mannwhitney']['p']:.2e}  "
+          f"memory p={m['mannwhitney']['p']:.2e}")
+    print(f"paper's web-real-time bar: {s['optimized_below_0p16s']*100:.0f}% "
+          f"of optimized queries < 0.16 s")
+    ok = (t["wilcoxon"]["p"] < 1e-3 and t["mannwhitney"]["p"] < 1e-3
+          and m["wilcoxon"]["p"] < 1e-3 and m["mannwhitney"]["p"] < 1e-3
+          and t["speedup_median"] > 1 and m["ratio_median"] > 1)
+    print("paper §4.3 claim (optimized better, all p < 0.001):",
+          "REPRODUCED" if ok else "NOT met")
+    return [{"name": "fig7_time_speedup", "value": t["speedup_median"]},
+            {"name": "fig8_mem_ratio", "value": m["ratio_median"]},
+            {"name": "fig7_opt_median_ms",
+             "value": t["optimized"]["median_s"] * 1e3},
+            {"name": "wilcoxon_time_p", "value": t["wilcoxon"]["p"]},
+            {"name": "mannwhitney_time_p", "value": t["mannwhitney"]["p"]},
+            {"name": "frac_below_0.16s", "value": s["optimized_below_0p16s"]}]
+
+
+if __name__ == "__main__":
+    main()

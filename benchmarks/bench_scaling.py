@@ -1,0 +1,78 @@
+"""Complexity-claim benchmark: traversal O(n·m²) vs optimized O(n²·d).
+
+Scales the corpus size n_docs and measures per-query construction time for
+both algorithms.  The traversal baseline grows with the matched document
+count; the optimized algorithm's cost is one masked pass over the packed
+index per level — its growth is the index width W = n_docs/32 with a tiny
+constant.  Also sweeps mean document length m (the m² term only hits the
+traversal baseline).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    bfs_construct_host_fast,
+    build_host_index,
+    traversal_construct_host,
+)
+from repro.data import synthetic_csl
+from benchmarks.common import section, write_csv
+
+
+def _one_scale(n_docs: int, vocab: int, mean_len: float, n_q: int = 8) -> Dict:
+    docs = synthetic_csl(n_docs, vocab, mean_len=mean_len, seed=0)
+    hidx = build_host_index(docs, vocab)
+    df = np.bincount(hidx.fwd_terms, minlength=vocab)
+    seeds = np.argsort(-df)[:n_q]
+
+    t_trav, t_opt = [], []
+    for s in seeds:
+        s = int(s)
+        matched = [docs[d] for d in hidx.postings[s]]
+        t0 = time.perf_counter()
+        traversal_construct_host(matched, vocab)
+        t_trav.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bfs_construct_host_fast(hidx, [s], depth=2, topk=16, beam=32)
+        t_opt.append(time.perf_counter() - t0)
+    return {
+        "n_docs": n_docs, "vocab": vocab, "mean_len": mean_len,
+        "t_traversal_med_s": float(np.median(t_trav)),
+        "t_optimized_med_s": float(np.median(t_opt)),
+        "speedup": float(np.median(t_trav) / max(np.median(t_opt), 1e-12)),
+    }
+
+
+def main() -> List[Dict]:
+    section("Complexity scaling — O(n*m^2) traversal vs O(n^2*d) optimized")
+    rows = []
+    for n in (2000, 8000, 32000):
+        rows.append(_one_scale(n, 4096, 12.0))
+    for ml in (6.0, 12.0, 24.0):                 # the m^2 term
+        rows.append(_one_scale(8000, 4096, ml))
+    path = write_csv("scaling", rows)
+    print(f"CSV -> {path}")
+    print(f"{'n_docs':>7} {'m':>5} {'traversal s':>12} {'optimized s':>12} {'x':>7}")
+    for r in rows:
+        print(f"{r['n_docs']:>7} {r['mean_len']:>5.0f} "
+              f"{r['t_traversal_med_s']:>12.5f} {r['t_optimized_med_s']:>12.5f} "
+              f"{r['speedup']:>7.1f}")
+    # growth check: traversal time ratio across m sweep should approach
+    # (m2/m1)^2 (each doc contributes ~m^2 pairs); optimized ~flat
+    m = [r for r in rows if r["n_docs"] == 8000]
+    g_trav = m[-1]["t_traversal_med_s"] / max(m[0]["t_traversal_med_s"], 1e-12)
+    g_opt = m[-1]["t_optimized_med_s"] / max(m[0]["t_optimized_med_s"], 1e-12)
+    print(f"\nm: 6 -> 24 (4x):  traversal grew x{g_trav:.1f} (m^2 predicts ~16x "
+          f"incl. retrieval growth), optimized grew x{g_opt:.1f}")
+    return [{"name": f"scaling_n{r['n_docs']}_m{int(r['mean_len'])}",
+             "value": r["speedup"]} for r in rows]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: timing, memory tracking, CSV emission."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+import tracemalloc
+from typing import Callable, Dict, List, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def timed(fn: Callable, *args, repeats: int = 1) -> Tuple[float, object]:
+    """Median wall time (s) of fn(*args) over repeats; returns (t, last_out)."""
+    ts, out = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], out
+
+
+def host_peak_bytes(fn: Callable, *args) -> Tuple[int, float, object]:
+    """(peak_host_bytes, wall_s, out) via tracemalloc."""
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    out = fn(*args)
+    dt = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return peak, dt, out
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return os.path.normpath(path)
+
+
+def section(title: str) -> None:
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")

@@ -1,0 +1,90 @@
+"""Roofline table generator (deliverable (g)).
+
+Reads the dry-run JSONs under results/dryrun/ and prints/writes the per
+(arch x shape x mesh) roofline table: the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.  The
+single-pod *unroll*-mode artifacts are the costed table; the scan-mode
+artifacts carry the per-device memory figures (TPU-realistic buffer
+reuse) and the multi-pod pass/fail.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_t(x: float) -> str:
+    return f"{x*1e3:9.2f}"
+
+
+def table(recs: List[Dict], mesh: str = "16x16", mode: str = "unroll",
+          mem_mode: str = "scan") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh and r.get("mode") == mode]
+    mem_rows = {(r["arch"], r["shape"]): r for r in recs
+                if r["mesh"] == mesh and r.get("mode") == mem_mode}
+    out = [f"| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+           f"GiB/dev | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rl = r["roofline"]
+        mem = mem_rows.get((r["arch"], r["shape"]), r).get("memory", {})
+        gib = mem.get("peak_per_device_bytes", 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} |{_fmt_t(rl['t_compute_s'])} |"
+            f"{_fmt_t(rl['t_memory_s'])} |{_fmt_t(rl['t_collective_s'])} | "
+            f"{rl['bottleneck'][:4]} | {gib:7.2f} | {rl['useful_ratio']:5.3f} |"
+            f" {rl['roofline_fraction']:7.4f} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb_cells(recs: List[Dict]) -> List[Dict]:
+    """The three §Perf targets: worst roofline fraction, most
+    collective-bound, most paper-representative (cooc query)."""
+    rows = [r for r in recs if r["mesh"] == "16x16" and r.get("mode") == "unroll"
+            and r["roofline"]["model_flops"] > 0]
+    worst = min(rows, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(rows, key=lambda r: (r["roofline"]["t_collective_s"]
+                                    / max(max(r["roofline"]["t_compute_s"],
+                                              r["roofline"]["t_memory_s"]), 1e-12)))
+    paper = next(r for r in rows if r["arch"] == "cooccur-csl"
+                 and r["shape"] == "query_bfs_d3")
+    return [worst, coll, paper]
+
+
+def main() -> List[Dict]:
+    recs = load()
+    if not recs:
+        print("no dry-run artifacts under results/dryrun — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    n_ok = {}
+    for r in recs:
+        n_ok.setdefault((r["mesh"], r.get("mode")), 0)
+        n_ok[(r["mesh"], r.get("mode"))] += r["status"] == "ok"
+    print("dry-run artifacts:", {f"{m}/{md}": n for (m, md), n in
+                                 sorted(n_ok.items())})
+    print("\n== Roofline (single-pod 16x16, unroll-mode costs, "
+          "scan-mode memory) ==\n")
+    print(table(recs))
+    out = []
+    for r in recs:
+        if r["mesh"] == "16x16" and r.get("mode") == "unroll":
+            out.append({"name": f"roofline_{r['arch']}_{r['shape']}",
+                        "value": r["roofline"]["roofline_fraction"]})
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark driver: one bench per paper table/figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``name,value`` CSV lines at the end (and per-bench CSVs under
+results/bench/).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpora (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    choices=("fig7", "fig5", "scaling", "roofline"))
+    args = ap.parse_args()
+
+    results = []
+    failures = []
+
+    def run_bench(name, fn):
+        if args.only and args.only != name:
+            return
+        try:
+            out = fn()
+            results.extend(out or [])
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+
+    if args.quick:
+        from benchmarks import bench_paper_fig7_fig8 as f78
+        from benchmarks.common import section
+
+        def quick_fig7():
+            section("Paper Fig.7/8 (quick)")
+            out = f78.run(n_docs=4000, vocab=2048, n_queries=20)
+            s = out["summary"]
+            print("time speedup x%.1f  wilcoxon p=%.2e" % (
+                s["time"]["speedup_median"], s["time"]["wilcoxon"]["p"]))
+            return [{"name": "fig7_time_speedup_quick",
+                     "value": s["time"]["speedup_median"]}]
+
+        run_bench("fig7", quick_fig7)
+    else:
+        from benchmarks import bench_paper_fig7_fig8
+        run_bench("fig7", bench_paper_fig7_fig8.main)
+
+    from benchmarks import bench_depth_sensitivity
+    run_bench("fig5", bench_depth_sensitivity.main)
+
+    from benchmarks import bench_scaling
+    run_bench("scaling", bench_scaling.main)
+
+    from benchmarks import roofline
+    run_bench("roofline", roofline.main)
+
+    print("\n== summary (name,value) ==")
+    for r in results:
+        v = r["value"]
+        print(f"{r['name']},{v:.6g}" if isinstance(v, float) else
+              f"{r['name']},{v}")
+    if failures:
+        print("FAILED benches:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Co-occurrence network -> GIN: the paper's output as a first-class graph.
+
+    PYTHONPATH=src python examples/cooccur_to_gnn.py
+
+Builds a keyword co-occurrence network over a synthetic CSL-like corpus
+with the optimized algorithm (Algorithm 3), converts it to an edge index,
+and trains the assigned ``gin-tu`` architecture on it to classify terms
+into frequency bands (a stand-in for topic labels) — demonstrating the
+paper's technique integrated with the GNN substrate (DESIGN.md §5).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import bfs_construct, pack_docs, to_edge_index
+from repro.data import synthetic_csl
+from repro.models import gnn as G
+from repro.train import make_optimizer, make_train_step
+
+
+def main():
+    vocab, n_docs = 512, 4000
+    docs = synthetic_csl(n_docs, vocab, seed=0)
+    index = pack_docs(docs, vocab)
+    df = np.asarray(index.doc_freq)
+
+    # build the network from the top high-frequency seeds (paper §4)
+    seeds = np.argsort(-df)[:8].astype(np.int32)
+    pad = np.full((16,), -1, np.int32)
+    pad[:8] = seeds
+    net = bfs_construct(index, jnp.asarray(pad), depth=3, topk=12, beam=16)
+    ei, ew = to_edge_index(net)
+    print(f"co-occurrence network: {ei.shape[1] // 2} undirected edges")
+
+    # node features: degree + log-df; labels: df quartile band
+    x = np.zeros((vocab, 8), np.float32)
+    deg = np.bincount(ei[0], minlength=vocab).astype(np.float32)
+    x[:, 0] = deg / max(deg.max(), 1)
+    x[:, 1] = np.log1p(df) / np.log1p(df.max())
+    x[:, 2:] = np.random.default_rng(0).standard_normal((vocab, 6)) * 0.1
+    labels = np.digitize(df, np.percentile(df[df > 0], [25, 50, 75]))
+
+    in_net = np.zeros(vocab, np.float32)
+    in_net[np.unique(ei)] = 1.0                      # only network nodes count
+
+    cfg = get_config("gin-tu")
+    params = G.init_gin(cfg, jax.random.PRNGKey(0), 8, 4)
+    opt = make_optimizer(cfg)
+    step = jax.jit(make_train_step(cfg, lambda p, b: G.node_loss(cfg, p, b), opt))
+    batch = {
+        "x": jnp.asarray(x),
+        "edge_src": jnp.asarray(ei[0], jnp.int32),
+        "edge_dst": jnp.asarray(ei[1], jnp.int32),
+        "labels": jnp.asarray(labels, jnp.int32),
+        "label_mask": jnp.asarray(in_net),
+    }
+    state = opt.init(params)
+    for s in range(30):
+        params, state, m = step(params, state, batch)
+        if s % 10 == 0 or s == 29:
+            print(f"step {s:3d}  loss {float(m['loss']):.4f}  "
+                  f"acc {float(m['acc']):.3f}")
+    assert np.isfinite(float(m["loss"]))
+    print("GIN trained on the co-occurrence network  [ok]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Item-item co-occurrence retrieval for recsys (users-as-documents).
+
+    PYTHONPATH=src python examples/item_cooccur_recsys.py
+
+The paper's algorithm applied to the retrieval side of a recommender
+(DESIGN.md §5): treat each user's interaction history as a "document" of
+item ids; the inverted-index BFS then yields, per anchor item, the items
+most co-consumed with it — a candidate generator.  A SASRec model then
+re-ranks those candidates (the standard retrieve -> rank split).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, replace
+from repro.core import bfs_construct, pack_docs
+from repro.models import recsys as R
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_users, n_items = 4000, 1000
+    # users with taste clusters -> co-consumption structure
+    n_clusters = 20
+    item_cluster = rng.integers(0, n_clusters, n_items)
+    histories = []
+    for _ in range(n_users):
+        c = rng.integers(0, n_clusters)
+        in_c = np.where(item_cluster == c)[0]
+        k = rng.integers(3, 12)
+        hist = rng.choice(in_c, size=min(k, len(in_c)), replace=False)
+        if rng.random() < 0.3:                      # some cross-cluster noise
+            hist = np.concatenate([hist, rng.integers(0, n_items, 2)])
+        histories.append(hist.tolist())
+
+    index = pack_docs(histories, n_items)
+    anchor = int(np.argmax(np.asarray(index.doc_freq)))
+
+    # retrieve: co-consumption BFS around the anchor item
+    pad = np.full((8,), -1, np.int32)
+    pad[0] = anchor
+    net = bfs_construct(index, jnp.asarray(pad), depth=2, topk=16, beam=16)
+    cand = sorted({int(d) for d, ok in zip(np.asarray(net.dst),
+                                           np.asarray(net.valid)) if ok}
+                  | {int(s) for s, ok in zip(np.asarray(net.src),
+                                             np.asarray(net.valid)) if ok}
+                  - {anchor})
+    print(f"anchor item {anchor} (cluster {item_cluster[anchor]}): "
+          f"{len(cand)} co-occurrence candidates")
+    same = np.mean([item_cluster[c] == item_cluster[anchor] for c in cand])
+    print(f"candidate purity (same cluster as anchor): {same:.2f}")
+    assert same > 0.5, "co-occurrence retrieval should surface the cluster"
+
+    # rank: SASRec scores the candidates against a user's history
+    cfg = replace(get_config("sasrec"), n_items=n_items, seq_len=16)
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    user_hist = histories[0][:16]
+    seq = np.zeros((1, 16), np.int32)
+    seq[0, -len(user_hist):] = user_hist
+    batch = {"seq": jnp.asarray(seq),
+             "candidates": jnp.asarray(np.asarray(cand, np.int32))}
+    scores = R.retrieval_fn(cfg, params, batch)
+    order = np.argsort(-np.asarray(scores[0]))
+    print("top-5 ranked candidates:", [cand[i] for i in order[:5]])
+    print("retrieve (paper's algorithm) -> rank (SASRec)  [ok]")
+
+
+if __name__ == "__main__":
+    main()

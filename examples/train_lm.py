@@ -1,0 +1,82 @@
+"""End-to-end LM training driver (deliverable (b) e2e example).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Trains a ~100M-param dense transformer (a llama3-family reduction with
+real depth/width, not the unit-test toy) for a few hundred steps on a
+Zipf synthetic stream, with the full production stack: sharded+atomic
+checkpointing every 50 steps, crash-resume, straggler watchdog, cosine
+LR schedule.  Re-running the script resumes from the latest checkpoint.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, replace
+from repro.data import lm_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import axis_rules
+from repro.models import transformer as T
+from repro.train import StragglerWatchdog, checkpoint, make_optimizer, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: 12L x 768, GQA 12/4 heads, vocab 32k
+    cfg = replace(
+        get_config("llama3-8b"), n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+        attn_q_chunk=0, fsdp=False, remat=True, microbatches=2,
+        learning_rate=3e-4, warmup_steps=20)
+    n_params = cfg.n_params()
+    print(f"model: {n_params/1e6:.0f}M params, {cfg.n_layers}L x {cfg.d_model}")
+
+    mesh = make_host_mesh()
+    opt = make_optimizer(cfg)
+    step_fn = make_train_step(cfg, lambda p, b: T.loss_fn(cfg, p, b), opt)
+
+    with axis_rules(mesh):
+        params = T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        opt_state = opt.init(params)
+        start = 0
+        if checkpoint.latest_step(args.ckpt_dir) is not None:
+            (params, opt_state), start = checkpoint.restore(
+                args.ckpt_dir, (params, opt_state))
+            print(f"resumed from checkpoint at step {start}")
+
+        jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+        dog = StragglerWatchdog()
+        losses = []
+        for s in range(start, args.steps):
+            dog.start_step(s)
+            b = {k: jnp.asarray(v) for k, v in
+                 lm_batch(cfg, args.batch, args.seq, s).items()}
+            params, opt_state, m = jstep(params, opt_state, b)
+            jax.block_until_ready(m["loss"])
+            dog.end_step()
+            losses.append(float(m["loss"]))
+            if s % 10 == 0 or s == args.steps - 1:
+                print(f"step {s:4d}  loss {losses[-1]:.4f}  "
+                      f"lr {float(m['lr']):.2e}")
+            if (s + 1) % 50 == 0:
+                checkpoint.save(args.ckpt_dir, s + 1, (params, opt_state),
+                                blocking=False)
+        checkpoint.save(args.ckpt_dir, args.steps, (params, opt_state))
+
+    first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-10:])
+    print(f"\nloss: {first:.3f} -> {last:.3f}  "
+          f"({'LEARNING' if last < first else 'no improvement?'})")
+    print(f"straggler stats: {dog.stats()}")
+
+
+if __name__ == "__main__":
+    main()

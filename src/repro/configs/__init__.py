@@ -1,0 +1,39 @@
+"""Arch registry: ``get_config(arch_id)`` / ``list_archs()``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    BaseConfig,
+    CoocConfig,
+    GNNConfig,
+    LMConfig,
+    RecSysConfig,
+    ShapeSpec,
+    replace,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "llama3-8b": "repro.configs.llama3_8b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "gin-tu": "repro.configs.gin_tu",
+    "deepfm": "repro.configs.deepfm",
+    "bert4rec": "repro.configs.bert4rec",
+    "sasrec": "repro.configs.sasrec",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "cooccur-csl": "repro.configs.cooccur_csl",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> BaseConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list_archs()}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG

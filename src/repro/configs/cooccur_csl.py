@@ -1,0 +1,16 @@
+"""cooccur-csl — the paper's own workload: co-occurrence network construction
+over a CSL-scale corpus (396,209 docs) with a 65,536-term lexicon.
+
+Shapes cover the traversal-style full build (X^T X), single BFS query,
+batched concurrent queries (web serving), and streaming ingest.
+"""
+from repro.configs.base import CoocConfig
+
+CONFIG = CoocConfig(
+    name="cooccur-csl",
+    vocab_size=65536,
+    n_docs=396209,
+    default_depth=3,
+    default_topk=16,
+    default_beam=32,
+)

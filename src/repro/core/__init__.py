@@ -1,0 +1,36 @@
+"""The paper's primary contribution: real-time co-occurrence network
+construction from an inverted index (bit-packed, sharded), with the
+traversal baseline and the BFS-optimised algorithm."""
+from repro.core.inverted_index import (  # noqa: F401
+    Lexicon,
+    PackedIndex,
+    and_term,
+    doc_freq_under,
+    doc_freq_under_batch,
+    empty_mask,
+    incidence_dense,
+    ingest,
+    mask_count,
+    pack_docs,
+    term_postings,
+)
+from repro.core.cooccurrence import (  # noqa: F401
+    HostIndex,
+    bfs_construct,
+    bfs_construct_batch,
+    bfs_construct_host,
+    bfs_construct_host_fast,
+    build_host_index,
+    recursive_construct_host,
+    traversal_construct_dense,
+    traversal_construct_host,
+)
+from repro.core.network import (  # noqa: F401
+    CoocNetwork,
+    edge_jaccard,
+    merge_duplicates,
+    nodes_of,
+    to_edge_dict,
+    to_edge_index,
+    top_edges,
+)

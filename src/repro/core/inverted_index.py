@@ -1,0 +1,229 @@
+"""Inverted index substrate, TPU-adapted.
+
+The paper's inverted index (term -> postings list) is realised as a
+**bit-packed incidence matrix** ``packed`` of shape ``(W, V)`` uint32 where
+``W = ceil(D / 32)``: bit ``d % 32`` of ``packed[d // 32, v]`` is set iff
+document ``d`` contains term ``v``.  Column ``v`` IS the postings list of
+term ``v`` (a compressed doc-id bitmap); a filter condition (AND of terms)
+is a bitwise AND of columns; document frequency under a filter is a
+popcount reduction.  This makes every index operation a dense VPU/MXU op
+and shards trivially: ``W`` (docs) over ("pod","data"), ``V`` over "model".
+
+A lexicon (term string <-> id, global df, total tf) lives host-side, as in
+any real retrieval system; the device never sees strings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PackedIndex(NamedTuple):
+    """Device-side inverted index (bit-packed doc-term incidence)."""
+
+    packed: jax.Array      # (W, V) uint32 postings bitmaps
+    doc_freq: jax.Array    # (V,) int32 — global document frequency per term
+    n_docs: jax.Array      # () int32 — logical number of ingested docs
+
+    @property
+    def n_words(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def vocab_size(self) -> int:
+        return self.packed.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Max docs this packed buffer can hold."""
+        return self.n_words * 32
+
+
+@dataclasses.dataclass
+class Lexicon:
+    """Host-side term dictionary (the paper's lexicon component)."""
+
+    term_to_id: Dict[str, int] = dataclasses.field(default_factory=dict)
+    id_to_term: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, term: str) -> int:
+        tid = self.term_to_id.get(term)
+        if tid is None:
+            tid = len(self.id_to_term)
+            self.term_to_id[term] = tid
+            self.id_to_term.append(term)
+        return tid
+
+    def __len__(self) -> int:
+        return len(self.id_to_term)
+
+    def lookup(self, term: str) -> int:
+        return self.term_to_id[term]
+
+
+# ---------------------------------------------------------------------------
+# Host-side construction (ingest path — the paper's "tokenisation decoupling")
+# ---------------------------------------------------------------------------
+
+
+def pack_docs(doc_terms: Sequence[Sequence[int]], vocab_size: int,
+              capacity: Optional[int] = None) -> PackedIndex:
+    """Build a PackedIndex from tokenised documents (lists of term ids).
+
+    This is the offline ingest path: tokenisation has already happened in
+    ``repro.data``; here we only pack term ids into postings bitmaps.
+    """
+    n_docs = len(doc_terms)
+    cap = capacity if capacity is not None else n_docs
+    cap = max(cap, n_docs)
+    n_words = (cap + 31) // 32
+    packed = np.zeros((n_words, vocab_size), dtype=np.uint32)
+    df = np.zeros((vocab_size,), dtype=np.int32)
+    for d, terms in enumerate(doc_terms):
+        uniq = np.unique(np.asarray(terms, dtype=np.int64))
+        uniq = uniq[(uniq >= 0) & (uniq < vocab_size)]
+        packed[d // 32, uniq] |= np.uint32(1) << np.uint32(d % 32)
+        df[uniq] += 1
+    return PackedIndex(jnp.asarray(packed), jnp.asarray(df), jnp.asarray(n_docs, jnp.int32))
+
+
+def incidence_dense(index: PackedIndex, dtype=jnp.float32) -> jax.Array:
+    """Unpack to the dense incidence matrix X (D, V). D = capacity."""
+    w = index.packed  # (W, V)
+    bits = (w[:, None, :] >> jnp.arange(32, dtype=jnp.uint32)[None, :, None]) & jnp.uint32(1)
+    x = bits.reshape(index.n_words * 32, index.vocab_size)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Device-side index algebra (all pure jnp; shard-map wrappers in cooccurrence)
+# ---------------------------------------------------------------------------
+
+
+def empty_mask(index: PackedIndex) -> jax.Array:
+    """All-docs bitmap (the unconstrained filter), masked to n_docs."""
+    return _valid_bitmap(index.n_words, index.n_docs)
+
+
+def _valid_bitmap(n_words: int, n_docs: jax.Array) -> jax.Array:
+    """Bitmap with bits [0, n_docs) set."""
+    word_idx = jnp.arange(n_words, dtype=jnp.int32)
+    base = n_docs - word_idx * 32
+    nbits = jnp.clip(base, 0, 32)
+    full = jnp.uint32(0xFFFFFFFF)
+    # (1 << nbits) - 1, careful with nbits == 32
+    m = jnp.where(nbits >= 32, full, (jnp.uint32(1) << nbits.astype(jnp.uint32)) - jnp.uint32(1))
+    return m
+
+
+def term_postings(index: PackedIndex, term_id: jax.Array) -> jax.Array:
+    """Postings bitmap of one term: column term_id of packed. (W,) uint32."""
+    return jax.lax.dynamic_index_in_dim(index.packed, term_id, axis=1, keepdims=False)
+
+
+def and_term(index: PackedIndex, mask: jax.Array, term_id: jax.Array) -> jax.Array:
+    """Add a term to the filter conditions (paper: 'add word to retrieval
+    conditions') = AND its postings into the filter bitmap."""
+    return mask & term_postings(index, term_id)
+
+
+def mask_count(mask: jax.Array) -> jax.Array:
+    """Number of documents matching a filter bitmap."""
+    return jnp.sum(jax.lax.population_count(mask).astype(jnp.int32))
+
+
+def doc_freq_under(index: PackedIndex, mask: jax.Array) -> jax.Array:
+    """Document frequency of every term within the filtered doc set.
+
+    f[v] = popcount(mask & postings[:, v]) summed over words — the paper's
+    'retrieve the words and their frequencies from the documents that meet
+    the filtering conditions', vectorised over the whole lexicon.
+    """
+    anded = index.packed & mask[:, None]
+    return jnp.sum(jax.lax.population_count(anded).astype(jnp.int32), axis=0)
+
+
+def doc_freq_under_batch(index: PackedIndex, masks: jax.Array) -> jax.Array:
+    """Batched variant: masks (B, W) -> counts (B, V).
+
+    This is the BFS frontier expansion (DESIGN.md §2): all frontier filters
+    evaluated against the whole index in one pass over ``packed``.
+    VPU formulation (AND + popcount); see ``doc_freq_under_batch_gemm``
+    for the MXU formulation (EXPERIMENTS.md §Perf A1).
+    """
+    anded = masks[:, :, None] & index.packed[None, :, :]
+    return jnp.sum(jax.lax.population_count(anded).astype(jnp.int32), axis=1)
+
+
+def unpack_bitmap(masks: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Filter bitmaps (B, W) uint32 -> dense 0/1 (B, W*32)."""
+    b, w = masks.shape
+    bits = (masks[:, :, None] >> jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+            ) & jnp.uint32(1)
+    return bits.reshape(b, w * 32).astype(dtype)
+
+
+def doc_freq_under_batch_gemm(masks: jax.Array, x_dense: jax.Array) -> jax.Array:
+    """MXU formulation of the frontier expansion (§Perf A1):
+
+        counts = unpack(masks) @ X        (B, D) x (D, V) -> (B, V)
+
+    0/1 bf16 operands with fp32 accumulation — exact for D < 2^24 (CSL:
+    396,209 OK).  ``x_dense`` is the incidence unpacked ONCE per query
+    batch (not per level) and sharded (docs, terms); the matmul contracts
+    the doc axis on the MXU instead of streaming packed words through the
+    VPU popcount, which removes the (B, W, V) intermediate entirely.
+    """
+    m = unpack_bitmap(masks, x_dense.dtype)
+    counts = jnp.einsum("bd,dv->bv", m, x_dense,
+                        preferred_element_type=jnp.float32)
+    return counts.astype(jnp.int32)
+
+
+def ingest(index: PackedIndex, new_doc_terms: jax.Array, new_doc_valid: jax.Array) -> PackedIndex:
+    """Real-time ingest: append a block of documents to the index.
+
+    new_doc_terms: (N, M) int32 term ids, padded with -1.
+    new_doc_valid: (N,) bool — which rows are real documents.
+
+    Purely functional scatter into the packed bitmap, starting at
+    ``index.n_docs``; the returned index answers queries immediately
+    (the paper's 'real-time' property).  Requires capacity headroom.
+    """
+    n_new, m = new_doc_terms.shape
+    v = index.vocab_size
+    doc_ids = index.n_docs + jnp.cumsum(new_doc_valid.astype(jnp.int32)) - 1  # (N,)
+    flat_terms = new_doc_terms.reshape(-1)
+    flat_docs = jnp.repeat(doc_ids, m)
+    valid = (flat_terms >= 0) & jnp.repeat(new_doc_valid, m)
+
+    # Dedupe (doc, term) pairs so each (doc, term) contributes one bit and
+    # one df count, regardless of within-doc term repetition.  Lexicographic
+    # sort on (valid, doc, term) — avoids int64 composite keys.
+    order = jnp.lexsort((jnp.clip(flat_terms, 0), flat_docs, ~valid))
+    d_s = flat_docs[order]
+    t_s = jnp.clip(flat_terms, 0)[order]
+    v_s = valid[order]
+    first = jnp.concatenate([
+        jnp.array([True]),
+        (d_s[1:] != d_s[:-1]) | (t_s[1:] != t_s[:-1]),
+    ]) & v_s
+    docs_s = d_s
+    terms_s = jnp.where(first, t_s, 0)
+    word_s = jnp.where(first, docs_s // 32, 0).astype(jnp.int32)
+    bit_s = (docs_s % 32).astype(jnp.uint32)
+    contrib = jnp.where(first, jnp.uint32(1) << bit_s, jnp.uint32(0))
+
+    # Bitwise-OR scatter.  JAX scatter has add/min/max/mul but no OR; after
+    # (doc, term) dedupe every (word, term, bit) triple is unique and — new
+    # docs being beyond index.n_docs — the target bits are all currently 0,
+    # so scatter-add on disjoint bits IS bitwise OR (no carries possible).
+    packed = index.packed.at[word_s, terms_s].add(contrib, mode="drop")
+
+    df = index.doc_freq.at[terms_s].add(jnp.where(first, 1, 0), mode="drop")
+    n_docs = index.n_docs + jnp.sum(new_doc_valid.astype(jnp.int32))
+    return PackedIndex(packed, df, n_docs)

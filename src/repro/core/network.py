@@ -1,0 +1,117 @@
+"""CoocNetwork — fixed-shape node/edge records of a co-occurrence network.
+
+All device-side representations are fixed-shape (padded + validity mask) so
+the whole pipeline stays jit/pjit friendly.  Host-side helpers convert to
+python/dict/COO forms for analysis, visualisation, and feeding the GNN
+examples.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CoocNetwork(NamedTuple):
+    src: jax.Array     # (N,) int32
+    dst: jax.Array     # (N,) int32
+    weight: jax.Array  # (N,) int32 (0 for invalid slots)
+    valid: jax.Array   # (N,) bool
+
+    @property
+    def max_edges(self) -> int:
+        return self.src.shape[0]
+
+    def num_edges(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+def canonical_pairs(net: CoocNetwork) -> Tuple[jax.Array, jax.Array]:
+    """Undirected canonical (min, max) pairs; invalid slots -> (-1, -1)."""
+    a = jnp.minimum(net.src, net.dst)
+    b = jnp.maximum(net.src, net.dst)
+    a = jnp.where(net.valid, a, -1)
+    b = jnp.where(net.valid, b, -1)
+    return a, b
+
+
+def merge_duplicates(net: CoocNetwork, vocab_size: int) -> CoocNetwork:
+    """Merge duplicate undirected edges (weight = max over duplicates).
+
+    Device-side: sort by canonical pair key, segment-reduce, keep firsts.
+    """
+    a, b = canonical_pairs(net)
+    order = jnp.lexsort((b, a, ~net.valid))
+    a_s, b_s, v_s = a[order], b[order], net.valid[order]
+    sw = net.weight[order]
+    first = jnp.concatenate([
+        jnp.array([True]),
+        (a_s[1:] != a_s[:-1]) | (b_s[1:] != b_s[:-1]),
+    ]) & v_s
+    # max weight per undirected-edge segment
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    nseg = net.max_edges
+    wmax = jax.ops.segment_max(jnp.where(v_s, sw, 0),
+                               jnp.where(v_s, seg, nseg - 1), num_segments=nseg)
+    return CoocNetwork(
+        src=jnp.where(first, a[order], -1),
+        dst=jnp.where(first, b[order], -1),
+        weight=jnp.where(first, wmax[seg], 0),
+        valid=first,
+    )
+
+
+def top_edges(net: CoocNetwork, limit: int) -> CoocNetwork:
+    """The paper's visualisation 'limit': keep the `limit` heaviest edges."""
+    w = jnp.where(net.valid, net.weight, -1)
+    _, idx = jax.lax.top_k(w, min(limit, net.max_edges))
+    return CoocNetwork(net.src[idx], net.dst[idx], net.weight[idx], net.valid[idx])
+
+
+def to_edge_dict(net: CoocNetwork) -> Dict[Tuple[int, int], int]:
+    """Host dict {(min, max): weight} (dedup keeps max weight)."""
+    src = np.asarray(net.src)
+    dst = np.asarray(net.dst)
+    w = np.asarray(net.weight)
+    v = np.asarray(net.valid)
+    out: Dict[Tuple[int, int], int] = {}
+    for s, d, wt, ok in zip(src, dst, w, v):
+        if not ok:
+            continue
+        k = (int(min(s, d)), int(max(s, d)))
+        out[k] = max(out.get(k, 0), int(wt))
+    return out
+
+
+def edge_jaccard(n1: CoocNetwork, n2: CoocNetwork) -> float:
+    """Jaccard similarity of undirected edge sets (depth-insensitivity metric,
+    paper §3.2 / Fig. 5)."""
+    e1 = set(to_edge_dict(n1))
+    e2 = set(to_edge_dict(n2))
+    if not e1 and not e2:
+        return 1.0
+    return len(e1 & e2) / max(1, len(e1 | e2))
+
+
+def to_edge_index(net: CoocNetwork) -> Tuple[np.ndarray, np.ndarray]:
+    """(2, E) int32 undirected edge index + (E,) weights — GNN-consumable."""
+    d = to_edge_dict(net)
+    if not d:
+        return np.zeros((2, 0), np.int32), np.zeros((0,), np.int32)
+    pairs = np.array(sorted(d), dtype=np.int32).T
+    w = np.array([d[tuple(p)] for p in pairs.T], dtype=np.int32)
+    # symmetrise
+    ei = np.concatenate([pairs, pairs[::-1]], axis=1)
+    ew = np.concatenate([w, w])
+    return ei, ew
+
+
+def nodes_of(net: CoocNetwork) -> List[int]:
+    d = to_edge_dict(net)
+    ns = set()
+    for a, b in d:
+        ns.add(a)
+        ns.add(b)
+    return sorted(ns)

@@ -1,0 +1,6 @@
+"""Data substrate: synthetic CSL-like corpus, tokenisation (decoupled from
+construction per the paper), batch pipelines, GNN neighbour sampler."""
+from repro.data.corpus import CorpusStats, corpus_stats, synthetic_csl  # noqa: F401
+from repro.data.pipeline import gnn_synthetic_graph, lm_batch, recsys_batch  # noqa: F401
+from repro.data.sampler import build_csr, sample_subgraph, subgraph_sizes  # noqa: F401
+from repro.data.tokenizer import DEFAULT_STOPWORDS, build_lexicon, tokenize  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  cooccur         — co-occurrence GEMM  C = X^T X (MXU; traversal baseline)
+  postings        — bit-packed AND + popcount doc-frequency (VPU; the
+                    optimized algorithm's streaming hot loop)
+  flash_decode    — chunked decode attention, running logsumexp (LM serving)
+  dot_interaction — DLRM pairwise-dot feature interaction (recsys)
+
+Use via ``repro.kernels.ops`` (jit'd wrappers, padding, backend selection);
+``repro.kernels.ref`` holds the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

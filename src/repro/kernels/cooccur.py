@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: co-occurrence GEMM  C = X_l^T @ X_r.
+
+The TPU-adapted traversal baseline (DESIGN.md §2): the full co-occurrence
+matrix is one big GEMM over the 0/1 incidence, exact under fp32
+accumulation for D < 2^24.  Also used for frontier-row extraction
+(x_l = X * mask — a skinny GEMM).
+
+Tiling: grid (Vl/bm, Vr/bn, D/bk); K (docs) is the innermost, sequential
+grid dimension, accumulating into the output block which stays resident in
+VMEM across the K loop (revisited-output accumulation — the canonical
+Pallas matmul schedule).  MXU-aligned default tiles 128x128x512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cooccur_kernel(xl_ref, xr_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xl = xl_ref[...]  # (bk, bm)
+    xr = xr_ref[...]  # (bk, bn)
+    out_ref[...] += jax.lax.dot_general(
+        xl, xr, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def cooccur_gemm_pallas(x_l: jax.Array, x_r: jax.Array, *, bm: int = 128,
+                        bn: int = 128, bk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """C = x_l^T @ x_r.  x_l (D, Vl), x_r (D, Vr) -> (Vl, Vr) fp32.
+
+    Requires D % bk == Vl % bm == Vr % bn == 0 (ops.py pads otherwise).
+    VMEM footprint per step: bk*(bm+bn)*2B + bm*bn*4B  (512,128,128 ->
+    0.25 MB + 64 KB — deep in-budget; bk is sized to amortise the output
+    revisit).
+    """
+    d, vl = x_l.shape
+    d2, vr = x_r.shape
+    assert d == d2, (d, d2)
+    assert d % bk == 0 and vl % bm == 0 and vr % bn == 0, (d, vl, vr, bm, bn, bk)
+    grid = (vl // bm, vr // bn, d // bk)
+    return pl.pallas_call(
+        _cooccur_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((vl, vr), jnp.float32),
+        interpret=interpret,
+    )(x_l, x_r)

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: DLRM dot-interaction.
+
+x (B, F, E) field embeddings -> per-sample Gram matrix (MXU) -> gather the
+strict lower triangle -> (B, F*(F-1)/2).  Fusing the gather into the GEMM
+epilogue avoids materialising the (B, F, F) Gram tensor in HBM — at DLRM
+shapes (F=27) the triangle is 351 of 729 entries, a 2x write saving plus
+the removed round-trip.
+
+Grid over batch tiles; F and E stay whole per tile (F<=64, E<=128 for the
+assigned configs — comfortably VMEM-resident).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _dot_interaction_kernel(x_ref, idx_ref, out_ref, *, f: int):
+    x = x_ref[...].astype(jnp.float32)             # (bb, F, E)
+    gram = jax.lax.dot_general(
+        x, x, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)        # (bb, F, F)
+    flat = gram.reshape(x.shape[0], f * f)
+    idx = idx_ref[...]                             # (P,) gather indices
+    out_ref[...] = jnp.take(flat, idx, axis=1).astype(out_ref.dtype)
+
+
+def dot_interaction_pallas(x: jax.Array, *, bb: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """x (B, F, E) -> (B, F*(F-1)//2).  Requires B % bb == 0 (ops.py pads)."""
+    b, f, e = x.shape
+    assert b % bb == 0, (b, bb)
+    ii, jj = np.tril_indices(f, k=-1)
+    tril_flat = jnp.asarray((ii * f + jj).astype(np.int32))
+    p = tril_flat.shape[0]
+    kernel = functools.partial(_dot_interaction_kernel, f=f)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, f, e), lambda i: (i, 0, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p), x.dtype),
+        interpret=interpret,
+    )(x, tril_flat)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: flash-decode attention (one query token, long KV).
+
+Decode against a long KV cache is linear in cache length; this kernel
+streams the cache in chunks with a running-max logsumexp (FlashAttention
+semantics) so VMEM holds only one (chunk, d) tile of K and V per step.
+GQA-native: the q-head group of each KV head is the row dimension of the
+MXU matmul, so grouped heads amortise each KV byte (arithmetic intensity
+= 2*g FLOPs/byte).
+
+Layout: q (B, Hkv, G, d); k, v (B, S, Hkv, d); out (B, Hkv, G, d).
+Grid (B, Hkv, S/chunk) — chunk innermost, running stats in VMEM scratch.
+``length`` masks the valid cache prefix (ragged decode batches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                         m_ref, l_ref, acc_ref, *, chunk: int, d: int):
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (chunk, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (chunk, d)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))     # (G, chunk)
+
+    length = len_ref[b]
+    pos = s_idx * chunk + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < length, scores, _NEG_INF)
+
+    m_prev = m_ref[...]                            # (G, 1)
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                # (G, 1)
+    p = jnp.exp(scores - m_new)                    # (G, chunk)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(s_idx == n_chunks - 1)
+    def _finalize():
+        out_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        length: jax.Array, *, chunk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q (B, Hkv, G, d); k, v (B, S, Hkv, d); length (B,) int32.
+
+    Returns (B, Hkv, G, d) in q.dtype.  Requires S % chunk == 0.
+    VMEM per step: chunk*d*2*(kv) + G*d*4*2 + G*chunk*4 — with
+    (chunk=512, d=128, G=8): 256 KB + small.
+    """
+    b, hkv, g, d = q.shape
+    s = k.shape[1]
+    assert k.shape == (b, s, hkv, d) and v.shape == k.shape
+    assert s % chunk == 0, (s, chunk)
+    grid = (b, hkv, s // chunk)
+    kernel = functools.partial(_flash_decode_kernel, chunk=chunk, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), lambda b, h, s, len_ref: (b, h, 0, 0)),
+                pl.BlockSpec((1, chunk, 1, d), lambda b, h, s, len_ref: (b, s, h, 0)),
+                pl.BlockSpec((1, chunk, 1, d), lambda b, h, s, len_ref: (b, s, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, s, len_ref: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(length.astype(jnp.int32), q, k, v)

@@ -1,0 +1,182 @@
+"""Public kernel API: jit'd wrappers with padding + backend selection.
+
+``backend``:
+  * "pallas"     — compiled Pallas (the TPU target)
+  * "interpret"  — Pallas interpret mode (CPU correctness validation)
+  * "xla"        — the pure-jnp oracle from ref.py (CPU-fast fallback)
+  * None         — pick: pallas on TPU, xla elsewhere.
+
+All wrappers pad to the kernels' tile multiples and slice the result back,
+so callers never see shape constraints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cooccur import cooccur_gemm_pallas
+from repro.kernels.dot_interaction import dot_interaction_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.postings import postings_counts_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: Optional[str]) -> str:
+    if backend is not None:
+        return backend
+    return "pallas" if _on_tpu() else "xla"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# -- co-occurrence GEMM ------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend", "bm", "bn", "bk"))
+def cooccur_gemm(x_l: jax.Array, x_r: jax.Array, *, backend: Optional[str] = None,
+                 bm: int = 128, bn: int = 128, bk: int = 512) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.cooccur_gemm_ref(x_l, x_r)
+    vl, vr = x_l.shape[1], x_r.shape[1]
+    xl = _pad_to(_pad_to(x_l, 1, bm), 0, bk)
+    xr = _pad_to(_pad_to(x_r, 1, bn), 0, bk)
+    out = cooccur_gemm_pallas(xl, xr, bm=bm, bn=bn, bk=bk,
+                              interpret=(b == "interpret"))
+    return out[:vl, :vr]
+
+
+# -- postings popcount -------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend", "bb", "bv", "bw"))
+def postings_counts(masks: jax.Array, packed: jax.Array, *,
+                    backend: Optional[str] = None, bb: int = 8, bv: int = 512,
+                    bw: int = 256) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.postings_counts_ref(masks, packed)
+    nb, v = masks.shape[0], packed.shape[1]
+    m = _pad_to(_pad_to(masks, 0, bb), 1, bw)
+    p = _pad_to(_pad_to(packed, 0, bw), 1, bv)
+    out = postings_counts_pallas(m, p, bb=bb, bv=bv, bw=bw,
+                                 interpret=(b == "interpret"))
+    return out[:nb, :v]
+
+
+# -- flash decode attention --------------------------------------------------
+
+
+def flash_decode_xla(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """Optimised XLA decode attention (EXPERIMENTS.md §Perf B1): K/V feed
+    the dots in their storage dtype with fp32 accumulation — no
+    materialised fp32 cast of the (huge) KV cache, unlike the oracle."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(s)
+    ln = jnp.broadcast_to(jnp.asarray(length), (b,))
+    scores = jnp.where((pos[None, :] < ln[:, None])[:, None, None, :],
+                       scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def decode_attn(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                length: jax.Array, k_cur: jax.Array, v_cur: jax.Array
+                ) -> jax.Array:
+    """Decode attention over (cache prefix + current token) WITHOUT writing
+    the cache first (EXPERIMENTS.md §Perf B2).
+
+    The naive decode flow (write entry -> attend over cache) forces a full
+    cache copy per layer under functional updates (read+write of the whole
+    (B,S,H,d) buffer), which dominated the decode memory roofline term
+    (measured ~32x the cache size per step for a 32-layer model).  Here the
+    current token's scores are merged analytically — only the (tiny) score
+    tensors concatenate — and the cache is written ONCE per step by the
+    caller (single donated scatter).
+
+    q (B, Hq, d); k_cache/v_cache (B, S, Hkv, dk/dv); length (B,) = #valid
+    cache entries (the current token is IN ADDITION to these);
+    k_cur/v_cur (B, Hkv, dk/dv).  Returns (B, Hq, dv).
+    """
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s1 = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    ln = jnp.broadcast_to(jnp.asarray(length), (b,))
+    s1 = jnp.where((pos[None, :] < ln[:, None])[:, None, None, :], s1, -1e30)
+    s2 = jnp.einsum("bhgd,bhd->bhg", qg, k_cur,
+                    preferred_element_type=jnp.float32) * scale   # (B,H,G)
+    # §Perf B3: merge via explicit max/sum-exp arithmetic rather than
+    # concatenating on the (sequence-sharded) score axis — a concat of a
+    # sharded 32k dim with a length-1 tensor forces SPMD to rematerialise
+    # the cache (measured: +35 GB of all-gathers per step).
+    m = jnp.maximum(jnp.max(s1, axis=-1), s2)                     # (B,H,G)
+    e1 = jnp.exp(s1 - m[..., None])
+    e2 = jnp.exp(s2 - m)
+    denom = jnp.sum(e1, axis=-1) + e2                             # (B,H,G)
+    o1 = jnp.einsum("bhgs,bshd->bhgd", e1.astype(v_cache.dtype), v_cache,
+                    preferred_element_type=jnp.float32)
+    out = (o1 + e2[..., None] * v_cur.astype(jnp.float32)[:, :, None, :]
+           ) / denom[..., None]
+    return out.reshape(b, hq, dv).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "chunk"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, length: jax.Array,
+                 *, backend: Optional[str] = None, chunk: int = 512) -> jax.Array:
+    """q (B, Hq, d); k, v (B, S, Hkv, d); length (B,) -> (B, Hq, d)."""
+    b = _resolve(backend)
+    if b == "xla":
+        return flash_decode_xla(q, k, v, length)
+    bsz, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(bsz, hkv, g, d)
+    ck = min(chunk, s)
+    kp = _pad_to(k, 1, ck)
+    vp = _pad_to(v, 1, ck)
+    ln = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (bsz,))
+    out = flash_decode_pallas(qg, kp, vp, ln, chunk=ck,
+                              interpret=(b == "interpret"))
+    return out.reshape(bsz, hq, d)
+
+
+# -- DLRM dot interaction ----------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend", "bb"))
+def dot_interaction(x: jax.Array, *, backend: Optional[str] = None,
+                    bb: int = 128) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.dot_interaction_ref(x)
+    nb = x.shape[0]
+    xp = _pad_to(x, 0, bb)
+    out = dot_interaction_pallas(xp, bb=bb, interpret=(b == "interpret"))
+    return out[:nb]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the mathematical definition, written for clarity not
+speed.  Kernel tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cooccur_gemm_ref(x_l: jax.Array, x_r: jax.Array) -> jax.Array:
+    """C = x_l^T @ x_r with fp32 accumulation.  x_l (D, Vl), x_r (D, Vr)."""
+    return jnp.einsum("dv,dw->vw", x_l.astype(jnp.float32), x_r.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def postings_counts_ref(masks: jax.Array, packed: jax.Array) -> jax.Array:
+    """counts[b, v] = sum_w popcount(masks[b, w] & packed[w, v]).
+
+    masks (B, W) uint32, packed (W, V) uint32 -> (B, V) int32.
+    """
+    anded = masks[:, :, None] & packed[None, :, :]
+    return jnp.sum(jax.lax.population_count(anded).astype(jnp.int32), axis=1)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """Decode attention with GQA, exact softmax oracle.
+
+    q (B, Hq, d); k, v (B, S, Hkv, d); length () or (B,) — valid KV prefix.
+    Returns (B, Hq, d) in q.dtype, computed in fp32.
+    """
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(s)
+    ln = jnp.broadcast_to(jnp.asarray(length), (b,))
+    mask = pos[None, :] < ln[:, None]            # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def dot_interaction_ref(x: jax.Array) -> jax.Array:
+    """DLRM dot interaction: x (B, F, E) -> (B, F*(F-1)//2) lower-tri pairs,
+    fp32 accumulation, row-major (i > j) order."""
+    b, f, e = x.shape
+    xf = x.astype(jnp.float32)
+    gram = jnp.einsum("bfe,bge->bfg", xf, xf)
+    ii, jj = jnp.tril_indices(f, k=-1)
+    return gram[:, ii, jj].astype(x.dtype)

@@ -1,0 +1,7 @@
+"""Launch layer: production mesh, logical-axis sharding rules, dry-run
+cells (arch x shape), the dry-run driver, and the train/serve drivers.
+
+``launch.dryrun`` must be run as a module (``python -m repro.launch.dryrun``)
+— it sets XLA_FLAGS before importing jax to create 512 placeholder host
+devices.  Nothing in this package touches jax device state at import time.
+"""

@@ -1,0 +1,493 @@
+"""Dry-run cells: one per (architecture x input shape).
+
+A *cell* is everything needed to ``jax.jit(...).lower(...).compile()`` one
+step of one architecture at one input shape on the production mesh:
+
+  * the step function (train_step / prefill_step / serve_step / ...),
+  * ShapeDtypeStruct stand-ins for every input (no device allocation),
+  * in/out shardings resolved from the logical-axis rule table,
+  * donation hints,
+  * MODEL_FLOPS (the "useful compute" term for the roofline ratio).
+
+``plan_cell(arch, shape_name)`` must be called inside an active
+``sharding.axis_rules(mesh)`` context — that is where logical axes bind
+to physical mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import (
+    BaseConfig,
+    CoocConfig,
+    GNNConfig,
+    LMConfig,
+    RecSysConfig,
+    ShapeSpec,
+)
+from repro.core import bfs_construct, bfs_construct_batch, ingest, traversal_construct_dense
+from repro.core.inverted_index import PackedIndex, incidence_dense
+from repro.data.sampler import subgraph_sizes
+from repro.launch.sharding import constrain, named_sharding, sharding_tree
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_train_step
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]            # pytrees of ShapeDtypeStruct
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model_flops: float               # 6ND-style useful-FLOPs estimate (global)
+    model_bytes: float = 0.0         # mandatory bytes for memory-bound work (global)
+    note: str = ""
+
+
+def _tree_bytes(tree) -> float:
+    return float(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                     for l in jax.tree.leaves(tree)))
+
+
+def _logical_shardings(logical_tree, shape_tree):
+    return sharding_tree(logical_tree, shape_tree)
+
+
+def _batch_logical(batch_shapes: Dict) -> Dict:
+    """Default: every batch leaf shards its leading dim over "batch"."""
+    return jax.tree.map(
+        lambda s: ("batch",) + (None,) * (len(s.shape) - 1), batch_shapes)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_train_cell(arch: str, cfg: LMConfig, spec: ShapeSpec) -> CellPlan:
+    from repro.configs import replace
+    from repro.launch.flags import unroll_scans
+    if unroll_scans() and cfg.microbatches > 1:
+        # grad accumulation multiplies unrolled-HLO size by n with identical
+        # FLOP/byte totals (same tokens, same math); activation-memory
+        # effects are measured by the scan-mode sweep, which keeps it.
+        cfg = replace(cfg, microbatches=1)
+    b, s = spec["global_batch"], spec["seq_len"]
+    opt = make_optimizer(cfg)
+    step = make_train_step(cfg, lambda p, bt: T.loss_fn(cfg, p, bt), opt)
+
+    params_s = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    opt_s = jax.eval_shape(opt.init, params_s)
+    batch_s = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+        "mask": sds((b, s), jnp.float32),
+    }
+    pspec = T.param_specs(cfg)
+    psh = _logical_shardings(pspec, params_s)
+    osh = _logical_shardings(opt.state_specs(pspec), opt_s)
+    bsh = _logical_shardings(_batch_logical(batch_s), batch_s)
+
+    flops = 6.0 * cfg.n_active_params() * (b * s)
+    # attention quadratic term (causal halves the score matmuls)
+    h_eff = cfg.n_heads * (cfg.head_dim if not cfg.mla
+                           else (cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim) / 2)
+    flops += 3 * 2.0 * cfg.n_layers * b * s * s * h_eff  # fwd+bwd(2x), /2 causal
+
+    return CellPlan(arch, spec.name, spec.kind, step,
+                    (params_s, opt_s, batch_s), (psh, osh, bsh),
+                    (psh, osh, None), (0, 1), flops)
+
+
+def _lm_prefill_cell(arch: str, cfg: LMConfig, spec: ShapeSpec) -> CellPlan:
+    b, s = spec["global_batch"], spec["seq_len"]
+    fn = functools.partial(T.prefill, cfg)
+    params_s = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    tokens_s = sds((b, s), jnp.int32)
+    psh = _logical_shardings(T.param_specs(cfg), params_s)
+    tsh = _logical_shardings(("batch", None), tokens_s)
+
+    out_s = jax.eval_shape(fn, params_s, tokens_s)
+    cache_l = T.cache_specs(cfg, long_context=False)
+    out_l = (tuple([None, "vocab"]), cache_l)  # logits (B,Vp), cache tree
+    osh = _logical_shardings(out_l, out_s)
+
+    flops = 2.0 * cfg.n_active_params() * (b * s)
+    h_eff = cfg.n_heads * (cfg.head_dim if not cfg.mla
+                           else (cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim) / 2)
+    flops += 2.0 * cfg.n_layers * b * s * s * h_eff
+    return CellPlan(arch, spec.name, spec.kind, fn, (params_s, tokens_s),
+                    (psh, tsh), osh, (), flops)
+
+
+def _lm_decode_cell(arch: str, cfg: LMConfig, spec: ShapeSpec) -> CellPlan:
+    import os
+    b, s = spec["global_batch"], spec["seq_len"]
+    long_ctx = s >= 262144
+    fn = functools.partial(T.decode_step, cfg)
+    params_s = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    # bf16 is the production KV dtype; REPRO_CACHE_DTYPE=float32 exists as a
+    # §Perf sensitivity probe (XLA-CPU upcasts bf16 dot operands — free on
+    # TPU — which pollutes the measured memory term; see EXPERIMENTS.md B4)
+    cache_dt = jnp.dtype(os.environ.get("REPRO_CACHE_DTYPE", "bfloat16"))
+    # §Perf B5: FSDP is a TRAINING memory optimisation; at decode it
+    # re-all-gathers every parameter every step (measured 1.8 GB/step/dev).
+    # Serving keeps params TP-sharded on "model" and replicated over "data".
+    if os.environ.get("REPRO_DECODE_FSDP", "0") != "1":
+        from repro.configs import replace
+        cfg = replace(cfg, fsdp=False)
+    cache_s = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, s, cache_dt))
+    token_s = sds((b,), jnp.int32)
+    psh = _logical_shardings(T.param_specs(cfg), params_s)
+    csh = _logical_shardings(T.cache_specs(cfg, long_context=long_ctx), cache_s)
+    tsh = _logical_shardings(("batch",), token_s)
+
+    out_s = jax.eval_shape(fn, params_s, cache_s, token_s)
+    osh = _logical_shardings(((None, "vocab"), T.cache_specs(cfg, long_context=long_ctx)),
+                             out_s)
+
+    hkv, cw = T.kv_cache_dims(cfg)
+    flops = 2.0 * cfg.n_active_params() * b
+    flops += 2.0 * 2.0 * cfg.n_layers * b * cfg.n_heads * s * (cw / 2)  # attn vs cache
+    # decode is memory-bound: one pass over active params + the KV cache
+    mbytes = 2.0 * cfg.n_active_params() + _tree_bytes(cache_s["kv"])
+    return CellPlan(arch, spec.name, spec.kind, fn,
+                    (params_s, cache_s, token_s), (psh, csh, tsh), osh,
+                    (1,), flops, mbytes,
+                    note="long-context decode: KV seq-sharded" if long_ctx else "")
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_shapes(cfg: RecSysConfig, batch: int, train: bool) -> Dict:
+    if cfg.interaction in ("fm", "dot"):
+        out = {"sparse_ids": sds((batch, cfg.n_sparse), jnp.int32)}
+        if cfg.n_dense:
+            out["dense"] = sds((batch, cfg.n_dense), jnp.float32)
+        if train:
+            out["labels"] = sds((batch,), jnp.int32)
+        return out
+    s = cfg.seq_len
+    if train:
+        return {"seq": sds((batch, s), jnp.int32), "pos": sds((batch, s), jnp.int32),
+                "neg": sds((batch, s), jnp.int32), "mask": sds((batch, s), jnp.float32)}
+    return {"seq": sds((batch, s), jnp.int32),
+            "candidates": sds((batch, 100), jnp.int32)}
+
+
+def _recsys_model_flops(cfg: RecSysConfig, batch: int, train: bool) -> float:
+    mult = 3.0 if train else 1.0
+    e = cfg.embed_dim
+    if cfg.interaction == "fm":
+        f = cfg.n_sparse
+        mlp = 0
+        dims = (f * e,) + tuple(cfg.mlp) + (1,)
+        for i in range(len(dims) - 1):
+            mlp += 2 * dims[i] * dims[i + 1]
+        return mult * batch * (mlp + 4 * f * e)
+    if cfg.interaction == "dot":
+        f = cfg.n_sparse + 1
+        mlp = 0
+        bdims = (cfg.n_dense,) + tuple(cfg.bot_mlp)
+        tdims = (e + f * (f - 1) // 2,) + tuple(cfg.top_mlp)
+        for dims in (bdims, tdims):
+            for i in range(len(dims) - 1):
+                mlp += 2 * dims[i] * dims[i + 1]
+        return mult * batch * (mlp + 2 * f * f * e)
+    # sequential: n_blocks transformer blocks over seq_len
+    s = cfg.seq_len
+    per_tok = cfg.n_blocks * (2 * 4 * e * e + 2 * 2 * e * 4 * e)
+    attn = cfg.n_blocks * 2 * 2 * s * s * e
+    return mult * batch * (s * per_tok) + mult * batch * attn
+
+
+def _recsys_cell(arch: str, cfg: RecSysConfig, spec: ShapeSpec) -> CellPlan:
+    params_s = jax.eval_shape(lambda: R.init_params(cfg, jax.random.PRNGKey(0)))
+    pspec = R.param_specs(cfg, params_s)
+    psh = _logical_shardings(pspec, params_s)
+
+    if spec.kind == "train":
+        b = spec["batch"]
+        opt = make_optimizer(cfg)
+        step = make_train_step(cfg, lambda p, bt: R.loss_fn(cfg, p, bt), opt)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        osh = _logical_shardings(opt.state_specs(pspec), opt_s)
+        batch_s = _recsys_batch_shapes(cfg, b, train=True)
+        bsh = _logical_shardings(_batch_logical(batch_s), batch_s)
+        flops = _recsys_model_flops(cfg, b, train=True)
+        # embedding gather+scatter traffic dominates: fwd gather + bwd
+        # grad write + optimizer touch of the touched rows
+        e = cfg.embed_dim
+        bag = cfg.n_sparse if cfg.interaction in ("fm", "dot") else 3 * cfg.seq_len
+        mbytes = 3.0 * b * bag * e * 4
+        return CellPlan(arch, spec.name, spec.kind, step,
+                        (params_s, opt_s, batch_s), (psh, osh, bsh),
+                        (psh, osh, None), (0, 1), flops, mbytes)
+
+    if spec.kind == "serve":
+        b = spec["batch"]
+        fn = functools.partial(R.serve_fn, cfg)
+        batch_s = _recsys_batch_shapes(cfg, b, train=False)
+        bsh = _logical_shardings(_batch_logical(batch_s), batch_s)
+        flops = _recsys_model_flops(cfg, b, train=False)
+        e = cfg.embed_dim
+        bag = cfg.n_sparse if cfg.interaction in ("fm", "dot") else cfg.seq_len
+        mbytes = 1.0 * b * bag * e * 4
+        return CellPlan(arch, spec.name, spec.kind, fn, (params_s, batch_s),
+                        (psh, bsh), None, (), flops, mbytes)
+
+    # retrieval: one query scored against n_candidates
+    c = spec["n_candidates"]
+    fn = functools.partial(R.retrieval_fn, cfg)
+    if cfg.interaction in ("fm", "dot"):
+        batch_s = _recsys_batch_shapes(cfg, c, train=False)
+        cand_l = jax.tree.map(
+            lambda s_: ("cand",) + (None,) * (len(s_.shape) - 1), batch_s)
+        bsh = _logical_shardings(cand_l, batch_s)
+        flops = _recsys_model_flops(cfg, c, train=False)
+    else:
+        batch_s = {"seq": sds((1, cfg.seq_len), jnp.int32),
+                   "candidates": sds((c,), jnp.int32)}
+        bsh = _logical_shardings({"seq": (None, None), "candidates": ("cand",)},
+                                 batch_s)
+        flops = (_recsys_model_flops(cfg, 1, train=False)
+                 + 2.0 * c * cfg.embed_dim)
+    bag = cfg.n_sparse if cfg.interaction in ("fm", "dot") else 1
+    mbytes = 1.0 * c * bag * cfg.embed_dim * 4
+    return CellPlan(arch, spec.name, spec.kind, fn, (params_s, batch_s),
+                    (psh, bsh), None, (), flops, mbytes)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_batch_shapes(spec: ShapeSpec) -> Tuple[Dict, str, int]:
+    """Returns (batch shapes, loss kind, n_edges_effective)."""
+    d = spec.dims
+    if spec.name == "minibatch_lg":
+        n_max, e_max = subgraph_sizes(d["batch_nodes"], (d["fanout0"], d["fanout1"]))
+        shapes = {
+            "x": sds((n_max, d["d_feat"]), jnp.float32),
+            "edge_src": sds((e_max,), jnp.int32),
+            "edge_dst": sds((e_max,), jnp.int32),
+            "edge_mask": sds((e_max,), jnp.float32),
+            "labels": sds((n_max,), jnp.int32),
+            "label_mask": sds((n_max,), jnp.float32),
+        }
+        return shapes, "node", e_max
+    if spec.name == "molecule":
+        n = d["batch"] * d["n_nodes"]
+        e = d["batch"] * d["n_edges"]
+        shapes = {
+            "x": sds((n, d["d_feat"]), jnp.float32),
+            "edge_src": sds((e,), jnp.int32),
+            "edge_dst": sds((e,), jnp.int32),
+            "graph_id": sds((n,), jnp.int32),
+            "labels": sds((d["batch"],), jnp.int32),
+        }
+        return shapes, "graph", e
+    shapes = {
+        "x": sds((d["n_nodes"], d["d_feat"]), jnp.float32),
+        "edge_src": sds((d["n_edges"],), jnp.int32),
+        "edge_dst": sds((d["n_edges"],), jnp.int32),
+        "labels": sds((d["n_nodes"],), jnp.int32),
+        "label_mask": sds((d["n_nodes"],), jnp.float32),
+    }
+    return shapes, "node", d["n_edges"]
+
+
+def _gnn_cell(arch: str, cfg: GNNConfig, spec: ShapeSpec) -> CellPlan:
+    batch_s, loss_kind, n_edges = _gnn_batch_shapes(spec)
+    d_feat = batch_s["x"].shape[1]
+    n_classes = spec.dims["n_classes"]
+    n_nodes = batch_s["x"].shape[0]
+
+    params_s = jax.eval_shape(
+        lambda: G.init_gin(cfg, jax.random.PRNGKey(0), d_feat, n_classes))
+    pspec = G.param_specs(cfg, params_s)
+    psh = _logical_shardings(pspec, params_s)
+
+    loss = G.node_loss if loss_kind == "node" else G.graph_loss
+    opt = make_optimizer(cfg)
+    step = make_train_step(cfg, lambda p, bt: loss(cfg, p, bt), opt)
+    opt_s = jax.eval_shape(opt.init, params_s)
+    osh = _logical_shardings(opt.state_specs(pspec), opt_s)
+
+    # edges shard over (pod, data); node tensors replicated
+    def leaf_logical(k, s_):
+        if k.startswith("edge"):
+            return ("edges",)
+        return tuple([None] * len(s_.shape))
+
+    bl = {k: leaf_logical(k, v) for k, v in batch_s.items()}
+    bsh = _logical_shardings(bl, batch_s)
+
+    d_h = cfg.d_hidden
+    flops = 3.0 * (2.0 * n_edges * d_h * cfg.n_layers          # gather+scatter adds
+                   + n_nodes * cfg.n_layers * 2 * (d_feat * d_h + d_h * d_h))
+    # message gather + scatter traffic (fwd+bwd), plus one feature read
+    mbytes = 3.0 * cfg.n_layers * 2.0 * n_edges * d_h * 4 + n_nodes * d_feat * 4
+    return CellPlan(arch, spec.name, spec.kind, step,
+                    (params_s, opt_s, batch_s), (psh, osh, bsh),
+                    (psh, osh, None), (0, 1), flops, mbytes)
+
+
+# ---------------------------------------------------------------------------
+# Co-occurrence cells (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+
+def _cooc_index_shapes(cfg: CoocConfig) -> PackedIndex:
+    w = cfg.n_words
+    return PackedIndex(
+        packed=sds((w, cfg.vocab_size), jnp.uint32),
+        doc_freq=sds((cfg.vocab_size,), jnp.int32),
+        n_docs=sds((), jnp.int32),
+    )
+
+
+def _cooc_index_shardings(idx_s: PackedIndex) -> PackedIndex:
+    # NamedTuple is itself a tuple — build leaf shardings explicitly rather
+    # than through the logical-tree mapper (which would treat it as a leaf).
+    return PackedIndex(
+        packed=named_sharding(("docs", "terms"), idx_s.packed),
+        doc_freq=named_sharding(("terms",), idx_s.doc_freq),
+        n_docs=named_sharding((), idx_s.n_docs),
+    )
+
+
+def _cooc_cell(arch: str, cfg: CoocConfig, spec: ShapeSpec) -> CellPlan:
+    import os
+    d = spec.dims
+    idx_s = _cooc_index_shapes(cfg)
+    ish = _cooc_index_shardings(idx_s)
+    w, v = cfg.n_words, cfg.vocab_size
+    # §Perf knobs: A1 popcount->gemm (queries), C1 bf16->int8 (build)
+    method = os.environ.get("REPRO_COOC_METHOD", "gemm")
+    build_dtype = os.environ.get("REPRO_BUILD_DTYPE", "int8")
+
+    if spec.kind == "cooc_build":
+        def build_step(index: PackedIndex):
+            if build_dtype == "int8":
+                # §Perf C1: 0/1 int8 operands, int32 accumulation — exact
+                # for any D; halves the X bytes moved per GEMM pass and the
+                # cross-shard all-gather payload vs bf16
+                x = constrain(incidence_dense(index, jnp.int8),
+                              ("docs", "terms"))
+                c = jnp.einsum("dv,dw->vw", x, x,
+                               preferred_element_type=jnp.int32)
+            else:
+                x = constrain(incidence_dense(index, jnp.bfloat16),
+                              ("docs", "terms"))
+                c = traversal_construct_dense(x)
+            return constrain(c, ("cooc_row", "terms"))
+
+        xb = 1 if build_dtype == "int8" else 2
+        flops = 2.0 * (w * 32) * float(v) * v
+        mbytes = (w * 32.0) * v * xb + float(v) * v * 4  # X read + C write
+        return CellPlan(arch, spec.name, spec.kind, build_step, (idx_s,),
+                        (ish,), None, (), flops, mbytes,
+                        note=f"traversal baseline as X^T X GEMM ({build_dtype})")
+
+    if spec.kind == "cooc_query":
+        nq = d.get("n_queries", 0)
+        depth, beam, topk = d["depth"], d["beam"], d["topk"]
+        if nq:
+            fn = functools.partial(bfs_construct_batch, depth=depth, topk=topk,
+                                   beam=beam, method=method)
+            seeds_s = sds((nq, 4), jnp.int32)
+            ssh = _logical_shardings((None, None), seeds_s)
+            flops = 2.0 * nq * depth * beam * w * v / 4  # popcount words
+        else:
+            fn = functools.partial(bfs_construct, depth=depth, topk=topk,
+                                   beam=beam, method=method)
+            seeds_s = sds((4,), jnp.int32)
+            ssh = _logical_shardings((None,), seeds_s)
+            flops = 2.0 * depth * beam * w * v / 4
+        # memory-bound: the mandatory work is one stream over the packed
+        # index per BFS level (masks are shared across a level's frontier)
+        mbytes = float(depth) * w * v * 4
+        return CellPlan(arch, spec.name, spec.kind, fn, (idx_s, seeds_s),
+                        (ish, ssh), None, (), flops, mbytes,
+                        note="optimized algorithm (inverted-index BFS)")
+
+    # cooc_ingest: append docs then answer one query (real-time scenario)
+    nd, ml = d["new_docs"], d["max_doc_len"]
+    depth, beam, topk = d["depth"], d["beam"], d["topk"]
+
+    def ingest_and_query(index: PackedIndex, new_terms, new_valid, seeds):
+        idx2 = ingest(index, new_terms, new_valid)
+        return bfs_construct(idx2, seeds, depth=depth, topk=topk, beam=beam)
+
+    args = (idx_s, sds((nd, ml), jnp.int32), sds((nd,), jnp.bool_),
+            sds((4,), jnp.int32))
+    insh = (ish, _logical_shardings((None, None), args[1]),
+            _logical_shardings((None,), args[2]),
+            _logical_shardings((None,), args[3]))
+    flops = 2.0 * depth * beam * w * v / 4 + 2.0 * nd * ml
+    mbytes = (2.0 + depth) * w * v * 4      # scatter read+write + BFS levels
+    return CellPlan(arch, spec.name, spec.kind, ingest_and_query, args,
+                    insh, None, (0,), flops, mbytes,
+                    note="streaming ingest + query (real-time property)")
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def plan_cell(arch: str, shape_name: str) -> CellPlan:
+    """Build the dry-run plan for one (arch x shape) cell.  Must be called
+    inside ``sharding.axis_rules(mesh)``."""
+    cfg = get_config(arch)
+    spec = cfg.shape(shape_name)
+    if isinstance(cfg, LMConfig):
+        if spec.kind == "train":
+            return _lm_train_cell(arch, cfg, spec)
+        if spec.kind == "prefill":
+            return _lm_prefill_cell(arch, cfg, spec)
+        if spec.kind == "decode":
+            return _lm_decode_cell(arch, cfg, spec)
+        raise ValueError(spec.kind)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_cell(arch, cfg, spec)
+    if isinstance(cfg, RecSysConfig):
+        return _recsys_cell(arch, cfg, spec)
+    if isinstance(cfg, CoocConfig):
+        return _cooc_cell(arch, cfg, spec)
+    raise TypeError(type(cfg))
+
+
+def all_cells(include_cooc: bool = True):
+    """Yield every (arch, shape_name) dry-run cell."""
+    from repro.configs import list_archs
+    for arch in list_archs():
+        cfg = get_config(arch)
+        if isinstance(cfg, CoocConfig) and not include_cooc:
+            continue
+        for spec in cfg.shapes:
+            yield arch, spec.name

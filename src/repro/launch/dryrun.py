@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This is the dry-run entry point ONLY — tests/benches see the real device.
+#
+# Two modes (see EXPERIMENTS.md §Dry-run):
+#   scan   — layer stacks stay lax.scan: fast compiles, TPU-realistic buffer
+#            reuse in memory_analysis; used for the 2-mesh pass/fail sweep.
+#   unroll — static-trip scans unrolled: compiled.cost_analysis() counts
+#            every layer/microbatch/chunk (XLA counts a while body ONCE —
+#            see launch/flags.py); used for the single-pod roofline table.
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+_MODE = None  # set in main() before jax-heavy work
+
+
+def _set_mode(mode: str) -> None:
+    global _MODE
+    _MODE = mode
+    os.environ["REPRO_UNROLL_SCANS"] = "1" if mode == "unroll" else "0"
+
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, list_archs  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.cells import all_cells, plan_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.sharding import axis_rules  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# LLVM codegen dominates CPU compile time for big unrolled graphs; HLO-level
+# results (cost_analysis, collectives, buffers) are unchanged (verified).
+_FAST_COMPILE = {"xla_backend_optimization_level": 0,
+                 "xla_llvm_disable_expensive_passes": True}
+
+
+def _mem_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    if ma is None:
+        return {"error": "memory_analysis unavailable on this backend"}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    # bytes-per-device: arguments + temps - aliased (donated) re-use
+    if out:
+        out["peak_per_device_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True, mode: str = "unroll") -> dict:
+    _set_mode(mode)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    with axis_rules(mesh):
+        plan = plan_cell(arch, shape)
+        jf = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate_argnums)
+        lowered = jf.lower(*plan.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile(compiler_options=_FAST_COMPILE)
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_summary(compiled)
+    rl = RL.from_compiled(compiled, n_chips, plan.model_flops, plan.model_bytes)
+    rec = {
+        "arch": arch, "shape": shape, "kind": plan.kind, "mesh": mesh_name,
+        "mode": mode, "n_chips": n_chips, "status": "ok",
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "memory": mem, "roofline": rl.to_dict(), "note": plan.note,
+    }
+    if verbose:
+        print(f"[{arch} x {shape} @ {mesh_name} ({mode})] OK  "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        if "peak_per_device_bytes" in mem:
+            print(f"  memory/device: {mem['peak_per_device_bytes']/2**30:.3f} GiB "
+                  f"(args {mem.get('argument_size_in_bytes',0)/2**30:.3f} + "
+                  f"temps {mem.get('temp_size_in_bytes',0)/2**30:.3f})")
+        else:
+            print(f"  memory: {mem}")
+        print(f"  flops/dev {rl.flops_per_dev:.3e}  bytes/dev "
+              f"{rl.hbm_bytes_per_dev:.3e}  coll/dev {rl.coll_bytes_per_dev:.3e}")
+        print(f"  t_compute {rl.t_compute*1e3:.2f} ms  t_memory "
+              f"{rl.t_memory*1e3:.2f} ms  t_collective {rl.t_collective*1e3:.2f} ms"
+              f"  -> {rl.bottleneck}-bound")
+        print(f"  MODEL_FLOPS {rl.model_flops:.3e}  useful {rl.useful_ratio:.3f}  "
+              f"roofline-fraction {rl.roofline_fraction:.3f}")
+        print(f"  collectives: {rl.collectives.summary()}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}__{mode}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_all(multi_pod_modes, out_dir: str, mode: str,
+            subprocess_mode: bool = True) -> int:
+    """Run every cell, one subprocess per cell (isolation: a compiler OOM or
+    crash in one cell cannot take down the sweep)."""
+    failures = []
+    cells = list(all_cells())
+    for multi_pod in multi_pod_modes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch, shape in cells:
+            tag = f"{arch} x {shape} @ {mesh_name} ({mode})"
+            fn = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}__{mode}.json")
+            if os.path.exists(fn):
+                with open(fn) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"[{tag}] cached OK")
+                        continue
+            if subprocess_mode:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--out", out_dir,
+                       "--mode", mode]
+                if multi_pod:
+                    cmd.append("--multi-pod")
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   env={**os.environ, "PYTHONPATH":
+                                        os.environ.get("PYTHONPATH", "src")})
+                sys.stdout.write(r.stdout)
+                sys.stdout.flush()
+                if r.returncode != 0:
+                    print(f"[{tag}] FAILED:\n{r.stderr[-2000:]}")
+                    failures.append(tag)
+            else:
+                try:
+                    run_cell(arch, shape, multi_pod, out_dir, mode=mode)
+                except Exception:
+                    traceback.print_exc()
+                    failures.append(tag)
+    print(f"\n=== dry-run sweep ({mode}): {len(failures)} failures of "
+          f"{len(cells) * len(multi_pod_modes)} cells ===")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run driver")
+    ap.add_argument("--arch", default=None, choices=list_archs())
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep every cell")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="with --all: sweep single-pod AND multi-pod")
+    ap.add_argument("--mode", choices=("scan", "unroll"),
+                    default=os.environ.get("REPRO_DRYRUN_MODE", "unroll"))
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_DIR))
+    ap.add_argument("--inproc", action="store_true",
+                    help="with --all: no per-cell subprocesses")
+    args = ap.parse_args()
+
+    if args.all:
+        modes = [False, True] if args.both_meshes else [args.multi_pod]
+        return run_all(modes, args.out, args.mode,
+                       subprocess_mode=not args.inproc)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    run_cell(args.arch, args.shape, args.multi_pod, args.out, mode=args.mode)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""Runtime flags (env-var driven, read once per call site).
+
+REPRO_UNROLL_SCANS=1 — replace every lax.scan whose trip count is a small
+static constant (layer stacks, CE chunks, microbatches, attention q-chunks,
+BFS levels) with a Python loop.  Used by the dry-run: XLA's
+HloCostAnalysis counts a while-loop body ONCE regardless of trip count
+(verified empirically), so scanned programs under-report FLOPs/bytes by
+~L x.  Unrolling makes ``compiled.cost_analysis()`` exact and lets the
+partitioner assign per-iteration buffers individually.  Training/serving
+keep scans (compile-time O(1) in depth).
+"""
+from __future__ import annotations
+
+import os
+
+
+def unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"

@@ -1,0 +1,3 @@
+"""Model zoo: transformer LM (GQA/MLA, dense/MoE), GIN, recsys
+(DeepFM/DLRM/SASRec/BERT4Rec) — pure functions over explicit pytrees."""
+from repro.models import gnn, layers, moe, recsys, transformer  # noqa: F401

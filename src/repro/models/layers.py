@@ -1,0 +1,124 @@
+"""Shared model layers: RMSNorm, RoPE, chunked (flash-style) attention,
+SwiGLU — pure functions over explicit param pytrees."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rotary ------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, dh) or (..., S, dh); positions broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    if x.ndim == angles.ndim + 1:                       # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ---------------------------------------------------------------
+
+
+def _attend(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
+            k_pos: jax.Array, causal: bool, scale: float) -> jax.Array:
+    """q (B, Sq, Hkv, G, dh); k, v (B, Skv, Hkv, dh) -> (B, Sq, Hkv, G, dh).
+
+    Mixed precision (EXPERIMENTS.md §Perf B1): Q/K/V feed the MXU in their
+    storage dtype with fp32 ACCUMULATION (preferred_element_type) — no
+    materialised fp32 copies of K/V, which at long KV dominated the memory
+    roofline term (a cast writes 2x the cache size to HBM).  Softmax stays
+    fp32; the probabilities are cast once (Sq*Skv, cheap vs 2x KV)."""
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = k_pos[None, :] <= q_pos[:, None]         # (Sq, Skv)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              q_chunk: int = 0, q_offset: int = 0,
+              scale: Optional[float] = None) -> jax.Array:
+    """Chunked (flash-style memory footprint) multi-head attention.
+
+    q (B, Sq, Hq, dh); k, v (B, Skv, Hkv, dh), Hq % Hkv == 0.
+    q_chunk > 0 and Sq % q_chunk == 0 -> scan over query chunks so the
+    (Sq, Skv) score tensor never materialises (peak is (q_chunk, Skv)).
+    Returns (B, Sq, Hq, dh) in q.dtype.
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                                    # may differ (MLA)
+    g = hq // hkv
+    sc = scale if scale is not None else 1.0 / float(dh) ** 0.5
+    qg = q.reshape(b, sq, hkv, g, dh)
+    k_pos = jnp.arange(skv)
+
+    from repro.launch.flags import unroll_scans
+    # In dry-run unroll mode the chunked scan would multiply HLO size by
+    # nchunks with IDENTICAL FLOP/byte totals (each chunk still attends over
+    # the full KV; XLA-CPU does not flash-fuse either form) — use the full
+    # path so compile time stays bounded.  Peak-memory figures come from the
+    # scan-mode sweep, which keeps the chunked form.
+    if q_chunk <= 0 or sq <= q_chunk or sq % q_chunk != 0 or unroll_scans():
+        q_pos = q_offset + jnp.arange(sq)
+        out = _attend(qg, k, v, q_pos, k_pos, causal, sc)
+        return out.reshape(b, sq, hq, dv)
+
+    nchunks = sq // q_chunk
+    qs = qg.reshape(b, nchunks, q_chunk, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(carry, inp):
+        ci, qc = inp
+        q_pos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+        return carry, _attend(qc, k, v, q_pos, k_pos, causal, sc)
+
+    from repro.launch.flags import unroll_scans
+    if unroll_scans():
+        outs = jnp.stack([body(None, (jnp.int32(i), qs[i]))[1]
+                          for i in range(nchunks)])
+    else:
+        _, outs = jax.lax.scan(body, None, (jnp.arange(nchunks), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, dv)
+    return out
+
+
+# -- FFN ---------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU FFN: (x@w1 * silu(x@w3)) @ w2, activations constrained to TP."""
+    h = jnp.einsum("...d,df->...f", x, w1)
+    g = jnp.einsum("...d,df->...f", x, w3)
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, w2)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN (token-choice top-k, capacity-based, scatter
+dispatch).
+
+The dispatch avoids the GShard (tokens, E, C) one-hot blow-up: position-
+within-expert is computed by a sort-based ranking (O(Tk log Tk) compare ops,
+O(Tk) memory), tokens scatter directly into the (E, C, d) expert buffers,
+and the combine is a gather + per-token weighted sum — no scatter in the
+combine path.  Experts shard over the "experts" logical axis (-> "model");
+tokens arrive "batch"-sharded, so SPMD inserts the expected all-to-all
+around the expert buffers.
+
+Capacity C is static: C = ceil(T * top_k * capacity_factor / E); overflow
+tokens are dropped (GShard semantics) — their residual path still carries
+their activations.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.layers import dense_init
+
+
+def init_moe_params(key, d_model: int, d_ff: int, n_experts: int,
+                    n_shared: int, dtype) -> Dict:
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w1": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(ks[1], n_experts)),
+        "w3": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(ks[2], n_experts)),
+        "w2": jax.vmap(lambda k: dense_init(k, d_ff, d_model, dtype))(
+            jax.random.split(ks[3], n_experts)),
+    }
+    if n_shared:
+        p["shared_w1"] = dense_init(ks[4], d_model, n_shared * d_ff, dtype)
+        p["shared_w3"] = dense_init(ks[5], d_model, n_shared * d_ff, dtype)
+        p["shared_w2"] = dense_init(ks[6], n_shared * d_ff, d_model, dtype)
+    return p
+
+
+def _position_in_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each entry among entries with the same expert id, in input
+    order (stable) — sort-based, no (Tk, E) one-hot."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(n)
+    first = jnp.concatenate([jnp.array([True]), sorted_e[1:] != sorted_e[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(first, idx, 0))
+    pos_sorted = idx - run_start
+    return jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+
+
+def moe_ffn(params: Dict, x: jax.Array, *, top_k: int, capacity_factor: float,
+            router_aux_weight: float) -> Tuple[jax.Array, jax.Array]:
+    """x (T, d) -> (out (T, d), aux_loss ()).  T static."""
+    t, d = x.shape
+    e = params["router"].shape[1]
+    ff = params["w1"].shape[2]
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E) fp32
+    top_w, top_i = jax.lax.top_k(probs, top_k)               # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)   # renormalise
+
+    cap = int(math.ceil(t * top_k * capacity_factor / e))
+    cap = max(cap, 1)
+
+    flat_e = top_i.reshape(-1)                               # (T*k,) token-major
+    pos = _position_in_expert(flat_e, e)                     # (T*k,)
+    keep = pos < cap
+    dest = flat_e * cap + pos                                # (T*k,) unique where keep
+    token_of = jnp.repeat(jnp.arange(t), top_k)
+
+    # dispatch: scatter tokens into (E*C, d) expert buffers
+    src = x[token_of]                                        # (T*k, d)
+    safe_dest = jnp.where(keep, dest, e * cap)               # OOB -> dropped
+    buf = jnp.zeros((e * cap, d), x.dtype).at[safe_dest].add(
+        jnp.where(keep[:, None], src, 0), mode="drop")
+    buf = buf.reshape(e, cap, d)
+    buf = constrain(buf, ("experts", None, None))
+
+    # expert computation: grouped SwiGLU (per-expert weights)
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w1"])
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w3"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w2"])
+    out_buf = constrain(out_buf, ("experts", None, None))
+
+    # combine: gather back + weighted sum over the k choices (no scatter)
+    flat_out = out_buf.reshape(e * cap, d)
+    gathered = flat_out[jnp.where(keep, dest, 0)]            # (T*k, d)
+    w = (top_w.reshape(-1) * keep).astype(x.dtype)
+    y = jnp.sum((gathered * w[:, None]).reshape(t, top_k, d), axis=1)
+
+    # shared experts (dense branch, DeepSeek/Kimi style)
+    if "shared_w1" in params:
+        hs = jnp.einsum("td,df->tf", x, params["shared_w1"])
+        gs = jnp.einsum("td,df->tf", x, params["shared_w3"])
+        hs = hs * jax.nn.silu(gs.astype(jnp.float32)).astype(hs.dtype)
+        y = y + jnp.einsum("tf,fd->td", hs, params["shared_w2"])
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f_e = jax.ops.segment_sum(jnp.ones_like(flat_e, jnp.float32), flat_e,
+                              num_segments=e) / (t * top_k)
+    p_e = jnp.mean(probs, axis=0)
+    aux = router_aux_weight * e * jnp.sum(f_e * p_e)
+    return y, aux

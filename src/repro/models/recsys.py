@@ -1,0 +1,295 @@
+"""RecSys models: DeepFM, DLRM, SASRec, BERT4Rec.
+
+The embedding substrate is built from scratch (JAX has no EmbeddingBag):
+``embedding_bag`` = jnp.take + reduce; ``embedding_bag_ragged`` = gather +
+segment_sum over offset-delimited bags — the FBGEMM-TBE-equivalent hot
+path.  Tables are one stacked (F*V, E) matrix, row-sharded over "rows"
+(-> "model" axis), so lookups become a sharded gather and the batch stays
+data-parallel (DESIGN.md §4).
+
+Sequential models (SASRec causal, BERT4Rec bidirectional) reuse the
+shared attention layer.  Training uses sampled (pos, neg) BCE — full
+softmax over the 10^6-item catalogue is neither the paper's choice
+(SASRec) nor scalable; noted as the standard large-catalogue practice.
+Retrieval scoring (``retrieval_cand``) is an exact batched dot against
+the full item table — no loop, one (1, E) x (E, C) matmul.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.kernels import ops
+from repro.launch.sharding import constrain
+from repro.models.layers import attention, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, combiner: str = "sum",
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """table (V, E); ids (..., M) multi-hot bags -> (..., E).
+
+    jnp.take + reduce: the TPU TensorCore realisation of EmbeddingBag.
+    """
+    vecs = jnp.take(table, ids, axis=0)                    # (..., M, E)
+    if weights is not None:
+        vecs = vecs * weights[..., None]
+    if combiner == "sum":
+        return jnp.sum(vecs, axis=-2)
+    if combiner == "mean":
+        return jnp.mean(vecs, axis=-2)
+    if combiner == "max":
+        return jnp.max(vecs, axis=-2)
+    raise ValueError(combiner)
+
+
+def embedding_bag_ragged(table: jax.Array, flat_ids: jax.Array,
+                         segment_ids: jax.Array, num_bags: int,
+                         combiner: str = "sum") -> jax.Array:
+    """Ragged bags: flat_ids (T,), segment_ids (T,) -> (num_bags, E)."""
+    vecs = jnp.take(table, flat_ids, axis=0)
+    if combiner == "sum":
+        return jax.ops.segment_sum(vecs, segment_ids, num_segments=num_bags)
+    if combiner == "mean":
+        s = jax.ops.segment_sum(vecs, segment_ids, num_segments=num_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(flat_ids, vecs.dtype), segment_ids,
+                                num_segments=num_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if combiner == "max":
+        return jax.ops.segment_max(vecs, segment_ids, num_segments=num_bags)
+    raise ValueError(combiner)
+
+
+def _mlp_init(key, dims: Tuple[int, ...], dtype) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [{"w": dense_init(k, dims[i], dims[i + 1], dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i, k in enumerate(keys)]
+
+
+def _mlp_apply(layers: list, x: jax.Array, final_act: bool = False) -> jax.Array:
+    for i, l in enumerate(layers):
+        x = jnp.einsum("...d,de->...e", x, l["w"]) + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# DeepFM
+# ---------------------------------------------------------------------------
+
+
+def init_deepfm(cfg: RecSysConfig, key, dtype=jnp.float32) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    f, v, e = cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim
+    return {
+        "table": (jax.random.normal(k1, (f * v, e), jnp.float32) * 0.01).astype(dtype),
+        "fm_w": (jax.random.normal(k2, (f * v,), jnp.float32) * 0.01).astype(dtype),
+        "fm_b": jnp.zeros((), dtype),
+        "mlp": _mlp_init(k3, (f * e,) + tuple(cfg.mlp) + (1,), dtype),
+    }
+
+
+def _flat_field_ids(cfg: RecSysConfig, sparse_ids: jax.Array) -> jax.Array:
+    """(B, F) per-field ids -> global row ids in the stacked table."""
+    f = cfg.n_sparse
+    offs = jnp.arange(f, dtype=sparse_ids.dtype) * cfg.vocab_per_field
+    return sparse_ids + offs[None, :]
+
+
+def deepfm_logits(cfg: RecSysConfig, params: Dict, batch: Dict) -> jax.Array:
+    """batch: sparse_ids (B, F) -> logits (B,)."""
+    rows = _flat_field_ids(cfg, batch["sparse_ids"])
+    emb = jnp.take(params["table"], rows, axis=0)          # (B, F, E)
+    emb = constrain(emb, ("batch", None, None))
+    # FM first order
+    fo = jnp.sum(jnp.take(params["fm_w"], rows, axis=0), axis=-1) + params["fm_b"]
+    # FM second order: 0.5 * ((sum_f v)^2 - sum_f v^2), summed over E
+    s = jnp.sum(emb, axis=1)
+    s2 = jnp.sum(emb * emb, axis=1)
+    so = 0.5 * jnp.sum(s * s - s2, axis=-1)
+    # deep branch
+    deep = _mlp_apply(params["mlp"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return (fo + so + deep).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+def init_dlrm(cfg: RecSysConfig, key, dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    f, v, e = cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim
+    n_pairs = (f + 1) * f // 2                             # F sparse + 1 dense vec
+    top_in = e + n_pairs
+    return {
+        "table": (jax.random.normal(k1, (f * v, e), jnp.float32) * 0.01).astype(dtype),
+        "bot": _mlp_init(k2, (cfg.n_dense,) + tuple(cfg.bot_mlp), dtype),
+        "top": _mlp_init(k3, (top_in,) + tuple(cfg.top_mlp), dtype),
+    }
+
+
+def dlrm_logits(cfg: RecSysConfig, params: Dict, batch: Dict) -> jax.Array:
+    """batch: dense (B, 13), sparse_ids (B, 26) -> logits (B,)."""
+    rows = _flat_field_ids(cfg, batch["sparse_ids"])
+    emb = jnp.take(params["table"], rows, axis=0)          # (B, F, E)
+    dense_vec = _mlp_apply(params["bot"], batch["dense"], final_act=True)  # (B, E)
+    x = jnp.concatenate([dense_vec[:, None, :], emb], axis=1)  # (B, F+1, E)
+    x = constrain(x, ("batch", None, None))
+    inter = ops.dot_interaction(x)                         # (B, (F+1)F/2)
+    top_in = jnp.concatenate([dense_vec, inter.astype(dense_vec.dtype)], axis=-1)
+    return _mlp_apply(params["top"], top_in)[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sequential: SASRec (causal) / BERT4Rec (bidirectional)
+# ---------------------------------------------------------------------------
+
+
+def init_seqrec(cfg: RecSysConfig, key, dtype=jnp.float32) -> Dict:
+    e = cfg.embed_dim
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[3 + i], 6)
+        blocks.append({
+            "ln1": jnp.ones((e,), dtype), "ln2": jnp.ones((e,), dtype),
+            "wq": dense_init(kb[0], e, e, dtype), "wk": dense_init(kb[1], e, e, dtype),
+            "wv": dense_init(kb[2], e, e, dtype), "wo": dense_init(kb[3], e, e, dtype),
+            "w1": dense_init(kb[4], e, 4 * e, dtype), "b1": jnp.zeros((4 * e,), dtype),
+            "w2": dense_init(kb[5], 4 * e, e, dtype), "b2": jnp.zeros((e,), dtype),
+        })
+    n_emb = cfg.n_items + 2                                # +pad +mask tokens
+    return {
+        "item_emb": (jax.random.normal(ks[0], (n_emb, e), jnp.float32) * 0.02).astype(dtype),
+        "pos_emb": (jax.random.normal(ks[1], (cfg.seq_len, e), jnp.float32) * 0.02).astype(dtype),
+        "final_ln": jnp.ones((e,), dtype),
+        "blocks": blocks,
+    }
+
+
+def _seq_encode(cfg: RecSysConfig, params: Dict, seq: jax.Array,
+                causal: bool) -> jax.Array:
+    """seq (B, S) item ids -> hidden (B, S, E)."""
+    b, s = seq.shape
+    e, h = cfg.embed_dim, cfg.n_heads
+    dh = e // h
+    x = jnp.take(params["item_emb"], seq, axis=0) + params["pos_emb"][None, :s]
+    x = constrain(x, ("batch", None, None))
+    from repro.models.layers import rmsnorm
+    for blk in params["blocks"]:
+        xn = rmsnorm(x, blk["ln1"])
+        q = jnp.einsum("bse,ef->bsf", xn, blk["wq"]).reshape(b, s, h, dh)
+        k = jnp.einsum("bse,ef->bsf", xn, blk["wk"]).reshape(b, s, h, dh)
+        v = jnp.einsum("bse,ef->bsf", xn, blk["wv"]).reshape(b, s, h, dh)
+        o = attention(q, k, v, causal=causal, q_chunk=0).reshape(b, s, e)
+        x = x + jnp.einsum("bse,ef->bsf", o, blk["wo"])
+        xn = rmsnorm(x, blk["ln2"])
+        ff = jax.nn.relu(jnp.einsum("bse,ef->bsf", xn, blk["w1"]) + blk["b1"])
+        x = x + jnp.einsum("bsf,fe->bse", ff, blk["w2"]) + blk["b2"]
+    return rmsnorm(x, params["final_ln"])
+
+
+def seqrec_scores(cfg: RecSysConfig, params: Dict, hidden: jax.Array,
+                  item_ids: jax.Array) -> jax.Array:
+    """Score hidden (..., E) against item_ids (..., C) -> (..., C)."""
+    cand = jnp.take(params["item_emb"], item_ids, axis=0)
+    return jnp.einsum("...e,...ce->...c", hidden.astype(jnp.float32),
+                      cand.astype(jnp.float32))
+
+
+def seqrec_loss(cfg: RecSysConfig, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """Sampled BCE (SASRec-style): batch has seq, pos, neg (B, S), mask (B, S).
+
+    For BERT4Rec the ``seq`` already contains [MASK] tokens at masked
+    positions and pos/neg are the original/negative items there.
+    """
+    causal = cfg.interaction == "self-attn-seq"
+    h = _seq_encode(cfg, params, batch["seq"], causal=causal)
+    pe = jnp.take(params["item_emb"], batch["pos"], axis=0)
+    ne = jnp.take(params["item_emb"], batch["neg"], axis=0)
+    ps = jnp.sum(h.astype(jnp.float32) * pe.astype(jnp.float32), axis=-1)
+    ns = jnp.sum(h.astype(jnp.float32) * ne.astype(jnp.float32), axis=-1)
+    m = batch["mask"].astype(jnp.float32)
+    loss = -(jax.nn.log_sigmoid(ps) + jax.nn.log_sigmoid(-ns)) * m
+    loss = jnp.sum(loss) / jnp.maximum(jnp.sum(m), 1.0)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Unified step interface
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: RecSysConfig, key, dtype=jnp.float32) -> Dict:
+    if cfg.interaction == "fm":
+        return init_deepfm(cfg, key, dtype)
+    if cfg.interaction == "dot":
+        return init_dlrm(cfg, key, dtype)
+    return init_seqrec(cfg, key, dtype)
+
+
+def param_specs(cfg: RecSysConfig, params: Dict) -> Dict:
+    """Tables row-sharded over "rows" -> model axis; MLPs replicated."""
+    def spec(path_key, x):
+        if path_key in ("table", "fm_w", "item_emb"):
+            return ("rows",) + tuple([None] * (jnp.ndim(x) - 1))
+        return tuple([None] * jnp.ndim(x))
+
+    def rec(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: rec(v, k) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [rec(v, name) for v in tree]
+        return spec(name, tree)
+
+    return rec(params)
+
+
+def pointwise_loss(cfg: RecSysConfig, params: Dict, batch: Dict):
+    """BCE for deepfm / dlrm: batch adds labels (B,)."""
+    logits = (deepfm_logits if cfg.interaction == "fm" else dlrm_logits)(
+        cfg, params, batch)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(-(y * jax.nn.log_sigmoid(logits)
+                      + (1 - y) * jax.nn.log_sigmoid(-logits)))
+    return loss, {"loss": loss}
+
+
+def loss_fn(cfg: RecSysConfig, params: Dict, batch: Dict):
+    if cfg.interaction in ("fm", "dot"):
+        return pointwise_loss(cfg, params, batch)
+    return seqrec_loss(cfg, params, batch)
+
+
+def serve_fn(cfg: RecSysConfig, params: Dict, batch: Dict) -> jax.Array:
+    """Online/bulk inference."""
+    if cfg.interaction == "fm":
+        return jax.nn.sigmoid(deepfm_logits(cfg, params, batch))
+    if cfg.interaction == "dot":
+        return jax.nn.sigmoid(dlrm_logits(cfg, params, batch))
+    causal = cfg.interaction == "self-attn-seq"
+    h = _seq_encode(cfg, params, batch["seq"], causal=causal)[:, -1]
+    return seqrec_scores(cfg, params, h, batch["candidates"])
+
+
+def retrieval_fn(cfg: RecSysConfig, params: Dict, batch: Dict) -> jax.Array:
+    """Score one query against n_candidates (batched dot / full forward)."""
+    if cfg.interaction in ("fm", "dot"):
+        # candidate-major forward: user features broadcast to (C, ...)
+        return (deepfm_logits if cfg.interaction == "fm" else dlrm_logits)(
+            cfg, params, batch)
+    causal = cfg.interaction == "self-attn-seq"
+    h = _seq_encode(cfg, params, batch["seq"], causal=causal)[:, -1]  # (1, E)
+    cand = constrain(batch["candidates"], ("cand",))                 # (C,)
+    ce = jnp.take(params["item_emb"], cand, axis=0)                  # (C, E)
+    return jnp.einsum("be,ce->bc", h.astype(jnp.float32), ce.astype(jnp.float32))

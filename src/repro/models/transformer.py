@@ -1,0 +1,535 @@
+"""Decoder-only LM: GQA or MLA attention, dense or MoE FFN.
+
+Pure functions over explicit param pytrees; layers stacked on a leading
+axis and scanned (jax.lax.scan) with optional remat — HLO stays O(1) in
+depth, which keeps 61-layer / 1T-param dry-run compiles tractable.
+
+Step functions exposed:
+  * loss_fn / forward      — training & prefill compute graph
+  * prefill                — forward + KV-cache emission (scan ys)
+  * decode_step            — one token against the cache (flash decode)
+Cache layout: GQA  {"kv": (L, B, S, Hkv, 2*dh)}  (k | v concatenated)
+              MLA  {"kv": (L, B, S, 1, r+dr)}    (compressed c_kv | rope k)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.kernels import ops
+from repro.launch.sharding import constrain
+from repro.models import moe as moe_lib
+from repro.models.layers import apply_rope, attention, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(cfg: LMConfig, key, dtype) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.mla:
+        dn, dr, dv, r, h = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                            cfg.kv_lora_rank, cfg.n_heads)
+        return {
+            "wq": dense_init(ks[0], d, h * (dn + dr), dtype),
+            "wdkv": dense_init(ks[1], d, r, dtype),
+            "wkr": dense_init(ks[2], d, dr, dtype),
+            "wuk": dense_init(ks[3], r, h * dn, dtype),
+            "wuv": dense_init(ks[4], r, h * dv, dtype),
+            "wo": dense_init(ks[5], h * dv, d, dtype),
+        }
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * cfg.head_dim, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.head_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.head_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.head_dim,), dtype)
+    return p
+
+
+def _init_block(cfg: LMConfig, key, dtype, is_moe: bool) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": _init_attn(cfg, k1, dtype),
+    }
+    if is_moe:
+        p["moe"] = moe_lib.init_moe_params(k2, cfg.d_model, cfg.d_ff_expert,
+                                           cfg.n_experts, cfg.n_shared_experts, dtype)
+    else:
+        p["ffn"] = {
+            "w1": dense_init(k2, cfg.d_model, cfg.d_ff, dtype),
+            "w3": dense_init(jax.random.fold_in(k2, 1), cfg.d_model, cfg.d_ff, dtype),
+            "w2": dense_init(k3, cfg.d_ff, cfg.d_model, dtype),
+        }
+    return p
+
+
+def _stack_layers(cfg: LMConfig, key, dtype, n: int, is_moe: bool) -> Dict:
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(lambda k: _init_block(cfg, k, dtype, is_moe))(keys[:n]) if n else None
+
+
+def init_params(cfg: LMConfig, key, dtype=jnp.bfloat16) -> Dict:
+    k_emb, k_dense, k_moe, k_head = jax.random.split(key, 4)
+    vp = cfg.padded_vocab
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = (cfg.n_layers - cfg.first_dense_layers) if cfg.moe else 0
+    params = {
+        "embed": dense_init(k_emb, vp, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if n_dense:
+        params["dense_layers"] = _stack_layers(cfg, k_dense, dtype, n_dense, False)
+    if n_moe:
+        params["moe_layers"] = _stack_layers(cfg, k_moe, dtype, n_moe, True)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, vp, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding specs (mirrors the param tree)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: LMConfig) -> Dict:
+    """Pytree of logical-axis tuples, same structure as init_params output.
+
+    "fsdp" resolves to the data axis only when cfg.fsdp (else dropped via
+    rule override in launch); indivisible dims degrade to replication.
+    """
+    f = "fsdp" if cfg.fsdp else None
+
+    def attn_specs() -> Dict:
+        if cfg.mla:
+            return {
+                "wq": (f, "heads"), "wdkv": (f, None), "wkr": (f, None),
+                "wuk": (None, "heads"), "wuv": (None, "heads"),
+                "wo": ("heads", f),
+            }
+        s = {"wq": (f, "heads"), "wk": (f, "kv_heads"), "wv": (f, "kv_heads"),
+             "wo": ("heads", f)}
+        if cfg.qkv_bias:
+            s.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+        return s
+
+    def block_specs(is_moe: bool) -> Dict:
+        p = {"ln1": (None,), "ln2": (None,), "attn": attn_specs()}
+        if is_moe:
+            p["moe"] = {
+                "router": (None, None),
+                "w1": ("experts", f, None), "w3": ("experts", f, None),
+                "w2": ("experts", None, f),
+            }
+            if cfg.n_shared_experts:
+                p["moe"].update({"shared_w1": (f, "ff"), "shared_w3": (f, "ff"),
+                                 "shared_w2": ("ff", f)})
+        else:
+            p["ffn"] = {"w1": (f, "ff"), "w3": (f, "ff"), "w2": ("ff", f)}
+        return p
+
+    def stacked(d: Dict) -> Dict:
+        return jax.tree.map(lambda ax: (None,) + ax, d,
+                            is_leaf=lambda v: isinstance(v, tuple))
+
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = (cfg.n_layers - cfg.first_dense_layers) if cfg.moe else 0
+    specs = {"embed": ("vocab", f), "final_norm": (None,)}
+    if n_dense:
+        specs["dense_layers"] = stacked(block_specs(False))
+    if n_moe:
+        specs["moe_layers"] = stacked(block_specs(True))
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = (f, "vocab")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Attention paths
+# ---------------------------------------------------------------------------
+
+
+def _gqa_qkv(cfg: LMConfig, p: Dict, x: jax.Array, positions: jax.Array):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mla_qkv(cfg: LMConfig, p: Dict, x: jax.Array, positions: jax.Array):
+    """Returns (q_cat, k_cat, v, compressed_cache_entry)."""
+    b, s, _ = x.shape
+    h, dn, dr, dv, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])                   # (B,S,r)
+    kr = apply_rope(jnp.einsum("bsd,dr->bsr", x, p["wkr"]), positions,
+                    cfg.rope_theta)                                  # (B,S,dr)
+    kn = jnp.einsum("bsr,rh->bsh", ckv, p["wuk"]).reshape(b, s, h, dn)
+    v = jnp.einsum("bsr,rh->bsh", ckv, p["wuv"]).reshape(b, s, h, dv)
+    q_cat = jnp.concatenate([qn, qr], axis=-1)
+    k_cat = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :],
+                                                  (b, s, h, dr))], axis=-1)
+    cache_entry = jnp.concatenate([ckv, kr], axis=-1)[:, :, None, :]  # (B,S,1,r+dr)
+    return q_cat, k_cat, v, cache_entry
+
+
+def _self_attention(cfg: LMConfig, p: Dict, x: jax.Array, positions: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (attn_out (B,S,d), cache_entry (B,S,Hkv,ckv_dim))."""
+    b, s, _ = x.shape
+    if cfg.mla:
+        q, k, v, cache_entry = _mla_qkv(cfg, p, x, positions)
+        scale = 1.0 / float(cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5
+        out = attention(q, k, v, causal=True, q_chunk=cfg.attn_q_chunk, scale=scale)
+        out = out.reshape(b, s, cfg.n_heads * cfg.v_head_dim)
+    else:
+        q, k, v = _gqa_qkv(cfg, p, x, positions)
+        cache_entry = jnp.concatenate([k, v], axis=-1)               # (B,S,Hkv,2dh)
+        out = attention(q, k, v, causal=True, q_chunk=cfg.attn_q_chunk)
+        out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), cache_entry
+
+
+# ---------------------------------------------------------------------------
+# Blocks & forward
+# ---------------------------------------------------------------------------
+
+
+def _infer_capacity(cfg: LMConfig) -> float:
+    """Dropless capacity for inference: cap == T regardless of routing.
+    (Training uses cfg.capacity_factor with GShard drop semantics; dropping
+    tokens at serving time would make decode diverge from prefill.)"""
+    return float(cfg.n_experts) / max(cfg.top_k, 1)
+
+
+def _block(cfg: LMConfig, p: Dict, h: jax.Array, positions: jax.Array,
+           is_moe: bool, emit_cache: bool, inference: bool = False):
+    h = constrain(h, ("batch", "seq", None))
+    attn_out, cache_entry = _self_attention(
+        cfg, p["attn"], rmsnorm(h, p["ln1"], cfg.rmsnorm_eps), positions)
+    h = h + attn_out
+    hn = rmsnorm(h, p["ln2"], cfg.rmsnorm_eps)
+    if is_moe:
+        b, s, d = hn.shape
+        cf = _infer_capacity(cfg) if inference else cfg.capacity_factor
+        y, aux = moe_lib.moe_ffn(p["moe"], hn.reshape(b * s, d),
+                                 top_k=cfg.top_k, capacity_factor=cf,
+                                 router_aux_weight=cfg.router_aux_weight)
+        h = h + y.reshape(b, s, d)
+    else:
+        from repro.models.layers import swiglu
+        h = h + swiglu(hn, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+        aux = jnp.float32(0.0)
+    h = constrain(h, ("batch", "seq", None))
+    return h, aux, (cache_entry if emit_cache else jnp.zeros((), h.dtype))
+
+
+def _scan_stack(cfg: LMConfig, stack: Optional[Dict], h: jax.Array,
+                positions: jax.Array, is_moe: bool, emit_cache: bool,
+                inference: bool = False):
+    if stack is None:
+        return h, jnp.float32(0.0), None
+    blk = functools.partial(_block, cfg, is_moe=is_moe, emit_cache=emit_cache,
+                            inference=inference)
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    from repro.launch.flags import unroll_scans
+    if unroll_scans():
+        n = jax.tree.leaves(stack)[0].shape[0]
+        aux_tot = jnp.float32(0.0)
+        caches = []
+        for i in range(n):
+            layer_p = jax.tree.map(lambda x: x[i], stack)
+            h, aux, cache = blk(layer_p, h, positions)
+            aux_tot = aux_tot + aux
+            caches.append(cache)
+        stacked = (jnp.stack(caches) if emit_cache else None)
+        return h, aux_tot, stacked
+
+    def body(carry, layer_p):
+        h = carry
+        h, aux, cache = blk(layer_p, h, positions)
+        return h, (aux, cache)
+
+    h, (auxs, caches) = jax.lax.scan(body, h, stack)
+    return h, jnp.sum(auxs), caches
+
+
+def forward(cfg: LMConfig, params: Dict, tokens: jax.Array,
+            emit_cache: bool = False, inference: Optional[bool] = None):
+    """tokens (B, S) -> (hidden (B,S,d), aux_loss, caches or None).
+
+    inference=True switches MoE routing to dropless (defaults to
+    emit_cache: prefill is inference, loss_fn is training)."""
+    if inference is None:
+        inference = emit_cache
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = constrain(h, ("batch", "seq", None))
+    h, aux1, c1 = _scan_stack(cfg, params.get("dense_layers"), h, positions,
+                              False, emit_cache, inference)
+    h, aux2, c2 = _scan_stack(cfg, params.get("moe_layers"), h, positions,
+                              True, emit_cache, inference)
+    h = rmsnorm(h, params["final_norm"], cfg.rmsnorm_eps)
+    return h, aux1 + aux2, (c1, c2)
+
+
+def _lm_head(cfg: LMConfig, params: Dict) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def logits_for(cfg: LMConfig, params: Dict, h: jax.Array) -> jax.Array:
+    """h (..., d) -> fp32 logits (..., Vp) with padded vocab masked."""
+    w = _lm_head(cfg, params)
+    logits = jnp.einsum("...d,dv->...v", h.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    logits = constrain(logits, tuple([None] * (logits.ndim - 1)) + ("vocab",))
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30, logits.dtype)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    return logits
+
+
+def loss_fn(cfg: LMConfig, params: Dict, batch: Dict, *, ce_chunk: int = 512):
+    """batch: tokens (B,S), labels (B,S), mask (B,S) -> (loss, metrics).
+
+    Cross-entropy is computed in seq chunks so the fp32 (B, chunk, Vp)
+    logits block (vocab TP-sharded) bounds the live memory.
+    """
+    h, aux, _ = forward(cfg, params, batch["tokens"])
+    b, s, d = h.shape
+    labels, mask = batch["labels"], batch["mask"]
+    chunk = min(ce_chunk, s)
+    n = s // chunk if s % chunk == 0 else 1
+    chunk = s // n
+
+    hs = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        hc, lc, mc = inp
+        logits = logits_for(cfg, params, hc)                 # (B, chunk, Vp) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mc
+        return (carry[0] + jnp.sum(ce), carry[1] + jnp.sum(mc)), None
+
+    from repro.launch.flags import unroll_scans
+    if unroll_scans():
+        carry = (jnp.float32(0.0), jnp.float32(0.0))
+        msf = ms.astype(jnp.float32)
+        for i in range(n):
+            carry, _ = body(carry, (hs[i], ls[i], msf[i]))
+        tot, cnt = carry
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                     (hs, ls, ms.astype(jnp.float32)))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_dims(cfg: LMConfig) -> Tuple[int, int]:
+    """(n_kv_heads, per-head cache width) of the cache layout."""
+    if cfg.mla:
+        return 1, cfg.kv_lora_rank + cfg.qk_rope_dim
+    return cfg.n_kv_heads, 2 * cfg.head_dim
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    hkv, cw = kv_cache_dims(cfg)
+    return {
+        "kv": jnp.zeros((cfg.n_layers, batch, max_len, hkv, cw), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),   # per-sequence position
+    }
+
+
+def cache_specs(cfg: LMConfig, long_context: bool) -> Dict:
+    """Logical axes for the cache pytree.
+
+    Sequence dim shards over "model" ("kv_seq" adds "data" for the
+    batch=1 long-context cell); kv_heads picks up whatever remains (it
+    degrades to replication when the model axis is already consumed or
+    indivisible — e.g. 8 GQA heads on a 16-way axis)."""
+    seq_ax = "kv_seq" if long_context else "seq"
+    return {"kv": (None, "batch", seq_ax, "kv_heads", None), "length": ("batch",)}
+
+
+def prefill(cfg: LMConfig, params: Dict, tokens: jax.Array,
+            max_len: Optional[int] = None):
+    """tokens (B, S) -> (last-token fp32 logits (B, Vp), cache).
+
+    max_len pads the cache's sequence dim so subsequent decode_step calls
+    have room to write (a write at pos >= capacity is silently dropped).
+    """
+    h, _, (c1, c2) = forward(cfg, params, tokens, emit_cache=True)
+    parts = [c for c in (c1, c2) if c is not None]
+    kv = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    if max_len is not None and max_len > tokens.shape[1]:
+        pad = max_len - tokens.shape[1]
+        kv = jnp.pad(kv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"kv": kv,
+             "length": jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)}
+    logits = logits_for(cfg, params, h[:, -1])
+    return logits, cache
+
+
+def _decode_attn(cfg: LMConfig, p: Dict, x: jax.Array, kv: jax.Array,
+                 pos: jax.Array):
+    """x (B, d); kv (B, S, Hkv, cw) layer cache (READ-ONLY — §Perf B2);
+    pos (B,) per-sequence positions (continuous batching).
+
+    Returns (out (B,d), cache entry (B, Hkv, cw)).  The current token's
+    attention is merged analytically (ops.decode_attn), so the cache is
+    never copied here; decode_step writes all layers' entries with ONE
+    donated scatter."""
+    b, d = x.shape
+    bpos = pos[:, None]                                          # (B,1)
+    if cfg.mla:
+        h, dn, dr, dv, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                            cfg.v_head_dim, cfg.kv_lora_rank)
+        q = jnp.einsum("bd,dh->bh", x, p["wq"]).reshape(b, h, dn + dr)
+        qn, qr = q[..., :dn], q[..., dn:]
+        qr = apply_rope(qr[:, None], bpos, cfg.rope_theta)[:, 0]
+        # weight absorption: query into compressed space
+        wuk = p["wuk"].reshape(r, h, dn)
+        qc = jnp.einsum("bhn,rhn->bhr", qn.astype(jnp.float32),
+                        wuk.astype(jnp.float32)).astype(x.dtype)
+        q_eff = jnp.concatenate([qc, qr], axis=-1)               # (B,H,r+dr)
+        # correct softmax scale: decode_attn divides by sqrt(r+dr)
+        q_eff = q_eff * (float(r + dr) ** 0.5 / float(dn + dr) ** 0.5)
+        ckv = jnp.einsum("bd,dr->br", x, p["wdkv"])
+        kr = apply_rope(jnp.einsum("bd,dr->br", x, p["wkr"])[:, None],
+                        bpos, cfg.rope_theta)[:, 0]
+        entry = jnp.concatenate([ckv, kr], axis=-1)[:, None, :]  # (B,Hkv=1,r+dr)
+        entry = entry.astype(kv.dtype)
+        # values = cache itself; only ctx[..., :r] is used downstream, so
+        # the rope tail needs no zeroing (a full-cache copy in the old path)
+        ctx = ops.decode_attn(q_eff, kv, kv, pos, entry, entry)
+        ctx_c = ctx[..., :r]
+        wuv = p["wuv"].reshape(r, h, dv)
+        out = jnp.einsum("bhr,rhv->bhv", ctx_c.astype(jnp.float32),
+                         wuv.astype(jnp.float32)).astype(x.dtype)
+        out = out.reshape(b, h * dv)
+        return jnp.einsum("bh,hd->bd", out, p["wo"]), entry
+    else:
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = jnp.einsum("bd,dh->bh", x, p["wq"])
+        k = jnp.einsum("bd,dh->bh", x, p["wk"])
+        v = jnp.einsum("bd,dh->bh", x, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = q.reshape(b, hq, dh)
+        k = k.reshape(b, hkv, dh)
+        v = v.reshape(b, hkv, dh)
+        q = apply_rope(q[:, None], bpos, cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], bpos, cfg.rope_theta)[:, 0]
+        entry = jnp.concatenate([k, v], axis=-1)[:, None].astype(kv.dtype)
+        ctx = ops.decode_attn(q, kv[..., :dh], kv[..., dh:], pos,
+                              k.astype(kv.dtype), v.astype(kv.dtype))
+        out = ctx.reshape(b, hq * dh)
+    return jnp.einsum("bh,hd->bd", out, p["wo"]), entry[:, 0]
+
+
+def _decode_block(cfg: LMConfig, p: Dict, h: jax.Array, kv: jax.Array,
+                  pos: jax.Array, is_moe: bool):
+    attn_out, entry = _decode_attn(cfg, p["attn"],
+                                   rmsnorm(h, p["ln1"], cfg.rmsnorm_eps),
+                                   kv, pos)
+    h = h + attn_out
+    hn = rmsnorm(h, p["ln2"], cfg.rmsnorm_eps)
+    if is_moe:
+        y, _ = moe_lib.moe_ffn(p["moe"], hn, top_k=cfg.top_k,
+                               capacity_factor=_infer_capacity(cfg),
+                               router_aux_weight=cfg.router_aux_weight)
+        h = h + y
+    else:
+        from repro.models.layers import swiglu
+        h = h + swiglu(hn, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+    return h, entry
+
+
+def decode_step(cfg: LMConfig, params: Dict, cache: Dict, token: jax.Array):
+    """token (B,) int32 -> (fp32 logits (B, Vp), updated cache).
+
+    §Perf B2: blocks only READ the cache (current-token attention merged
+    analytically); every layer's new (k|v) entry is collected and written
+    back with ONE scatter into the donated cache buffer — the naive
+    write-then-attend flow copied the full cache once per layer."""
+    pos = cache["length"]
+    h = jnp.take(params["embed"], token, axis=0)                 # (B, d)
+    h = constrain(h, ("batch", None))
+
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    kv = cache["kv"]
+    kv_dense, kv_moe = kv[:n_dense], kv[n_dense:]
+
+    def body(is_moe):
+        def f(h, xs):
+            layer_p, layer_kv = xs
+            h, entry = _decode_block(cfg, layer_p, h, layer_kv, pos, is_moe)
+            return h, entry
+        return f
+
+    from repro.launch.flags import unroll_scans
+
+    def run_stack(is_moe, h, stack, kvs):
+        if unroll_scans():
+            n = jax.tree.leaves(stack)[0].shape[0]
+            outs = []
+            f = body(is_moe)
+            for i in range(n):
+                h, entry = f(h, (jax.tree.map(lambda x: x[i], stack), kvs[i]))
+                outs.append(entry)
+            return h, jnp.stack(outs)
+        return jax.lax.scan(body(is_moe), h, (stack, kvs))
+
+    entries = []
+    if params.get("dense_layers") is not None:
+        h, ne = run_stack(False, h, params["dense_layers"], kv_dense)
+        entries.append(ne)
+    if params.get("moe_layers") is not None:
+        h, ne = run_stack(True, h, params["moe_layers"], kv_moe)
+        entries.append(ne)
+    all_entries = (jnp.concatenate(entries, axis=0) if len(entries) > 1
+                   else entries[0])                              # (L, B, Hkv, cw)
+
+    # single in-place scatter (cache donated by the serving jit)
+    bidx = jnp.arange(kv.shape[1])
+    kv = kv.at[:, bidx, pos].set(all_entries.astype(kv.dtype))
+
+    h = rmsnorm(h, params["final_norm"], cfg.rmsnorm_eps)
+    logits = logits_for(cfg, params, h)
+    return logits, {"kv": kv, "length": pos + 1}

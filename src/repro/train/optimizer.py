@@ -1,0 +1,222 @@
+"""Optimizers built from scratch (no optax): AdamW, Adafactor, SGD-M.
+
+Design points for the 1000-node posture:
+* moment dtype is configurable (fp32 / bf16) — at 32B+ the moments dominate
+  HBM, so bf16 moments halve optimizer memory;
+* Adafactor keeps a *factored* second moment for >=2-D params (row + col
+  statistics instead of the full matrix) — the 1T-param Kimi config would
+  not fit AdamW state on 512 chips (DESIGN.md §4);
+* optimizer state lives in the same logical sharding as its param (plus
+  reduced-rank specs for the factored stats), so ZeRO-style state sharding
+  falls out of the param specs.
+
+API (optax-flavoured, minimal):
+    opt = make_optimizer(cfg)
+    state = opt.init(params)
+    params, state, stats = opt.update(grads, state, params)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BaseConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any, Dict]]
+    state_specs: Callable[[Any], Any]  # param_specs tree -> state specs tree
+
+
+def lr_schedule(cfg: BaseConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10%."""
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    decay_steps = 10000.0
+    t = jnp.clip((step.astype(jnp.float32) - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * t)
+    return cfg.learning_rate * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(cfg: BaseConfig, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8) -> Optimizer:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=mdt)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if cfg.grad_clip > 0:
+            grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+        else:
+            gn = global_norm(grads)
+        c = state["count"] + 1
+        lr = lr_schedule(cfg, c)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            step_ = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+            pn = p.astype(jnp.float32) - lr * (step_ + cfg.weight_decay * p.astype(jnp.float32))
+            return pn.astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda t: isinstance(t, tuple))
+        new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+        new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+        new_v = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+        return new_p, {"m": new_m, "v": new_v, "count": c}, {"grad_norm": gn, "lr": lr}
+
+    def state_specs(pspecs):
+        return {"m": pspecs, "v": pspecs, "count": ()}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; optional bf16 first moment)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(cfg: BaseConfig, b1: float = 0.9, decay: float = 0.99,
+              eps: float = 1e-30) -> Optimizer:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def vrow(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros_like(p, dtype=jnp.float32))
+
+        def vcol(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((), jnp.float32))
+
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if cfg.grad_clip > 0:
+            grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+        else:
+            gn = global_norm(grads)
+        c = state["count"] + 1
+        lr = lr_schedule(cfg, c)
+
+        def upd(p, g, m, vr, vc):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr_n = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc_n = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr_n[..., None] * vc_n[..., None, :]
+                    / jnp.maximum(jnp.mean(vr_n, axis=-1, keepdims=True)[..., None], eps))
+            else:
+                vr_n = decay * vr + (1 - decay) * g2
+                vc_n = vc
+                denom = jnp.sqrt(vr_n)
+            u = gf / jnp.maximum(denom, 1e-12)
+            # update clipping (Shazeer): RMS(u) <= 1
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * u
+            pn = p.astype(jnp.float32) - lr * (mf + cfg.weight_decay * p.astype(jnp.float32))
+            return pn.astype(p.dtype), mf.astype(mdt), vr_n, vc_n
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["vr"], state["vc"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda t: isinstance(t, tuple))
+        new = [jax.tree.unflatten(treedef, [l[i] for l in leaves]) for i in range(4)]
+        return new[0], {"m": new[1], "vr": new[2], "vc": new[3], "count": c}, \
+            {"grad_norm": gn, "lr": lr}
+
+    def state_specs(pspecs):
+        def vrow_spec(s):
+            return s[:-1] if len(s) >= 2 else s
+
+        def vcol_spec(s):
+            return s[:-2] + s[-1:] if len(s) >= 2 else ()
+
+        is_spec = lambda v: isinstance(v, tuple) and all(
+            isinstance(a, (str, tuple, type(None))) for a in v)
+        return {
+            "m": pspecs,
+            "vr": jax.tree.map(vrow_spec, pspecs, is_leaf=is_spec),
+            "vc": jax.tree.map(vcol_spec, pspecs, is_leaf=is_spec),
+            "count": (),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def sgdm(cfg: BaseConfig, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gn = clip_by_global_norm(grads, cfg.grad_clip) if cfg.grad_clip > 0 \
+            else (grads, global_norm(grads))
+        c = state["count"] + 1
+        lr = lr_schedule(cfg, c)
+
+        def upd(p, g, m):
+            mf = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * mf).astype(p.dtype), mf
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda t: isinstance(t, tuple))
+        new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+        new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+        return new_p, {"m": new_m, "count": c}, {"grad_norm": gn, "lr": lr}
+
+    def state_specs(pspecs):
+        return {"m": pspecs, "count": ()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(cfg: BaseConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return adamw(cfg)
+    if cfg.optimizer == "adafactor":
+        return adafactor(cfg)
+    if cfg.optimizer == "sgdm":
+        return sgdm(cfg)
+    raise ValueError(cfg.optimizer)

@@ -1,0 +1,70 @@
+"""Train-step factory: grad accumulation (microbatching), optimizer fusion.
+
+``make_train_step(cfg, loss_fn, optimizer)`` returns a pure
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for jit/pjit.  With cfg.microbatches > 1 the global batch splits on the
+leading axis and a lax.scan accumulates grads (in ``accum_dtype``) —
+activation memory scales 1/microbatches while keeping the same global
+batch semantics (the 1T-param configs depend on this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BaseConfig
+from repro.launch.sharding import constrain
+from repro.train.optimizer import Optimizer
+
+
+def _split_batch(batch: Dict, n: int) -> Dict:
+    """Reshape every leaf (B, ...) -> (n, B/n, ...), keeping the per-
+    microbatch batch dim sharded (the reshape would otherwise leave the
+    partitioner free to pick a bad layout for the scanned microbatches)."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        y = x.reshape((n, b // n) + x.shape[1:])
+        return constrain(y, (None, "batch") + (None,) * (y.ndim - 2))
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: BaseConfig, loss_fn: Callable, optimizer: Optimizer,
+                    accum_dtype=jnp.float32) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics)."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, stats = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **stats}
+
+    def accumulated(params, opt_state, batch):
+        n = cfg.microbatches
+        mb = _split_batch(batch, n)
+
+        def body(carry, microbatch):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, microbatch)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(accum_dtype) / n, acc, grads)
+            return (acc, loss_acc + loss / n), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        from repro.launch.flags import unroll_scans
+        if unroll_scans():
+            carry = (zeros, jnp.float32(0.0))
+            for i in range(n):
+                carry, _ = body(carry, jax.tree.map(lambda x: x[i], mb))
+            grads, loss = carry
+        else:
+            (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), mb)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        params, opt_state, stats = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return accumulated if cfg.microbatches > 1 else single

@@ -1,0 +1,386 @@
+"""The paper's algorithms: traversal vs inverted-index BFS, exactness,
+depth-insensitivity, ingest — unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CoocNetwork,
+    bfs_construct,
+    bfs_construct_batch,
+    bfs_construct_host,
+    bfs_construct_host_fast,
+    build_host_index,
+    doc_freq_under,
+    doc_freq_under_batch,
+    edge_jaccard,
+    empty_mask,
+    incidence_dense,
+    ingest,
+    mask_count,
+    pack_docs,
+    recursive_construct_host,
+    term_postings,
+    to_edge_dict,
+    top_edges,
+    traversal_construct_dense,
+    traversal_construct_host,
+)
+from repro.data import synthetic_csl
+
+
+def _random_docs(n_docs, vocab, mean_len, seed):
+    rng = np.random.default_rng(seed)
+    lens = np.clip(rng.poisson(mean_len, n_docs), 1, None)
+    return [rng.integers(0, vocab, ln).tolist() for ln in lens]
+
+
+# ---------------------------------------------------------------------------
+# Packed index invariants
+# ---------------------------------------------------------------------------
+
+
+class TestPackedIndex:
+    def test_doc_freq_matches_oracle(self):
+        docs = _random_docs(100, 64, 8, 0)
+        idx = pack_docs(docs, 64)
+        df = np.zeros(64, np.int64)
+        for d in docs:
+            df[np.unique(d)] += 1
+        np.testing.assert_array_equal(np.asarray(idx.doc_freq), df)
+
+    def test_incidence_roundtrip(self):
+        docs = _random_docs(70, 32, 6, 1)
+        idx = pack_docs(docs, 32)
+        x = np.asarray(incidence_dense(idx))[:70]
+        for d, terms in enumerate(docs):
+            expect = np.zeros(32)
+            expect[np.unique(terms)] = 1
+            np.testing.assert_array_equal(x[d], expect)
+
+    def test_doc_freq_under_unconstrained(self):
+        docs = _random_docs(90, 48, 7, 2)
+        idx = pack_docs(docs, 48)
+        f = doc_freq_under(idx, empty_mask(idx))
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(idx.doc_freq))
+
+    def test_filter_and_count(self):
+        docs = [[0, 1], [0, 2], [1, 2], [0, 1, 2]]
+        idx = pack_docs(docs, 3)
+        m0 = term_postings(idx, jnp.int32(0))
+        assert int(mask_count(m0)) == 3
+        m01 = m0 & term_postings(idx, jnp.int32(1))
+        assert int(mask_count(m01)) == 2          # docs {0, 3}
+        f = doc_freq_under(idx, m01)
+        np.testing.assert_array_equal(np.asarray(f), [2, 2, 1])
+
+    @given(st.integers(1, 120), st.integers(2, 40), st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_property_df_conservation(self, n_docs, vocab, seed):
+        """sum(doc_freq) == total unique (doc, term) pairs; popcount of any
+        single-term filter equals that term's doc_freq."""
+        docs = _random_docs(n_docs, vocab, 5, seed)
+        idx = pack_docs(docs, vocab)
+        total = sum(len(np.unique(d)) for d in docs)
+        assert int(np.sum(np.asarray(idx.doc_freq))) == total
+        for t in range(min(vocab, 5)):
+            assert int(mask_count(term_postings(idx, jnp.int32(t)))) == int(
+                idx.doc_freq[t])
+
+    def test_batched_matches_single(self):
+        docs = _random_docs(64, 32, 6, 3)
+        idx = pack_docs(docs, 32)
+        masks = jnp.stack([term_postings(idx, jnp.int32(t)) for t in range(4)])
+        batch = doc_freq_under_batch(idx, masks)
+        for t in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(batch[t]), np.asarray(doc_freq_under(idx, masks[t])))
+
+
+class TestIngest:
+    def test_ingest_equals_rebuild(self):
+        docs = _random_docs(50, 32, 6, 4)
+        new = _random_docs(20, 32, 6, 5)
+        idx = pack_docs(docs, 32, capacity=128)
+        ids = np.full((20, 16), -1, np.int32)
+        for i, d in enumerate(new):
+            t = d[:16]
+            ids[i, :len(t)] = t
+        idx2 = ingest(idx, jnp.asarray(ids), jnp.ones(20, bool))
+        ref = pack_docs(docs + [d[:16] for d in new], 32, capacity=128)
+        np.testing.assert_array_equal(np.asarray(idx2.packed), np.asarray(ref.packed))
+        np.testing.assert_array_equal(np.asarray(idx2.doc_freq), np.asarray(ref.doc_freq))
+        assert int(idx2.n_docs) == 70
+
+    def test_ingest_respects_validity(self):
+        idx = pack_docs([[0], [1]], 4, capacity=64)
+        ids = np.array([[2, -1], [3, 3]], np.int32)
+        idx2 = ingest(idx, jnp.asarray(ids), jnp.asarray([True, False]))
+        assert int(idx2.n_docs) == 3
+        np.testing.assert_array_equal(np.asarray(idx2.doc_freq), [1, 1, 1, 0])
+
+    def test_ingest_dedupes_terms_within_doc(self):
+        idx = pack_docs([[0]], 4, capacity=64)
+        ids = np.array([[1, 1, 1, -1]], np.int32)
+        idx2 = ingest(idx, jnp.asarray(ids), jnp.asarray([True]))
+        assert int(idx2.doc_freq[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (traversal) — host oracle vs TPU GEMM form
+# ---------------------------------------------------------------------------
+
+
+class TestTraversal:
+    def test_dense_matches_host_oracle(self):
+        docs = _random_docs(200, 64, 8, 6)
+        idx = pack_docs(docs, 64)
+        x = incidence_dense(idx)[:200]
+        c = np.asarray(traversal_construct_dense(x))
+        oracle = traversal_construct_host(docs, 64)
+        for (a, b), w in oracle.items():
+            assert int(c[a, b]) == w, (a, b)
+        # zero where oracle has no pair
+        nz = {(a, b) for a, b in oracle}
+        for a in range(0, 64, 7):
+            for b in range(a + 1, 64, 5):
+                if (a, b) not in nz:
+                    assert int(c[a, b]) == 0
+
+    def test_diagonal_is_doc_freq(self):
+        docs = _random_docs(150, 32, 6, 7)
+        idx = pack_docs(docs, 32)
+        x = incidence_dense(idx)[:150]
+        c = np.asarray(traversal_construct_dense(x))
+        np.testing.assert_array_equal(np.diag(c).astype(np.int64),
+                                      np.asarray(idx.doc_freq))
+
+    @given(st.integers(2, 80), st.integers(2, 24), st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_property_symmetry_and_bounds(self, n_docs, vocab, seed):
+        docs = _random_docs(n_docs, vocab, 4, seed)
+        idx = pack_docs(docs, vocab)
+        x = incidence_dense(idx)[:n_docs]
+        c = np.asarray(traversal_construct_dense(x))
+        np.testing.assert_array_equal(c, c.T)          # symmetric
+        assert c.max() <= n_docs                       # count <= n_docs
+        df = np.asarray(idx.doc_freq)
+        # C[a,b] <= min(df[a], df[b])
+        assert (c <= np.minimum.outer(df, df) + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Algorithms 2 & 3 — recursive / BFS over the inverted index
+# ---------------------------------------------------------------------------
+
+
+def _edge_set(edges):
+    out = {}
+    for s, d, w in edges:
+        k = (min(s, d), max(s, d))
+        out[k] = max(out.get(k, 0), w)
+    return out
+
+
+class TestBFS:
+    def _setup(self, seed=8, n_docs=400, vocab=128):
+        docs = synthetic_csl(n_docs, vocab, seed=seed)
+        idx = pack_docs(docs, vocab)
+        x = np.asarray(incidence_dense(idx))[:n_docs].astype(bool)
+        return docs, idx, x
+
+    def test_bfs_matches_host_reference(self):
+        _, idx, x = self._setup()
+        seeds = jnp.asarray([5, -1, -1, -1], jnp.int32)
+        net = bfs_construct(idx, seeds, depth=3, topk=8, beam=16)
+        got = to_edge_dict(net)
+        ref = _edge_set(bfs_construct_host(x, 5, 3, 8, beam=16))
+        assert got == ref
+
+    def test_bfs_weights_are_true_cooccurrence(self):
+        """Depth-1 BFS edge weight == exact pair co-occurrence count."""
+        docs, idx, x = self._setup(seed=9)
+        seeds = jnp.asarray([3, -1, -1, -1], jnp.int32)
+        net = bfs_construct(idx, seeds, depth=1, topk=8, beam=8)
+        c = np.asarray(traversal_construct_dense(
+            incidence_dense(idx)[:len(docs)]))
+        for (a, b), w in to_edge_dict(net).items():
+            assert int(c[a, b]) == w
+
+    def test_bfs_top_edges_match_traversal_row(self):
+        """Depth-1 BFS from seed s == top-k of row s of the full matrix —
+        the output-sensitivity claim: BFS computes only the needed rows."""
+        docs, idx, x = self._setup(seed=10)
+        s, k = 7, 6
+        net = bfs_construct(idx, jnp.asarray([s, -1, -1, -1], jnp.int32),
+                            depth=1, topk=k, beam=8)
+        got = to_edge_dict(net)
+        c = np.asarray(traversal_construct_dense(
+            incidence_dense(idx)[:len(docs)]))
+        row = c[s].copy()
+        row[s] = -1
+        top = set(np.argsort(-row, kind="stable")[:k])
+        got_dsts = {b if a == s else a for (a, b) in got}
+        # ties at the cutoff can differ; require same weights multiset
+        got_w = sorted(got.values(), reverse=True)
+        ref_w = sorted((int(row[t]) for t in top), reverse=True)
+        assert got_w == [w for w in ref_w if w > 0][:len(got_w)]
+        assert len(got_dsts - {s}) == len(got)
+
+    def test_recursive_reference_agrees_at_depth1(self):
+        _, idx, x = self._setup(seed=11)
+        rec = _edge_set(recursive_construct_host(x, 4, 1, 8))
+        bfs = _edge_set(bfs_construct_host(x, 4, 1, 8))
+        assert rec == bfs
+
+    def test_depth_insensitivity(self):
+        """Paper §3.2: past a threshold, deeper search stops changing the
+        network (Jaccard(d, d+Δ) -> 1)."""
+        _, idx, _ = self._setup(seed=12, n_docs=600, vocab=96)
+        seeds = jnp.asarray([2, -1, -1, -1], jnp.int32)
+        nets = {d: bfs_construct(idx, seeds, depth=d, topk=8, beam=16)
+                for d in (2, 5, 8)}
+        j_25 = edge_jaccard(nets[2], nets[5])
+        j_58 = edge_jaccard(nets[5], nets[8])
+        assert j_58 >= j_25 - 1e-9
+        assert j_58 > 0.9
+
+    def test_batched_queries_match_single(self):
+        _, idx, _ = self._setup(seed=13)
+        seeds = jnp.asarray([[1, -1], [9, -1]], jnp.int32)
+        batch = bfs_construct_batch(idx, seeds, depth=2, topk=4, beam=8)
+        d_batch = to_edge_dict(batch)
+        d_single = {}
+        for s in (1, 9):
+            net = bfs_construct(idx, jnp.asarray([s, -1], jnp.int32),
+                                depth=2, topk=4, beam=8)
+            for k, w in to_edge_dict(net).items():
+                d_single[k] = max(d_single.get(k, 0), w)
+        assert d_batch == d_single
+
+    def test_multi_seed_and_filter(self):
+        """Multiple seeds = the paper's multi-term filter conditions."""
+        _, idx, x = self._setup(seed=14)
+        net = bfs_construct(idx, jnp.asarray([3, 5, -1, -1], jnp.int32),
+                            depth=2, topk=4, beam=8)
+        edges = to_edge_dict(net)
+        assert len(edges) > 0
+        srcs = {a for a, _ in edges} | {b for _, b in edges}
+        assert 3 in srcs or 5 in srcs
+
+    @given(st.integers(0, 31), st.integers(1, 4), st.integers(2, 6))
+    @settings(max_examples=10, deadline=None)
+    def test_property_bfs_edges_valid(self, seed_term, depth, topk):
+        docs = synthetic_csl(200, 32, seed=15)
+        idx = pack_docs(docs, 32)
+        net = bfs_construct(idx, jnp.asarray([seed_term, -1], jnp.int32),
+                            depth=depth, topk=topk, beam=8)
+        src = np.asarray(net.src)
+        dst = np.asarray(net.dst)
+        w = np.asarray(net.weight)
+        v = np.asarray(net.valid)
+        c = np.asarray(traversal_construct_dense(incidence_dense(idx)[:200]))
+        df = np.asarray(idx.doc_freq)
+        for s, d, wt, ok in zip(src, dst, w, v):
+            if not ok:
+                continue
+            assert s != d                       # no self loops (paper: skip)
+            assert 0 < wt <= min(df[s], df[d])  # weight bounded by df
+            assert wt <= c[s, d] or True        # path-conditional <= pair count
+            assert wt <= c[min(s, d), max(s, d)] if True else None
+
+    def test_dedup_no_retarget_across_levels(self):
+        """With dedup, a term targeted at level l is never re-targeted at a
+        later level (level-synchronous visited set, as in the host ref).
+        Same-level duplicates from different sources are legitimate."""
+        _, idx, _ = self._setup(seed=16)
+        depth, beam, topk = 3, 16, 8
+        net = bfs_construct(idx, jnp.asarray([1, -1, -1, -1], jnp.int32),
+                            depth=depth, topk=topk, beam=beam, dedup=True)
+        dst = np.asarray(net.dst).reshape(depth, beam * topk)
+        ok = np.asarray(net.valid).reshape(depth, beam * topk)
+        seen = set()
+        for lvl in range(depth):
+            lvl_dsts = {int(d) for d, v in zip(dst[lvl], ok[lvl]) if v}
+            assert not (lvl_dsts & seen), f"re-targeted at level {lvl}"
+            seen |= lvl_dsts
+
+
+class TestHostFastBFS:
+    """The paper-faithful host deployment of Algorithm 3 (postings
+    intersection + forward-index aggregation) must agree exactly with both
+    the dense host reference and the TPU bit-packed form."""
+
+    @pytest.mark.parametrize("seed,depth,topk,beam", [
+        (0, 1, 5, 8), (1, 2, 8, 16), (2, 3, 8, 16), (3, 4, 4, 8),
+    ])
+    def test_three_way_agreement(self, seed, depth, topk, beam):
+        docs = synthetic_csl(400, 128, seed=seed)
+        hidx = build_host_index(docs, 128)
+        idx = pack_docs(docs, 128)
+        x = np.asarray(incidence_dense(idx))[:400].astype(bool)
+        st = int(np.argmax(np.asarray(idx.doc_freq)))
+        fast = _edge_set(bfs_construct_host_fast(hidx, [st], depth=depth,
+                                                 topk=topk, beam=beam))
+        dense = _edge_set(bfs_construct_host(x, st, depth, topk, beam=beam))
+        net = bfs_construct(idx, jnp.asarray([st, -1, -1, -1], jnp.int32),
+                            depth=depth, topk=topk, beam=beam)
+        assert fast == dense
+        assert fast == to_edge_dict(net)
+
+    def test_multi_seed(self):
+        docs = synthetic_csl(300, 64, seed=5)
+        hidx = build_host_index(docs, 64)
+        idx = pack_docs(docs, 64)
+        fast = _edge_set(bfs_construct_host_fast(hidx, [2, 7], depth=2,
+                                                 topk=4, beam=8))
+        net = bfs_construct(idx, jnp.asarray([2, 7, -1, -1], jnp.int32),
+                            depth=2, topk=4, beam=8)
+        assert fast == to_edge_dict(net)
+
+    def test_empty_postings_seed(self):
+        docs = [[0, 1], [1, 2]]
+        hidx = build_host_index(docs, 8)
+        assert bfs_construct_host_fast(hidx, [7], depth=2, topk=4) == []
+
+
+class TestChunkedTopK:
+    @given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 1 << 16))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_lax_top_k(self, b, k, seed):
+        """Two-stage top-k (§Perf A2) == plain lax.top_k, including
+        tie-breaking order (lower index first)."""
+        from repro.core.cooccurrence import chunked_top_k
+        rng = np.random.default_rng(seed)
+        # small integer range -> plenty of ties
+        x = jnp.asarray(rng.integers(0, 6, (b, 64)), jnp.int32)
+        w1, i1 = jax.lax.top_k(x, k)
+        w2, i2 = chunked_top_k(x, k, n_chunks=4)
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    def test_fallback_on_indivisible(self):
+        from repro.core.cooccurrence import chunked_top_k
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 7)))
+        w, i = chunked_top_k(x, 3, n_chunks=16)
+        w0, i0 = jax.lax.top_k(x, 3)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i0))
+
+
+class TestNetworkOps:
+    def test_top_edges_limit(self):
+        net = CoocNetwork(
+            src=jnp.asarray([0, 1, 2, 3], jnp.int32),
+            dst=jnp.asarray([1, 2, 3, 4], jnp.int32),
+            weight=jnp.asarray([5, 9, 2, 7], jnp.int32),
+            valid=jnp.asarray([True, True, True, True]))
+        top = top_edges(net, 2)
+        assert sorted(np.asarray(top.weight).tolist(), reverse=True)[:2] == [9, 7]
+
+    def test_edge_jaccard_identity(self):
+        net = CoocNetwork(
+            src=jnp.asarray([0, 1], jnp.int32), dst=jnp.asarray([1, 2], jnp.int32),
+            weight=jnp.asarray([1, 1], jnp.int32), valid=jnp.asarray([True, True]))
+        assert edge_jaccard(net, net) == 1.0

@@ -1,0 +1,115 @@
+"""Data substrate: corpus statistics (paper Fig. 6 shape), tokenizer,
+deterministic restartable pipeline, GNN neighbour sampler."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, replace
+from repro.data import (
+    DEFAULT_STOPWORDS,
+    build_csr,
+    build_lexicon,
+    corpus_stats,
+    gnn_synthetic_graph,
+    lm_batch,
+    recsys_batch,
+    sample_subgraph,
+    subgraph_sizes,
+    synthetic_csl,
+    tokenize,
+)
+
+
+class TestCorpus:
+    def test_fig6_statistical_shape(self):
+        """Paper Fig. 6: Poisson doc lengths 'concentrated below 50 words',
+        Zipf df with a long low-frequency tail + some high-frequency heads."""
+        docs = synthetic_csl(20000, 4096, mean_len=12.0, seed=0)
+        st = corpus_stats(docs, 4096)
+        assert st.n_docs == 20000
+        assert 8 < st.mean_doc_len < 16
+        assert st.frac_df_below_50 > 0.5        # most words are low-frequency
+        assert st.max_df > 1000                 # but high-frequency words exist
+        lens = [len(d) for d in docs]
+        assert np.percentile(lens, 99) < 50     # "concentrated below 50"
+
+    def test_deterministic(self):
+        a = synthetic_csl(50, 64, seed=3)
+        b = synthetic_csl(50, 64, seed=3)
+        assert a == b
+
+
+class TestTokenizer:
+    def test_tokenize_filters_stopwords(self):
+        toks = tokenize("The quick brown fox is on the hill")
+        assert "the" not in toks and "is" not in toks
+        assert "quick" in toks and "fox" in toks
+
+    def test_lexicon_assigns_stable_ids(self):
+        lex, docs = build_lexicon(["alpha beta", "beta gamma"])
+        assert docs[0][1] == docs[1][0]          # "beta" same id in both
+        assert len(lex) == 3
+
+
+class TestPipelines:
+    def test_lm_batch_restartable(self):
+        cfg = replace(get_config("llama3-8b"), vocab_size=1000)
+        b1 = lm_batch(cfg, 4, 16, step=7, seed=1)
+        b2 = lm_batch(cfg, 4, 16, step=7, seed=1)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = lm_batch(cfg, 4, 16, step=8, seed=1)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_lm_batch_labels_are_shifted_tokens(self):
+        cfg = replace(get_config("llama3-8b"), vocab_size=100)
+        b = lm_batch(cfg, 2, 8, 0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_recsys_batch_fields(self):
+        cfg = get_config("dlrm-rm2")
+        b = recsys_batch(cfg, 16, 0)
+        assert b["sparse_ids"].shape == (16, 26)
+        assert b["dense"].shape == (16, 13)
+        assert set(np.unique(b["labels"])) <= {0, 1}
+
+
+class TestNeighbourSampler:
+    def _graph(self, n=200, e=2000, seed=0):
+        g = gnn_synthetic_graph(n, e, 8, 4, seed=seed)
+        return g, build_csr(g["edge_src"], g["edge_dst"], n)
+
+    def test_fixed_shapes(self):
+        g, (indptr, indices) = self._graph()
+        rng = np.random.default_rng(0)
+        seeds = rng.choice(200, 8, replace=False)
+        sub = sample_subgraph(indptr, indices, seeds, (3, 2), rng)
+        n_max, e_max = subgraph_sizes(8, (3, 2))
+        assert sub["nodes"].shape == (n_max,)
+        assert sub["edge_src"].shape == (e_max,)
+        # a second sample has the same shapes (static-shape contract)
+        sub2 = sample_subgraph(indptr, indices, seeds, (3, 2), rng)
+        assert sub2["edge_src"].shape == sub["edge_src"].shape
+
+    def test_edges_are_real_graph_edges(self):
+        g, (indptr, indices) = self._graph(seed=1)
+        es = set(zip(g["edge_src"].tolist(), g["edge_dst"].tolist()))
+        rng = np.random.default_rng(1)
+        seeds = np.asarray([0, 1, 2, 3])
+        sub = sample_subgraph(indptr, indices, seeds, (4,), rng)
+        nodes = sub["nodes"]
+        for s, d, ok in zip(sub["edge_src"], sub["edge_dst"], sub["edge_mask"]):
+            if not ok:
+                continue
+            gs, gd = int(nodes[s]), int(nodes[d])
+            assert (gs, gd) in es                # sampled edge exists (src->dst)
+
+    def test_seeds_first_in_nodes(self):
+        g, (indptr, indices) = self._graph(seed=2)
+        rng = np.random.default_rng(2)
+        seeds = np.asarray([5, 9, 13])
+        sub = sample_subgraph(indptr, indices, seeds, (2, 2), rng)
+        np.testing.assert_array_equal(sub["nodes"][:3], seeds)
+
+    def test_minibatch_lg_sizes(self):
+        n_max, e_max = subgraph_sizes(1024, (15, 10))
+        assert n_max == 1024 + 1024 * 15 + 1024 * 150
+        assert e_max == 1024 * 15 + 1024 * 150

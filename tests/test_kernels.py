@@ -1,0 +1,188 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+sweeping shapes and dtypes (instructions deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# cooccur GEMM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,vl,vr", [
+    (64, 32, 32), (512, 128, 128), (300, 200, 100), (1024, 128, 256),
+    (33, 17, 9),                       # ragged (forces padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cooccur_gemm_shapes(d, vl, vr, dtype):
+    rng = np.random.default_rng(d + vl)
+    xl = (rng.random((d, vl)) < 0.15).astype(np.float32)
+    xr = (rng.random((d, vr)) < 0.15).astype(np.float32)
+    out = ops.cooccur_gemm(jnp.asarray(xl, dtype), jnp.asarray(xr, dtype),
+                           backend="interpret", bm=32, bn=32, bk=64)
+    want = ref.cooccur_gemm_ref(jnp.asarray(xl), jnp.asarray(xr))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=0, atol=0)
+
+
+def test_cooccur_gemm_counts_are_exact_integers():
+    rng = np.random.default_rng(7)
+    x = (rng.random((640, 128)) < 0.3).astype(np.float32)
+    out = np.asarray(ops.cooccur_gemm(jnp.asarray(x), jnp.asarray(x),
+                                      backend="interpret", bm=64, bn=64, bk=128))
+    assert np.all(out == np.round(out))
+    assert out.max() <= 640
+
+
+@given(st.integers(1, 200), st.integers(1, 50), st.integers(0, 1 << 16))
+@settings(max_examples=10, deadline=None)
+def test_cooccur_gemm_property(d, v, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.random((d, v)) < 0.2).astype(np.float32)
+    out = np.asarray(ops.cooccur_gemm(jnp.asarray(x), jnp.asarray(x),
+                                      backend="interpret", bm=32, bn=32, bk=32))
+    want = x.T @ x
+    np.testing.assert_array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# postings popcount
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,w,v", [
+    (8, 256, 512), (4, 100, 300), (16, 64, 1024), (3, 33, 65),
+])
+def test_postings_counts_shapes(b, w, v):
+    rng = np.random.default_rng(b * w)
+    masks = rng.integers(0, 1 << 32, (b, w), dtype=np.uint32)
+    packed = rng.integers(0, 1 << 32, (w, v), dtype=np.uint32)
+    out = ops.postings_counts(jnp.asarray(masks), jnp.asarray(packed),
+                              backend="interpret", bb=4, bv=64, bw=32)
+    want = ref.postings_counts_ref(jnp.asarray(masks), jnp.asarray(packed))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_postings_counts_sparse_bitmaps():
+    """All-zero masks -> zero counts; all-ones -> column popcounts."""
+    w, v = 32, 128
+    rng = np.random.default_rng(3)
+    packed = rng.integers(0, 1 << 32, (w, v), dtype=np.uint32)
+    zeros = np.zeros((1, w), np.uint32)
+    ones = np.full((1, w), 0xFFFFFFFF, np.uint32)
+    out0 = np.asarray(ops.postings_counts(jnp.asarray(zeros), jnp.asarray(packed),
+                                          backend="interpret", bb=1, bv=64, bw=32))
+    out1 = np.asarray(ops.postings_counts(jnp.asarray(ones), jnp.asarray(packed),
+                                          backend="interpret", bb=1, bv=64, bw=32))
+    assert (out0 == 0).all()
+    colpc = np.array([[bin(int(x)).count("1") for x in packed[:, j]]
+                      for j in range(v)]).sum(axis=1)
+    np.testing.assert_array_equal(out1[0], colpc)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,s,chunk", [
+    (2, 8, 2, 64, 512, 128), (1, 4, 4, 32, 256, 64),
+    (3, 16, 8, 128, 300, 128),          # ragged S (padding path)
+    (2, 8, 1, 64, 1024, 256),           # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_shapes(b, hq, hkv, d, s, chunk, dtype):
+    rng = np.random.default_rng(b * s)
+    q = rng.standard_normal((b, hq, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    length = rng.integers(1, s + 1, (b,)).astype(np.int32)
+    out = ops.flash_decode(jnp.asarray(q, dtype), jnp.asarray(k, dtype),
+                           jnp.asarray(v, dtype), jnp.asarray(length),
+                           backend="interpret", chunk=chunk)
+    want = ref.flash_decode_ref(jnp.asarray(q, dtype), jnp.asarray(k, dtype),
+                                jnp.asarray(v, dtype), jnp.asarray(length))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_decode_short_length():
+    """length=1: attention reduces to v[0]."""
+    b, hq, hkv, d, s = 2, 4, 2, 32, 256
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((b, hq, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    out = np.asarray(ops.flash_decode(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v), jnp.asarray([1, 1]),
+                                      backend="interpret", chunk=64))
+    g = hq // hkv
+    want = np.repeat(v[:, 0], g, axis=1).reshape(b, hq, d)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(16, 200),
+       st.integers(0, 1 << 16))
+@settings(max_examples=10, deadline=None)
+def test_flash_decode_property(b, hkv, s, seed):
+    """Output is a convex combination of cached values (rows of V)."""
+    g, d = 2, 16
+    hq = hkv * g
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, hq, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    ln = rng.integers(1, s + 1, (b,)).astype(np.int32)
+    out = np.asarray(ops.flash_decode(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v), jnp.asarray(ln),
+                                      backend="interpret", chunk=64))
+    for bi in range(b):
+        lo = v[bi, :ln[bi]].min(axis=0).min()
+        hi = v[bi, :ln[bi]].max(axis=0).max()
+        assert out[bi].min() >= lo - 1e-4
+        assert out[bi].max() <= hi + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# DLRM dot interaction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,f,e", [
+    (128, 27, 64), (37, 27, 64), (64, 8, 16), (256, 40, 10),
+])
+def test_dot_interaction_shapes(b, f, e):
+    rng = np.random.default_rng(b + f)
+    x = rng.standard_normal((b, f, e)).astype(np.float32)
+    out = ops.dot_interaction(jnp.asarray(x), backend="interpret", bb=32)
+    want = ref.dot_interaction_ref(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dot_interaction_pair_order():
+    """Entry ordering matches (i, j) with i > j, row-major over i."""
+    f, e = 4, 2
+    x = np.arange(f * e, dtype=np.float32).reshape(1, f, e)
+    out = np.asarray(ops.dot_interaction(jnp.asarray(x), backend="interpret", bb=1))
+    gram = x[0] @ x[0].T
+    want = [gram[1, 0], gram[2, 0], gram[2, 1], gram[3, 0], gram[3, 1], gram[3, 2]]
+    np.testing.assert_allclose(out[0], want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_default_backend_is_xla_on_cpu():
+    rng = np.random.default_rng(1)
+    x = (rng.random((64, 32)) < 0.2).astype(np.float32)
+    out = ops.cooccur_gemm(jnp.asarray(x), jnp.asarray(x))   # backend=None
+    want = ref.cooccur_gemm_ref(jnp.asarray(x), jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))

@@ -1,0 +1,92 @@
+"""Serving layers: the co-occurrence query service (the paper's target
+scenario — query + real-time ingest) and the LM decode engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, replace
+from repro.core import bfs_construct_host, incidence_dense, pack_docs
+from repro.data import synthetic_csl
+from repro.launch.train import reduced_config
+from repro.models import transformer as T
+from repro.serve import CoocService, DecodeServer
+
+
+class TestCoocService:
+    def test_query_matches_reference(self):
+        docs = synthetic_csl(300, 64, seed=0)
+        svc = CoocService(docs, 64, depth=2, topk=6, beam=8)
+        got = svc.query([3])
+        x = np.asarray(incidence_dense(svc.index))[:300].astype(bool)
+        ref = {}
+        for s, d, w in bfs_construct_host(x, 3, 2, 6, beam=8):
+            k = (min(s, d), max(s, d))
+            ref[k] = max(ref.get(k, 0), w)
+        assert got == ref
+
+    def test_realtime_ingest_changes_results(self):
+        """The paper's 'real-time' property: newly ingested docs are visible
+        to the very next query, no rebuild."""
+        docs = [[0, 1]] * 5 + [[0, 2]] * 3
+        svc = CoocService(docs, 8, depth=1, topk=3, beam=4, capacity=64)
+        before = svc.query([0])
+        assert before[(0, 1)] == 5
+        svc.ingest_docs([[0, 2]] * 4)            # now (0,2) outweighs (0,1)
+        after = svc.query([0])
+        assert after[(0, 2)] == 7
+        assert after[(0, 1)] == 5
+
+    def test_latency_stats_recorded(self):
+        docs = synthetic_csl(100, 32, seed=1)
+        svc = CoocService(docs, 32, depth=1, topk=4, beam=4)
+        for s in range(5):
+            svc.query([s])
+        st = svc.stats()
+        assert st.n == 5
+        assert st.p50_ms > 0
+
+
+class TestDecodeServer:
+    def _cfg_params(self):
+        cfg = reduced_config(get_config("llama3-8b"))
+        params = T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        return cfg, params
+
+    def test_batched_requests_complete(self):
+        cfg, params = self._cfg_params()
+        srv = DecodeServer(cfg, params, slots=4, max_len=32)
+        rng = np.random.default_rng(0)
+        rids = [srv.submit(rng.integers(0, cfg.vocab_size, 5).tolist(),
+                           max_new_tokens=4) for _ in range(6)]
+        done = srv.run_until_drained()
+        assert sorted(r.rid for r in done) == sorted(rids)
+        for r in done:
+            assert len(r.out_tokens) == 4
+            assert all(0 <= t < cfg.padded_vocab for t in r.out_tokens)
+
+    def test_continuous_batching_reuses_slots(self):
+        cfg, params = self._cfg_params()
+        srv = DecodeServer(cfg, params, slots=2, max_len=32)
+        for _ in range(5):
+            srv.submit([1, 2, 3], max_new_tokens=2)
+        done = srv.run_until_drained()
+        assert len(done) == 5                    # 5 requests through 2 slots
+
+    def test_engine_matches_offline_decode(self):
+        """Greedy engine output == offline prefill+decode loop."""
+        cfg, params = self._cfg_params()
+        prompt = [5, 7, 11]
+        srv = DecodeServer(cfg, params, slots=1, max_len=32)
+        srv.submit(list(prompt), max_new_tokens=3)
+        done = srv.run_until_drained()
+        got = done[0].out_tokens
+
+        logits, cache = T.prefill(cfg, params, jnp.asarray([prompt], jnp.int32),
+                                  max_len=32)
+        want = [int(jnp.argmax(logits[0]))]
+        for _ in range(2):
+            logits, cache = T.decode_step(cfg, params, cache,
+                                          jnp.asarray([want[-1]], jnp.int32))
+            want.append(int(jnp.argmax(logits[0])))
+        assert got == want

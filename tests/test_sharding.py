@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules + mesh planning + a miniature dry-run on a
+virtual 8-device mesh (subprocess — device count is locked per process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as S
+from repro.launch.mesh import make_host_mesh
+
+
+def _mesh():
+    return make_host_mesh()   # (n_cpu, 1) ("data", "model")
+
+
+class TestLogicalRules:
+    def test_identity_outside_context(self):
+        x = jnp.ones((4, 4))
+        y = S.constrain(x, ("batch", None))
+        assert y is x
+
+    def test_resolution_inside_context(self):
+        with S.axis_rules(_mesh()):
+            spec = S.logical_to_spec(("batch", "ff"), (8, 8))
+            assert spec[0] in ("data", ("data",), ("pod", "data"))
+
+    def test_indivisible_degrades_to_replication(self):
+        with S.axis_rules(_mesh(), rules={"weird": ("data",)}):
+            # dim 7 not divisible by data axis (1 divides everything -> the
+            # rule only matters on >1 axes; simulate with a fake rule check)
+            spec = S.logical_to_spec(("weird",), (7,))
+            # with data=1 everything divides; just assert no crash + valid spec
+            assert isinstance(spec, P)
+
+    def test_axis_used_once_per_tensor(self):
+        with S.axis_rules(_mesh()):
+            spec = S.logical_to_spec(("batch", "batch"), (8, 8))
+            flat = []
+            for p in spec:
+                if p is None:
+                    continue
+                flat.extend(p if isinstance(p, tuple) else (p,))
+            assert len(flat) == len(set(flat))
+
+    def test_rule_override(self):
+        with S.axis_rules(_mesh(), rules={"batch": ()}):
+            spec = S.logical_to_spec(("batch",), (8,))
+            assert spec == P(None)
+
+
+class TestParamSpecs:
+    def test_lm_param_specs_cover_tree(self):
+        from repro.configs import get_config, replace
+        from repro.models import transformer as T
+        cfg = replace(get_config("llama3-8b"), n_layers=2)
+        params_s = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = T.param_specs(cfg)
+        jax.tree.map(lambda s, p: None, specs, params_s,
+                     is_leaf=lambda v: isinstance(v, tuple) and all(
+                         isinstance(a, (str, tuple, type(None))) for a in v))
+
+    def test_moe_param_specs_cover_tree(self):
+        from repro.configs import get_config, replace
+        from repro.models import transformer as T
+        cfg = replace(get_config("kimi-k2-1t-a32b"), n_layers=3, n_experts=8)
+        params_s = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        specs = T.param_specs(cfg)
+        jax.tree.map(lambda s, p: None, specs, params_s,
+                     is_leaf=lambda v: isinstance(v, tuple) and all(
+                         isinstance(a, (str, tuple, type(None))) for a in v))
+
+
+MINI_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["REPRO_UNROLL_SCANS"] = "0"
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config, replace
+    from repro.launch.cells import plan_cell
+    from repro.launch.sharding import axis_rules
+    import repro.configs.llama3_8b as L
+    import repro.configs.base as B
+
+    # shrink the production mesh to (4, 2) for the in-test virtual devices
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # reduced llama config with a small shape set
+    cfg = replace(get_config("llama3-8b"), n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+                  fsdp=True, attn_q_chunk=0,
+                  shapes=(B.ShapeSpec("t", "train",
+                                      dict(seq_len=32, global_batch=8)),
+                          B.ShapeSpec("d", "decode",
+                                      dict(seq_len=64, global_batch=8))))
+    L.CONFIG = cfg
+    import repro.configs
+    repro.configs._ARCH_MODULES  # registry still points at the module
+
+    with axis_rules(mesh):
+        for shp in ("t", "d"):
+            plan = plan_cell("llama3-8b", shp)
+            jf = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate_argnums)
+            compiled = jf.lower(*plan.args).compile()
+            assert compiled.cost_analysis() is not None
+            print("MINI-DRYRUN-OK", shp)
+""")
+
+
+def test_mini_dryrun_8_virtual_devices():
+    """End-to-end lower+compile of train & decode cells on a virtual 4x2
+    mesh — the same machinery the production dry-run uses."""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", MINI_DRYRUN], env=env,
+                       capture_output=True, text=True, cwd=os.path.dirname(
+                           os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.count("MINI-DRYRUN-OK") == 2
+
+
+class TestRooflineParser:
+    def test_collective_parsing(self):
+        from repro.launch import roofline as RL
+        hlo = """
+  %ag = f32[8,128]{1,0} all-gather(f32[1,128]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %y), replica_groups=[4,2]<=[8], to_apply=%add
+  %cp = f32[32]{0} collective-permute(f32[32]{0} %z), source_target_pairs={{0,1}}
+"""
+        st = RL.parse_collectives(hlo)
+        assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                             "collective-permute": 1}
+        ag = 8 * 128 * 4 * 7 / 8
+        ar = 2 * 64 * 4 * 1 / 2
+        cp = 32 * 4
+        assert abs(st.bytes_by_kind["all-gather"] - ag) < 1
+        assert abs(st.bytes_by_kind["all-reduce"] - ar) < 1
+        assert abs(st.bytes_by_kind["collective-permute"] - cp) < 1
+
+    def test_roofline_terms(self):
+        from repro.launch import roofline as RL
+        from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+        r = RL.Roofline(flops_per_dev=1e12, hbm_bytes_per_dev=1e9,
+                        coll_bytes_per_dev=1e8, n_chips=256,
+                        model_flops=2e14)
+        assert r.t_compute == pytest.approx(1e12 / PEAK_FLOPS_BF16)
+        assert r.t_memory == pytest.approx(1e9 / HBM_BW)
+        assert r.t_collective == pytest.approx(1e8 / ICI_BW)
+        assert r.bottleneck == "compute"
+        assert r.useful_ratio == pytest.approx(2e14 / (1e12 * 256))
+
+    def test_cell_registry_covers_40_assigned_plus_cooc(self):
+        from repro.launch.cells import all_cells
+        cells = list(all_cells())
+        assert len(cells) == 44                   # 40 assigned + 4 cooc
+        assert len(list(all_cells(include_cooc=False))) == 40
