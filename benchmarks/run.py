@@ -17,7 +17,7 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true",
                     help="smaller corpora (CI-speed)")
     ap.add_argument("--only", default=None,
-                    choices=("fig7", "fig5", "scaling", "roofline"))
+                    choices=("fig7", "fig5", "scaling", "engine", "roofline"))
     args = ap.parse_args()
 
     results = []
@@ -56,6 +56,11 @@ def main() -> int:
 
     from benchmarks import bench_scaling
     run_bench("scaling", bench_scaling.main)
+
+    from benchmarks import bench_engine_throughput
+    engine_argv = (["--n-docs", "1024", "--n-queries", "64"]
+                   if args.quick else [])
+    run_bench("engine", lambda: bench_engine_throughput.main(engine_argv))
 
     from benchmarks import roofline
     run_bench("roofline", roofline.main)

@@ -8,11 +8,17 @@ from repro.core.inverted_index import (  # noqa: F401
     doc_freq_under,
     doc_freq_under_batch,
     empty_mask,
+    grow_capacity,
     incidence_dense,
     ingest,
     mask_count,
     pack_docs,
     term_postings,
+)
+from repro.core.query_context import (  # noqa: F401
+    COUNT_METHODS,
+    CapacityError,
+    QueryContext,
 )
 from repro.core.cooccurrence import (  # noqa: F401
     HostIndex,

@@ -297,16 +297,36 @@ def chunked_top_k(x: jax.Array, k: int, n_chunks: int = 16):
     return w2, jnp.take_along_axis(gif, sel, axis=1)
 
 
+def _frontier_counts(index: PackedIndex, masks: jax.Array, method: str,
+                     x_dense: Optional[jax.Array]) -> jax.Array:
+    """Three-way frontier-expansion dispatch: masks (B, W) -> counts (B, V).
+
+    "gemm"     — unpack(masks) @ x_dense on the MXU (x_dense required);
+    "popcount" — AND + popcount over the packed bitmap, pure jnp (VPU);
+    "pallas"   — the same popcount op through the tiled Pallas postings
+                 kernel (compiled on TPU, interpret mode elsewhere;
+                 padding to tile multiples handled by kernels.ops).
+    """
+    if method == "gemm":
+        assert x_dense is not None, "gemm method needs the dense incidence"
+        return doc_freq_under_batch_gemm(masks, x_dense)
+    if method == "popcount":
+        return doc_freq_under_batch(index, masks)
+    if method == "pallas":
+        from repro.kernels import ops
+        return ops.postings_counts(masks, index.packed,
+                                   backend=ops.pallas_backend())
+    raise ValueError(f"unknown method {method!r}; "
+                     "choose from gemm / popcount / pallas")
+
+
 def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
-                  x_dense: Optional[jax.Array] = None):
+                  method: str, x_dense: Optional[jax.Array] = None):
     """One BFS level: batched frontier expansion + beam re-selection."""
     b = state.masks.shape[0]
     v = index.vocab_size
 
-    if x_dense is not None:                                     # MXU path (§Perf A1)
-        counts = doc_freq_under_batch_gemm(state.masks, x_dense)
-    else:                                                       # VPU popcount path
-        counts = doc_freq_under_batch(index, state.masks)       # (B, V) int32
+    counts = _frontier_counts(index, state.masks, method, x_dense)  # (B, V) int32
     # mask self-pairs, invalid rows, and (optionally) visited terms
     counts = counts.at[jnp.arange(b), jnp.clip(state.terms, 0)].set(-1)
     if dedup:
@@ -358,10 +378,16 @@ def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
     return new_state, edges
 
 
-def bfs_construct(index: PackedIndex, seed_terms: jax.Array, *, depth: int,
+def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
                   topk: int, beam: int, dedup: bool = True,
-                  method: str = "gemm") -> CoocNetwork:
-    """Paper Algorithm 3, TPU-adapted (see DESIGN.md §2).
+                  method: str = "gemm",
+                  x_dense: Optional[jax.Array] = None) -> CoocNetwork:
+    """Paper Algorithm 3, TPU-adapted (see README.md §Design).
+
+    index: a PackedIndex, or a ``QueryContext`` — with a context, cached
+    per-epoch operands (the gemm path's dense incidence) are pulled from
+    it instead of being rebuilt here, so a warm context performs ZERO
+    unpacks per query.
 
     seed_terms: (S,) int32, padded with -1 (S <= beam).  The frontier is a
     fixed-width beam of ``beam`` filter bitmaps; each level evaluates every
@@ -370,14 +396,23 @@ def bfs_construct(index: PackedIndex, seed_terms: jax.Array, *, depth: int,
     edge slots (invalid slots masked).
 
     method:
-      "gemm"     — unpack incidence once, counts = masks @ X on the MXU
-                   (EXPERIMENTS.md §Perf A1 — the optimized form);
+      "gemm"     — counts = unpack(masks) @ X on the MXU (EXPERIMENTS.md
+                   §Perf A1 — the optimized form).  X comes from
+                   ``x_dense`` (pass the context's cached, sharded copy
+                   when serving) or is unpacked here as a fallback;
       "popcount" — bit-packed AND + popcount streamed through the VPU
-                   (the paper-faithful-baseline TPU adaptation; the
-                   ``kernels.postings`` Pallas kernel implements it).
-    Both are exact (0/1 operands, fp32/int32 accumulation) and tested
+                   (the paper-faithful-baseline TPU adaptation);
+      "pallas"   — popcount via the tiled ``kernels.postings`` Pallas
+                   kernel (compiled on TPU, interpret mode on CPU).
+    All are exact (0/1 operands, fp32/int32 accumulation) and tested
     equal.
     """
+    from repro.core.query_context import QueryContext
+    if isinstance(index, QueryContext):
+        ctx = index
+        index = ctx.index
+        if x_dense is None:
+            x_dense = ctx.operands(method).get("x_dense")
     v = index.vocab_size
     b = beam
     s = seed_terms.shape[0]
@@ -394,16 +429,18 @@ def bfs_construct(index: PackedIndex, seed_terms: jax.Array, *, depth: int,
 
     state = BFSState(masks0, terms0.astype(jnp.int32), valid0, visited0)
 
-    x_dense = None
-    if method == "gemm":
-        # unpack ONCE (outside the level loop); padding rows beyond n_docs
-        # are all-zero bits so they can never contribute to counts
+    if method == "gemm" and x_dense is None:
+        # Legacy one-shot path (no context): unpack ONCE (outside the level
+        # loop); padding rows beyond n_docs are all-zero bits so they can
+        # never contribute to counts.  Serving goes through QueryContext,
+        # which unpacks once per ingest EPOCH and shards at build time.
         from repro.launch.sharding import constrain
         x_dense = constrain(incidence_dense(index, jnp.bfloat16),
                             ("docs", "terms"))
 
     def step(state, _):
-        new_state, edges = _expand_level(index, state, topk, dedup, x_dense)
+        new_state, edges = _expand_level(index, state, topk, dedup, method,
+                                         x_dense)
         return new_state, edges
 
     from repro.launch.flags import unroll_scans
@@ -424,17 +461,26 @@ def bfs_construct(index: PackedIndex, seed_terms: jax.Array, *, depth: int,
     )
 
 
-def bfs_construct_batch(index: PackedIndex, seed_terms: jax.Array, *, depth: int,
+def bfs_construct_batch(index, seed_terms: jax.Array, *, depth: int,
                         topk: int, beam: int, dedup: bool = True,
-                        method: str = "gemm") -> CoocNetwork:
+                        method: str = "gemm",
+                        x_dense: Optional[jax.Array] = None) -> CoocNetwork:
     """Batched queries (the web-service scenario): seed_terms (Q, S).
 
     vmaps the whole BFS over independent queries; the packed index (and
-    the gemm path's unpacked incidence) is closed over — broadcast, i.e.
-    sharded once, not replicated per query, under pjit.
+    the gemm path's unpacked incidence — whether cached in a QueryContext
+    or passed as ``x_dense``) is closed over — broadcast, i.e. sharded
+    once, not replicated per query, under pjit.
     """
+    from repro.core.query_context import QueryContext
+    if isinstance(index, QueryContext):
+        ctx = index
+        index = ctx.index
+        if x_dense is None:
+            x_dense = ctx.operands(method).get("x_dense")
     fn = functools.partial(bfs_construct, index, depth=depth, topk=topk,
-                           beam=beam, dedup=dedup, method=method)
+                           beam=beam, dedup=dedup, method=method,
+                           x_dense=x_dense)
     nets = jax.vmap(fn)(seed_terms)
     return CoocNetwork(
         src=nets.src.reshape(-1), dst=nets.dst.reshape(-1),

@@ -91,6 +91,27 @@ def pack_docs(doc_terms: Sequence[Sequence[int]], vocab_size: int,
     return PackedIndex(jnp.asarray(packed), jnp.asarray(df), jnp.asarray(n_docs, jnp.int32))
 
 
+def grow_capacity(index: PackedIndex, min_capacity: int) -> PackedIndex:
+    """Repack to a larger doc capacity (at least ``min_capacity``).
+
+    Capacity doubles until it fits, so repeated ingest-with-growth is
+    amortised O(1) per doc.  The packed bitmap only gains all-zero word
+    rows (doc ids are stable), so every existing filter/query result is
+    unchanged — callers' cached dense unpacks must still be invalidated
+    because X's doc axis grows (``QueryContext`` handles that via its
+    epoch).
+    """
+    if min_capacity <= index.capacity:
+        return index
+    cap = max(index.capacity, 32)
+    while cap < min_capacity:
+        cap *= 2
+    new_words = (cap + 31) // 32
+    packed = jnp.pad(index.packed,
+                     ((0, new_words - index.n_words), (0, 0)))
+    return PackedIndex(packed, index.doc_freq, index.n_docs)
+
+
 def incidence_dense(index: PackedIndex, dtype=jnp.float32) -> jax.Array:
     """Unpack to the dense incidence matrix X (D, V). D = capacity."""
     w = index.packed  # (W, V)

@@ -1,0 +1,141 @@
+"""QueryContext — the single execution abstraction behind every query path.
+
+Design notes (see README.md §Design):
+
+Before this existed, each jitted ``bfs_construct`` call re-unpacked the
+bit-packed index into the dense incidence matrix X (D, V) — per query, per
+service, with no reuse and no sharding at the unpack site.  The context
+inverts that: it owns the packed index plus **epoch-versioned derived
+artifacts** (today: the dense X used by the ``gemm`` method), builds them
+lazily ONCE per ingest epoch, and shards them at build time via
+``launch.sharding.constrain`` so the jitted query functions receive
+already-placed operands.
+
+* ``x_dense()``     — cached dense incidence, rebuilt iff the epoch moved.
+* ``ingest(...)``   — host-side capacity check (raise or grow-by-repack)
+                      BEFORE the jitted scatter, then an epoch bump; the
+                      stale cache is rebuilt exactly once, not per query.
+* ``operands(m)``   — the method dispatch table: per-method extra operands
+                      for ``bfs_construct`` (gemm needs X; popcount and
+                      pallas read the packed bitmap directly).
+
+The context is host-side state (plain Python object, NOT a pytree): jitted
+functions take ``(index, seeds, x_dense)`` as array arguments, so a new
+epoch is a new array — no retrace, no stale constants baked into traces.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inverted_index import (
+    PackedIndex,
+    grow_capacity,
+    incidence_dense,
+    ingest,
+    pack_docs,
+)
+
+#: methods understood by bfs_construct / the engine; values say which extra
+#: operand each one needs from the context.
+COUNT_METHODS = {
+    "gemm": ("x_dense",),     # counts = unpack(masks) @ X on the MXU
+    "popcount": (),           # AND + popcount over packed, pure jnp (VPU)
+    "pallas": (),             # same op through the Pallas postings kernel
+}
+
+
+class CapacityError(ValueError):
+    """Ingest would overflow the packed index's doc capacity."""
+
+
+class QueryContext:
+    """Packed index + epoch-versioned caches + method dispatch table."""
+
+    def __init__(self, index: PackedIndex, *, dtype=jnp.bfloat16):
+        self._index = index
+        self._dtype = dtype
+        self.epoch = 0
+        self._x_dense: Optional[jax.Array] = None
+        self._x_epoch = -1
+        self.unpack_count = 0   # monitoring: dense rebuilds == ingest epochs
+
+    @classmethod
+    def from_docs(cls, doc_terms: Sequence[Sequence[int]], vocab_size: int, *,
+                  capacity: Optional[int] = None, dtype=jnp.bfloat16
+                  ) -> "QueryContext":
+        return cls(pack_docs(doc_terms, vocab_size, capacity=capacity),
+                   dtype=dtype)
+
+    @property
+    def index(self) -> PackedIndex:
+        return self._index
+
+    @property
+    def vocab_size(self) -> int:
+        return self._index.vocab_size
+
+    @property
+    def n_docs(self) -> int:
+        return int(self._index.n_docs)
+
+    # -- cached artifacts ---------------------------------------------------
+
+    def x_dense(self) -> jax.Array:
+        """Dense incidence X (capacity, V), unpacked once per epoch and
+        sharded (docs, terms) at build time."""
+        if self._x_epoch != self.epoch:
+            from repro.launch.sharding import constrain
+            self._x_dense = constrain(
+                incidence_dense(self._index, self._dtype), ("docs", "terms"))
+            self._x_epoch = self.epoch
+            self.unpack_count += 1
+        return self._x_dense
+
+    def operands(self, method: str) -> dict:
+        """Extra (traced-array) operands ``bfs_construct`` needs for
+        ``method`` — the dispatch table realised against this context."""
+        needs = COUNT_METHODS.get(method)
+        if needs is None:
+            raise ValueError(
+                f"unknown method {method!r}; choose from {sorted(COUNT_METHODS)}")
+        return {name: getattr(self, name)() for name in needs}
+
+    # -- ingest path --------------------------------------------------------
+
+    def ingest(self, new_doc_terms: jax.Array, new_doc_valid: jax.Array, *,
+               on_overflow: str = "raise") -> None:
+        """Append documents; host-side capacity check BEFORE the jitted
+        scatter (the device scatter clamps out-of-range writes with
+        ``mode="drop"``, which silently loses docs — never acceptable in
+        the serving path).
+
+        on_overflow: "raise" -> CapacityError; "grow" -> double capacity
+        via :func:`grow_capacity` repack until the block fits.
+        """
+        n_new = int(np.asarray(new_doc_valid).sum())
+        needed = self.n_docs + n_new
+        if needed > self._index.capacity:
+            if on_overflow == "grow":
+                self._index = grow_capacity(self._index, needed)
+            else:
+                raise CapacityError(
+                    f"ingest of {n_new} docs would exceed capacity "
+                    f"{self._index.capacity} (n_docs={self.n_docs}); "
+                    f"pass on_overflow='grow' to repack")
+        self._index = ingest(self._index, new_doc_terms, new_doc_valid)
+        self.epoch += 1
+
+    def ingest_docs(self, doc_terms: Sequence[Sequence[int]], *,
+                    max_len: int = 64, on_overflow: str = "raise") -> None:
+        """Host convenience: pad token lists to (N, max_len) and ingest."""
+        n = len(doc_terms)
+        ids = np.full((n, max_len), -1, np.int32)
+        for i, terms in enumerate(doc_terms):
+            t = list(terms)[:max_len]
+            ids[i, :len(t)] = t
+        self.ingest(jnp.asarray(ids), jnp.asarray(np.ones((n,), bool)),
+                    on_overflow=on_overflow)

@@ -34,6 +34,12 @@ def _resolve(backend: Optional[str]) -> str:
     return "pallas" if _on_tpu() else "xla"
 
 
+def pallas_backend() -> str:
+    """Backend string that always exercises the Pallas kernel: compiled on
+    TPU, interpret mode elsewhere (CPU correctness/serving fallback)."""
+    return "pallas" if _on_tpu() else "interpret"
+
+
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     n = x.shape[axis]
     pad = (-n) % mult

@@ -60,8 +60,11 @@ def axis_rules(mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
     if rules:
         merged.update(rules)
     tok = _ACTIVE.set(_Ctx(mesh, merged))
+    # jax.sharding.set_mesh is the modern global-mesh setter; older jax
+    # versions use the Mesh object itself as the resource-env context.
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
     try:
-        with jax.sharding.set_mesh(mesh):
+        with (set_mesh(mesh) if set_mesh is not None else mesh):
             yield
     finally:
         _ACTIVE.reset(tok)

@@ -1,4 +1,10 @@
-"""Serving substrate: LM decode engine (continuous batching) and the
-paper's real-time co-occurrence query service."""
+"""Serving substrate: LM decode engine (continuous batching), the
+micro-batched co-occurrence query engine, and the thin CoocService shim
+(the paper's real-time query + ingest scenario)."""
+from repro.serve.cooc_engine import (  # noqa: F401
+    CoocEngine,
+    CoocRequest,
+    EngineStats,
+)
 from repro.serve.cooccur_service import CoocService, LatencyStats  # noqa: F401
 from repro.serve.engine import DecodeServer, Request  # noqa: F401

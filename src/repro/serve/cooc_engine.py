@@ -1,0 +1,192 @@
+"""CoocEngine — micro-batched co-occurrence query serving.
+
+Design notes (see README.md §Design):
+
+The paper's target is web-grade real-time construction over a LIVE index:
+many concurrent queries, continuous ingest.  One-query-at-a-time jit calls
+leave the accelerator mostly idle — the throughput lives in batched
+postings evaluation (Billerbeck et al., PAPERS.md).  This engine applies
+the same slot-admission pattern as :class:`repro.serve.engine.DecodeServer`
+to the BFS query path:
+
+* queries queue via :meth:`submit`;
+* each :meth:`step` admits up to ``q_batch`` of them into a fixed
+  ``(Q, S)`` seed batch (idle slots padded with -1 seeds, which produce no
+  edges by construction) and runs ONE jitted ``bfs_construct_batch``;
+* the per-epoch artifacts (gemm's dense incidence) come from the shared
+  :class:`repro.core.QueryContext` — cached, sharded, rebuilt only on
+  ingest — so a warm engine performs zero unpacks per query;
+* per-query latency and batch-occupancy statistics are recorded.
+
+The jit signature is shape-stable: always ``(Q, S)`` with ``S = beam``, so
+the engine compiles once per (method, shape) and never retraces as load
+varies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CoocNetwork,
+    PackedIndex,
+    QueryContext,
+    bfs_construct_batch,
+    to_edge_dict,
+)
+from repro.core.query_context import COUNT_METHODS
+
+
+@dataclasses.dataclass
+class CoocRequest:
+    rid: int
+    seed_terms: List[int]
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    edges: Optional[Dict[Tuple[int, int], int]] = None
+    batch_occupancy: int = 0     # queries sharing the batch that served this
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_submit) * 1e3
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n: int
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    max_ms: float
+    batches: int = 0
+    mean_occupancy: float = 0.0   # mean admitted queries per executed batch
+
+
+class CoocEngine:
+    """Micro-batched BFS query engine over a shared QueryContext."""
+
+    def __init__(self, ctx, *, depth: int = 3, topk: int = 16, beam: int = 32,
+                 q_batch: int = 8, method: str = "gemm", dedup: bool = True,
+                 on_overflow: str = "raise"):
+        if method not in COUNT_METHODS:
+            raise ValueError(f"unknown method {method!r}; "
+                             f"choose from {sorted(COUNT_METHODS)}")
+        if isinstance(ctx, PackedIndex):
+            ctx = QueryContext(ctx)
+        self.ctx: QueryContext = ctx
+        self.depth, self.topk, self.beam = depth, topk, beam
+        self.q_batch = q_batch
+        self.method = method
+        self.on_overflow = on_overflow
+        self.queue: List[CoocRequest] = []
+        self.finished: List[CoocRequest] = []
+        self.latencies_ms: List[float] = []
+        self.batch_occupancy: List[int] = []
+        self._next_rid = 0
+        self._run = jax.jit(functools.partial(
+            bfs_construct_batch, depth=depth, topk=topk, beam=beam,
+            dedup=dedup, method=method))
+
+    # -- query path ---------------------------------------------------------
+
+    def submit(self, seed_terms: Sequence[int]) -> int:
+        """Queue a query; returns its request id.
+
+        Raises ValueError when the seed set exceeds the beam — the frontier
+        holds ``beam`` slots, so extra seeds could only be dropped silently
+        (the old service truncated them, losing results without a signal).
+        """
+        seeds = [int(s) for s in seed_terms]
+        if len(seeds) > self.beam:
+            raise ValueError(
+                f"{len(seeds)} seed terms exceed beam={self.beam}; raise the "
+                f"engine's beam or split the query")
+        if not seeds:
+            raise ValueError("empty seed set")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(CoocRequest(rid, seeds,
+                                      t_submit=time.perf_counter()))
+        return rid
+
+    def step(self) -> int:
+        """Serve one micro-batch: admit up to q_batch queued queries, run
+        ONE jitted batched BFS, distribute results.  Returns #served."""
+        if not self.queue:
+            return 0
+        admitted = self.queue[:self.q_batch]
+        self.queue = self.queue[self.q_batch:]
+
+        seeds = np.full((self.q_batch, self.beam), -1, np.int32)
+        for i, req in enumerate(admitted):
+            seeds[i, :len(req.seed_terms)] = req.seed_terms
+        x_dense = (self.ctx.x_dense() if self.method == "gemm" else None)
+        net = self._run(self.ctx.index, jnp.asarray(seeds), x_dense=x_dense)
+        jax.block_until_ready(net.src)
+
+        src = np.asarray(net.src).reshape(self.q_batch, -1)
+        dst = np.asarray(net.dst).reshape(self.q_batch, -1)
+        w = np.asarray(net.weight).reshape(self.q_batch, -1)
+        valid = np.asarray(net.valid).reshape(self.q_batch, -1)
+        t_done = time.perf_counter()
+        occ = len(admitted)
+        self.batch_occupancy.append(occ)
+        for i, req in enumerate(admitted):
+            req.edges = to_edge_dict(CoocNetwork(src[i], dst[i], w[i], valid[i]))
+            req.t_done = t_done
+            req.batch_occupancy = occ
+            self.latencies_ms.append(req.latency_ms)
+            self.finished.append(req)
+        return occ
+
+    def run_until_drained(self, max_steps: int = 100000) -> List[CoocRequest]:
+        for _ in range(max_steps):
+            if not self.queue:
+                break
+            self.step()
+        return self.finished
+
+    def query(self, seed_terms: Sequence[int]) -> Dict[Tuple[int, int], int]:
+        """Synchronous convenience: submit + drain + return this query's
+        edges (earlier queued queries are served first, FIFO).
+
+        The returned request is REMOVED from ``finished`` — a long-lived
+        service looping on query() holds O(1) result state, not O(queries)
+        (latency scalars still accumulate for stats, as before).  Batch
+        users (submit + run_until_drained) read ``finished`` themselves
+        and should clear it between bursts.
+        """
+        rid = self.submit(seed_terms)
+        self.run_until_drained()
+        for i in range(len(self.finished) - 1, -1, -1):
+            if self.finished[i].rid == rid:
+                return self.finished.pop(i).edges
+        raise RuntimeError("request vanished")    # pragma: no cover
+
+    # -- ingest path --------------------------------------------------------
+
+    def ingest_docs(self, doc_terms: Sequence[Sequence[int]], *,
+                    max_len: int = 64) -> None:
+        """Real-time ingest through the context: host-side capacity check
+        (raise/grow per ``on_overflow``), jitted scatter, epoch bump — the
+        next batch sees the new docs and rebuilds the dense cache once."""
+        self.ctx.ingest_docs(doc_terms, max_len=max_len,
+                             on_overflow=self.on_overflow)
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> EngineStats:
+        xs = sorted(self.latencies_ms)
+        if not xs:
+            return EngineStats(0, 0, 0, 0, 0)
+        q = lambda p: xs[min(int(len(xs) * p), len(xs) - 1)]
+        occ = self.batch_occupancy
+        return EngineStats(len(xs), q(0.5), q(0.95), q(0.99), xs[-1],
+                           batches=len(occ),
+                           mean_occupancy=float(np.mean(occ)) if occ else 0.0)

@@ -3,32 +3,29 @@
 Serves BFS co-occurrence queries over a live (ingestable) inverted index
 with web-grade latency tracking (the paper reports < 0.16 s per query as
 meeting web-system requirements; §Paper-validation benchmarks reproduce
-that comparison).  Queries are answered by the jitted Algorithm-3 BFS;
-ingest appends documents to the packed index without rebuild — the
-"real-time and dynamic characteristics" the paper motivates.
+that comparison).
+
+This module is now a thin API-compatibility shim: the device path is
+served by :class:`repro.serve.cooc_engine.CoocEngine` over a shared
+:class:`repro.core.QueryContext` (cached incidence, micro-batched jitted
+queries — see README.md §Design); the host path keeps the paper-faithful
+postings implementation.  Ingest appends documents to the packed index
+without rebuild — the "real-time and dynamic characteristics" the paper
+motivates.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core import (
-    CoocNetwork,
-    Lexicon,
     PackedIndex,
-    bfs_construct,
+    QueryContext,
     bfs_construct_host_fast,
     build_host_index,
-    ingest,
-    pack_docs,
-    to_edge_dict,
 )
+from repro.serve.cooc_engine import CoocEngine
 
 
 @dataclasses.dataclass
@@ -43,26 +40,32 @@ class LatencyStats:
 class CoocService:
     """Holds the device index + host lexicon; answers queries & ingests.
 
-    engine="device": the TPU-native bit-packed BFS (jitted; pod-scale
-    throughput path — what the dry-run lowers).  engine="host": the
+    engine="device": the TPU-native bit-packed BFS through CoocEngine
+    (jitted, micro-batch of 1 — pod-scale throughput comes from using
+    CoocEngine directly with q_batch > 1).  engine="host": the
     paper-faithful postings implementation (lowest single-query latency on
     CPU).  Both produce identical networks (tested).
     """
 
     def __init__(self, doc_terms: Sequence[Sequence[int]], vocab_size: int,
                  *, capacity: Optional[int] = None, depth: int = 3,
-                 topk: int = 16, beam: int = 32, engine: str = "device"):
-        self.index: PackedIndex = pack_docs(doc_terms, vocab_size,
-                                            capacity=capacity)
+                 topk: int = 16, beam: int = 32, engine: str = "device",
+                 method: str = "gemm"):
+        self.ctx = QueryContext.from_docs(doc_terms, vocab_size,
+                                          capacity=capacity)
         self.vocab_size = vocab_size
         self.depth, self.topk, self.beam = depth, topk, beam
         self.engine = engine
         self.latencies_ms: List[float] = []
-        self._query = jax.jit(functools.partial(
-            bfs_construct, depth=depth, topk=topk, beam=beam))
+        self._engine = CoocEngine(self.ctx, depth=depth, topk=topk, beam=beam,
+                                  q_batch=1, method=method)
         self._docs: List[Sequence[int]] = list(doc_terms)
         self._hidx = (build_host_index(self._docs, vocab_size)
                       if engine == "host" else None)
+
+    @property
+    def index(self) -> PackedIndex:
+        return self.ctx.index
 
     def query(self, seed_terms: Sequence[int]) -> Dict[Tuple[int, int], int]:
         t0 = time.perf_counter()
@@ -75,23 +78,17 @@ class CoocService:
                 k = (min(s, d), max(s, d))
                 edges[k] = max(edges.get(k, 0), w)
         else:
-            seeds = np.full((self.beam,), -1, np.int32)
-            seeds[:len(seed_terms)] = list(seed_terms)[:self.beam]
-            net = self._query(self.index, jnp.asarray(seeds))
-            jax.block_until_ready(net.src)
-            edges = to_edge_dict(net)
+            # CoocEngine.submit raises ValueError when the seed set exceeds
+            # the beam (the old path silently truncated — data loss).
+            edges = self._engine.query(seed_terms)
         self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
         return edges
 
     def ingest_docs(self, doc_terms: Sequence[Sequence[int]],
                     max_len: int = 64) -> None:
-        n = len(doc_terms)
-        ids = np.full((n, max_len), -1, np.int32)
-        for i, terms in enumerate(doc_terms):
-            t = list(terms)[:max_len]
-            ids[i, :len(t)] = t
-        valid = np.ones((n,), bool)
-        self.index = ingest(self.index, jnp.asarray(ids), jnp.asarray(valid))
+        # Host-side capacity check happens in QueryContext.ingest (raises
+        # CapacityError instead of the old silent mode="drop" truncation).
+        self.ctx.ingest_docs(doc_terms, max_len=max_len)
         self._docs.extend([list(t)[:max_len] for t in doc_terms])
         if self.engine == "host":
             # host engine: rebuild is O(corpus); a production deployment

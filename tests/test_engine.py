@@ -1,0 +1,215 @@
+"""QueryContext + CoocEngine: cached incidence (epoch invalidation),
+micro-batched serving, capacity/beam guard rails, method dispatch parity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CapacityError,
+    QueryContext,
+    bfs_construct,
+    bfs_construct_batch,
+    grow_capacity,
+    pack_docs,
+    to_edge_dict,
+)
+from repro.core import cooccurrence as C
+from repro.data import synthetic_csl
+from repro.serve import CoocEngine, CoocService
+
+
+def _single(ctx, seed, *, depth=2, topk=6, beam=8, method="gemm"):
+    seeds = np.full((beam,), -1, np.int32)
+    seeds[0] = seed
+    return to_edge_dict(bfs_construct(ctx, jnp.asarray(seeds), depth=depth,
+                                      topk=topk, beam=beam, method=method))
+
+
+class TestQueryContext:
+    def test_warm_context_zero_unpacks_per_query(self, monkeypatch):
+        """Acceptance: with a warm context, method='gemm' performs ZERO
+        incidence_dense unpacks per query — one unpack per ingest epoch."""
+        docs = synthetic_csl(200, 64, seed=0)
+        ctx = QueryContext.from_docs(docs, 64)
+        calls = []
+        real = C.incidence_dense
+        monkeypatch.setattr(C, "incidence_dense",
+                            lambda *a, **k: calls.append(1) or real(*a, **k))
+        eng = CoocEngine(ctx, depth=2, topk=4, beam=8, q_batch=2)
+        eng.query([3])                       # warms the cache (1 unpack)
+        assert ctx.unpack_count == 1
+        # the context unpacks via its own module; bfs_construct's legacy
+        # in-trace unpack (cooccurrence.incidence_dense) must NOT fire even
+        # at trace time — the jitted graph receives the cached X operand
+        assert calls == []
+        calls.clear()
+        for s in (5, 7, 9):
+            eng.query([s])
+        assert calls == []                   # zero unpacks on warm queries
+        assert ctx.unpack_count == 1
+        eng.ingest_docs([[1, 2]] * 3)
+        eng.query([1])
+        assert ctx.unpack_count == 2         # exactly once per ingest epoch
+        eng.query([2])
+        assert ctx.unpack_count == 2
+
+    def test_epoch_invalidation_matches_fresh_context(self):
+        """query -> ingest -> query returns edges that include the newly
+        ingested docs, identical to a context built from the full corpus."""
+        docs = [[0, 1]] * 5 + [[0, 2]] * 3
+        new = [[0, 2]] * 4
+        ctx = QueryContext.from_docs(docs, 8, capacity=64)
+        before = _single(ctx, 0, depth=1, topk=3, beam=4)
+        assert before[(0, 1)] == 5
+        ctx.ingest_docs(new)
+        after = _single(ctx, 0, depth=1, topk=3, beam=4)
+        fresh = QueryContext.from_docs(docs + new, 8, capacity=64)
+        assert after == _single(fresh, 0, depth=1, topk=3, beam=4)
+        assert after[(0, 2)] == 7            # ingested docs visible
+
+    def test_operands_dispatch_table(self):
+        ctx = QueryContext.from_docs([[0, 1], [1, 2]], 4)
+        assert "x_dense" in ctx.operands("gemm")
+        assert ctx.operands("popcount") == {}
+        assert ctx.operands("pallas") == {}
+        with pytest.raises(ValueError, match="unknown method"):
+            ctx.operands("turbo")
+
+    def test_capacity_overflow_raises(self):
+        ctx = QueryContext.from_docs([[0, 1]] * 30, 4, capacity=32)
+        with pytest.raises(CapacityError, match="exceed capacity"):
+            ctx.ingest_docs([[2, 3]] * 3)
+        # index unchanged by the failed ingest
+        assert ctx.n_docs == 30
+        assert ctx.epoch == 0
+
+    def test_capacity_grow_repacks_and_matches_rebuild(self):
+        docs = [[0, 1]] * 30
+        new = [[1, 2]] * 20
+        ctx = QueryContext.from_docs(docs, 4, capacity=32)
+        ctx.ingest_docs(new, on_overflow="grow")
+        assert ctx.index.capacity >= 50
+        ref = pack_docs(docs + new, 4, capacity=ctx.index.capacity)
+        np.testing.assert_array_equal(np.asarray(ctx.index.packed),
+                                      np.asarray(ref.packed))
+        assert ctx.n_docs == 50
+
+    def test_grow_capacity_noop_when_fits(self):
+        idx = pack_docs([[0]] * 10, 4, capacity=64)
+        assert grow_capacity(idx, 32) is idx
+
+
+class TestCoocEngine:
+    def _setup(self, **kw):
+        docs = synthetic_csl(300, 64, seed=1)
+        ctx = QueryContext.from_docs(docs, 64)
+        return ctx, CoocEngine(ctx, depth=2, topk=6, beam=8, **kw)
+
+    def test_microbatch_matches_single_query(self):
+        ctx, eng = self._setup(q_batch=4)
+        seeds = [3, 5, 7, 9, 11, 13]
+        for s in seeds:
+            eng.submit([s])
+        done = eng.run_until_drained()
+        assert sorted(r.seed_terms[0] for r in done) == seeds
+        for r in done:
+            assert r.edges == _single(ctx, r.seed_terms[0])
+
+    def test_partial_batch_padding_slots_inert(self):
+        """5 queries through q_batch=4 -> batches of 4 and 1; the 3 idle
+        slots of the second batch must not leak edges anywhere."""
+        ctx, eng = self._setup(q_batch=4)
+        for s in (3, 5, 7, 9, 11):
+            eng.submit([s])
+        eng.run_until_drained()
+        st = eng.stats()
+        assert st.batches == 2
+        assert eng.batch_occupancy == [4, 1]
+        assert st.mean_occupancy == pytest.approx(2.5)
+        last = eng.finished[-1]
+        assert last.edges == _single(ctx, 11)
+
+    def test_latency_and_occupancy_stats(self):
+        _, eng = self._setup(q_batch=2)
+        for s in range(4):
+            eng.submit([s + 1])
+        eng.run_until_drained()
+        st = eng.stats()
+        assert st.n == 4
+        assert st.p50_ms > 0
+        assert st.batches == 2
+        assert st.mean_occupancy == 2.0
+        assert all(r.batch_occupancy == 2 for r in eng.finished)
+
+    def test_seed_overflow_raises(self):
+        _, eng = self._setup(q_batch=1)
+        with pytest.raises(ValueError, match="exceed beam"):
+            eng.submit(list(range(9)))       # beam=8
+        with pytest.raises(ValueError, match="empty"):
+            eng.submit([])
+
+    @pytest.mark.parametrize("method", ["popcount", "pallas"])
+    def test_method_parity_with_gemm(self, method):
+        ctx, eng_g = self._setup(q_batch=2)
+        eng_m = CoocEngine(ctx, depth=2, topk=6, beam=8, q_batch=2,
+                           method=method)
+        for s in (3, 9):
+            eng_g.submit([s])
+            eng_m.submit([s])
+        eng_g.run_until_drained()
+        eng_m.run_until_drained()
+        for rg, rm in zip(eng_g.finished, eng_m.finished):
+            assert rg.edges == rm.edges
+
+    def test_unknown_method_rejected(self):
+        ctx = QueryContext.from_docs([[0, 1]], 4)
+        with pytest.raises(ValueError, match="unknown method"):
+            CoocEngine(ctx, method="turbo")
+
+    def test_multi_seed_queries(self):
+        ctx, eng = self._setup(q_batch=2)
+        got = eng.query([2, 7])
+        seeds = np.full((8,), -1, np.int32)
+        seeds[:2] = (2, 7)
+        want = to_edge_dict(bfs_construct(ctx, jnp.asarray(seeds), depth=2,
+                                          topk=6, beam=8))
+        assert got == want
+
+    def test_engine_ingest_overflow_raises_before_scatter(self):
+        docs = [[0, 1]] * 30
+        ctx = QueryContext.from_docs(docs, 4, capacity=32)
+        eng = CoocEngine(ctx, depth=1, topk=3, beam=4, q_batch=1)
+        with pytest.raises(CapacityError):
+            eng.ingest_docs([[2, 3]] * 3)
+        grow = CoocEngine(ctx, depth=1, topk=3, beam=4, q_batch=1,
+                          on_overflow="grow")
+        grow.ingest_docs([[2, 3]] * 3)
+        assert ctx.n_docs == 33
+        assert grow.query([2])[(2, 3)] == 3
+
+
+class TestServiceShim:
+    def test_device_seed_overflow_raises(self):
+        docs = synthetic_csl(100, 32, seed=2)
+        svc = CoocService(docs, 32, depth=1, topk=4, beam=4)
+        with pytest.raises(ValueError, match="exceed beam"):
+            svc.query([1, 2, 3, 4, 5])
+
+    def test_ingest_overflow_raises(self):
+        svc = CoocService([[0, 1]] * 30, 4, capacity=32, depth=1, topk=3,
+                          beam=4)
+        with pytest.raises(CapacityError):
+            svc.ingest_docs([[2, 3]] * 3)
+
+
+class TestBatchedConstructContext:
+    def test_batch_accepts_context(self):
+        docs = synthetic_csl(200, 64, seed=3)
+        ctx = QueryContext.from_docs(docs, 64)
+        seeds = jnp.asarray([[1, -1], [9, -1]], jnp.int32)
+        via_ctx = to_edge_dict(bfs_construct_batch(ctx, seeds, depth=2,
+                                                   topk=4, beam=8))
+        via_idx = to_edge_dict(bfs_construct_batch(ctx.index, seeds, depth=2,
+                                                   topk=4, beam=8))
+        assert via_ctx == via_idx
+        assert ctx.unpack_count == 1         # batch pulled the cached X

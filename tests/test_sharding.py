@@ -85,13 +85,13 @@ MINI_DRYRUN = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from repro.configs import get_config, replace
     from repro.launch.cells import plan_cell
+    from repro.launch.mesh import make_mesh
     from repro.launch.sharding import axis_rules
     import repro.configs.llama3_8b as L
     import repro.configs.base as B
 
     # shrink the production mesh to (4, 2) for the in-test virtual devices
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     # reduced llama config with a small shape set
     cfg = replace(get_config("llama3-8b"), n_layers=2, d_model=64, n_heads=4,
                   n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,

@@ -9,6 +9,7 @@ import pytest
 
 from repro.configs import get_config, replace
 from repro.configs.base import LMConfig
+from repro.launch.mesh import make_mesh
 from repro.launch.train import train
 from repro.train import (
     StragglerWatchdog,
@@ -124,8 +125,7 @@ class TestCheckpoint:
         assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
 
     def test_restore_with_shardings(self, tmp_path):
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
         from jax.sharding import NamedSharding, PartitionSpec as P
         tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
         checkpoint.save(str(tmp_path), 1, tree)
@@ -154,8 +154,7 @@ class TestElastic:
         tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
         checkpoint.save(str(tmp_path), 2, tree)
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
         restored, _ = checkpoint.restore(
             str(tmp_path), tree,
             shardings={"w": NamedSharding(mesh, P(None, None))})
@@ -167,8 +166,7 @@ class TestCompression:
     def test_compressed_psum_single_shard_exact_feedback(self):
         """n=1 shard: quantisation error is carried in the residual, so two
         steps of the same gradient reconstruct it to within int8 precision."""
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
