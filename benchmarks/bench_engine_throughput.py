@@ -49,6 +49,8 @@ def _bench_one(ctx: QueryContext, seeds: np.ndarray, *, method: str, q: int,
     eng.run_until_drained()
     dt = time.perf_counter() - t0
     st = eng.stats()
+    # the whole homogeneous load compiles exactly one plan executable
+    assert eng.compiled_plans == 1, eng.compiled_plans
     return {
         "method": method, "q_batch": q, "n_queries": n_queries,
         "wall_s": dt, "qps": n_queries / dt,

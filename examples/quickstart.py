@@ -1,23 +1,19 @@
-"""Quickstart: build a co-occurrence network three ways and check they agree.
+"""Quickstart: text in, term-string co-occurrence network out — and a
+three-way agreement check between the algorithms.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. tokenise a tiny corpus (the paper's decoupled ingest),
-2. traversal baseline (Algorithm 1),
-3. optimized inverted-index BFS — host form (paper deployment) and
-   TPU bit-packed form (this framework's pod-scale design),
-4. print the heaviest edges with their term strings.
+1. build a string-level CoocIndex over a tiny corpus (tokeniser + lexicon
+   + packed inverted index + plan-aware engine, one facade),
+2. query it: heaviest edges around a seed term, as term strings,
+3. cross-check against the traversal baseline (Algorithm 1) and the
+   paper-faithful host BFS (Algorithm 3),
+4. ingest fresh documents and watch the next query reflect them.
 """
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api import CoocIndex
 from repro.core import (
-    bfs_construct,
     bfs_construct_host_fast,
     build_host_index,
-    pack_docs,
-    to_edge_dict,
-    top_edges,
     traversal_construct_host,
 )
 from repro.data import build_lexicon
@@ -37,44 +33,44 @@ CORPUS = [
 
 
 def main():
+    # the facade: tokenise + index + serve, one object
+    idx = CoocIndex.from_texts(CORPUS, depth=2, topk=6, beam=8, q_batch=4)
+    print(f"corpus: {idx.n_docs} docs, lexicon {idx.n_terms} terms")
+
+    edges = idx.network(["networks"])
+    print(f"optimized BFS (seed='networks'): {len(edges)} edges")
+
+    # cross-check 1 — the paper-faithful host implementation (Algorithm 3)
     lex, docs = build_lexicon(CORPUS)
-    v = len(lex)
-    print(f"corpus: {len(docs)} docs, lexicon {v} terms")
-
-    # Algorithm 1 — traversal baseline
-    trav = traversal_construct_host(docs, v)
-    print(f"traversal: {len(trav)} undirected weighted edges")
-
-    # Algorithm 3 — host (paper) and device (TPU form)
-    seed = lex.lookup("networks")
-    hidx = build_host_index(docs, v)
-    host_edges = bfs_construct_host_fast(hidx, [seed], depth=2, topk=6, beam=8)
-
-    index = pack_docs(docs, v)
-    net = bfs_construct(index, jnp.asarray([seed, -1, -1, -1], jnp.int32),
-                        depth=2, topk=6, beam=8)
-    dev_edges = to_edge_dict(net)
-
-    host_set = {}
-    for s, d, w in host_edges:
+    hidx = build_host_index(docs, len(lex))
+    host = {}
+    for s, d, w in bfs_construct_host_fast(hidx, [lex.lookup("networks")],
+                                           depth=2, topk=6, beam=8):
         k = (min(s, d), max(s, d))
-        host_set[k] = max(host_set.get(k, 0), w)
-    assert host_set == dev_edges, "host and TPU forms must agree"
-    print(f"optimized (seed='networks'): {len(dev_edges)} edges — "
-          f"host and TPU forms agree")
+        host[k] = max(host.get(k, 0), w)
+    host_str = {(lex.id_to_term[a], lex.id_to_term[b]): w
+                for (a, b), w in host.items()}
+    assert edges == host_str, "facade and host forms must agree"
+    print("facade (TPU form) and paper host form agree  [ok]")
+
+    # cross-check 2 — every edge weight equals the exact traversal count
+    trav = traversal_construct_host(docs, len(lex))
+    for (a, b), w in edges.items():
+        key = (min(lex.lookup(a), lex.lookup(b)),
+               max(lex.lookup(a), lex.lookup(b)))
+        assert trav.get(key) == w, (a, b, w, trav.get(key))
+    print("edge weights match the exact traversal counts  [ok]")
 
     print("\nheaviest edges around 'networks':")
-    best = top_edges(net, 8)
-    for s, d, w, ok in zip(np.asarray(best.src), np.asarray(best.dst),
-                           np.asarray(best.weight), np.asarray(best.valid)):
-        if ok:
-            print(f"  {lex.id_to_term[s]:>14} -- {lex.id_to_term[d]:<14} "
-                  f"(co-occurs in {w} docs)")
+    for a, b, w in idx.top(["networks"], limit=8):
+        print(f"  {a:>14} -- {b:<14} (co-occurs in {w} docs)")
 
-    # every BFS edge weight equals the exact traversal count
-    for (a, b), w in dev_edges.items():
-        assert trav.get((a, b), 0) == w or True
-    print("\nedge weights match the exact traversal counts  [ok]")
+    # real-time ingest: new docs (and new TERMS) visible to the next query
+    idx.add_documents(["inverted index networks accelerate retrieval"] * 2)
+    grown = idx.network(["accelerate"], depth=1)
+    assert grown[("networks", "accelerate")] == 2
+    print(f"\nafter ingesting 2 fresh docs, 'accelerate' (a brand-new term) "
+          f"has {len(grown)} edges — real-time visibility  [ok]")
 
 
 if __name__ == "__main__":

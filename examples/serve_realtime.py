@@ -2,34 +2,47 @@
 
     PYTHONPATH=src python examples/serve_realtime.py
 
-Stands up CoocService over a CSL-scale-shaped corpus, serves a burst of
-queries (latency percentiles vs the paper's 0.16 s web bar), then ingests
-fresh documents and shows the next query reflecting them immediately —
-the "real-time and dynamic characteristics" the paper motivates.  Finally
-serves the same burst through the micro-batched CoocEngine (one jitted
-batch per step, shared QueryContext cache) — the production serving path.
+Stands up the plan-aware CoocEngine over a CSL-scale-shaped corpus and
+serves a HETEROGENEOUS burst — mixed QuerySpecs (different depth/topk/
+beam/method) through one engine, results via futures — showing that the
+per-plan executor cache compiles once per distinct plan, not per query.
+Then ingests fresh documents and shows the next query reflecting them
+immediately (the "real-time and dynamic characteristics" the paper
+motivates), and finishes with the string-level CoocIndex facade.
 """
 import numpy as np
 
+from repro.api import CoocIndex
+from repro.core import QueryContext, QuerySpec
 from repro.data import synthetic_csl
-from repro.serve import CoocEngine, CoocService
+from repro.serve import CoocEngine
 
 
 def main():
     vocab, n_docs = 2048, 10000
     docs = synthetic_csl(n_docs, vocab, seed=0)
-    svc = CoocService(docs, vocab, capacity=n_docs + 4096, depth=2,
-                      topk=12, beam=16, engine="host")
+    ctx = QueryContext.from_docs(docs, vocab, capacity=n_docs + 4096)
+    eng = CoocEngine(ctx, q_batch=8, on_overflow="grow")
 
     df = np.bincount(np.concatenate([np.unique(d) for d in docs]),
                      minlength=vocab)
     hot = np.argsort(-df)[:32]
 
-    for t in hot:
-        svc.query([int(t)])
-    st = svc.stats()
-    print(f"{st.n} queries: p50 {st.p50_ms:.1f} ms  p95 {st.p95_ms:.1f} ms  "
-          f"p99 {st.p99_ms:.1f} ms  max {st.max_ms:.1f} ms")
+    # a mixed workload: three query plans interleaved, one engine
+    plans = [dict(depth=2, topk=12, beam=16),
+             dict(depth=1, topk=24, beam=8),
+             dict(depth=3, topk=6, beam=16, method="popcount")]
+    futures = [eng.submit(QuerySpec(seeds=(int(t),), **plans[i % 3]))
+               for i, t in enumerate(hot)]
+    results = [f.result() for f in futures]
+    st = eng.stats()
+    print(f"{st.n} mixed-plan queries in {st.batches} batches "
+          f"(mean occupancy {st.mean_occupancy:.1f}): "
+          f"p50 {st.p50_ms:.1f} ms  p95 {st.p95_ms:.1f} ms  "
+          f"p99 {st.p99_ms:.1f} ms")
+    print(f"compiled executables: {eng.compiled_plans} "
+          f"(= {len(plans)} distinct plans, NOT {st.n} queries)")
+    assert eng.compiled_plans == len(plans)
     bar = 160.0
     print(f"paper's web-real-time bar (<{bar:.0f} ms): "
           f"{'MET' if st.p99_ms < bar else 'missed'}")
@@ -39,28 +52,30 @@ def main():
     # (a, b) the anchor's heaviest co-occurrence, so it must enter the net)
     ranks = np.argsort(-df)
     a, b = int(ranks[300]), int(ranks[900])
-    before = svc.query([a]).get((min(a, b), max(a, b)), 0)
-    svc.ingest_docs([[a, b]] * 80)
-    after = svc.query([a]).get((min(a, b), max(a, b)), 0)
-    print(f"edge ({a},{b}) weight: {before} -> {after} after ingesting 80 "
-          f"fresh docs (real-time visibility)")
-    assert after >= before + 80
+    spec = QuerySpec(seeds=(a,), depth=2, topk=12, beam=16)
+    key = (min(a, b), max(a, b))
+    before = eng.submit(spec).result()
+    eng.ingest_docs([[a, b]] * 80)
+    after = eng.submit(spec).result()
+    w0, w1 = before.edges().get(key, 0), after.edges().get(key, 0)
+    print(f"edge ({a},{b}) weight: {w0} -> {w1} after ingesting 80 fresh "
+          f"docs (epoch {before.epoch} -> {after.epoch})")
+    assert w1 >= w0 + 80
+    assert eng.compiled_plans == len(plans)      # ingest didn't add a plan
     print("real-time ingest visible to the next query  [ok]")
 
-    # the production path: micro-batched engine over the service's own
-    # (already up-to-date) context — no re-pack, shared incidence cache
-    ctx = svc.ctx
-    eng = CoocEngine(ctx, depth=2, topk=12, beam=16, q_batch=8)
-    for t in hot:
-        eng.submit([int(t)])
-    eng.run_until_drained()
-    est = eng.stats()
-    print(f"engine: {est.n} queries in {est.batches} batches "
-          f"(mean occupancy {est.mean_occupancy:.1f}), p50 {est.p50_ms:.1f} ms; "
-          f"incidence unpacked {ctx.unpack_count}x for the whole burst")
-    check = eng.query([a]).get((min(a, b), max(a, b)), 0)
-    assert check == after, (check, after)
-    print("engine results match the service path  [ok]")
+    # the string-level facade: same engine machinery behind text in/out
+    idx = CoocIndex.from_texts(
+        ["inverted index serves real time queries",
+         "co-occurrence networks from an inverted index",
+         "real time ingest keeps the index fresh"],
+        depth=2, topk=8, beam=8)
+    print("\nCoocIndex over a toy text corpus:")
+    for s, d, w in idx.top(["index"], limit=5):
+        print(f"  {s:>14} -- {d:<14} (co-occurs in {w} docs)")
+    idx.add_documents(["fresh documents arrive and the index answers"])
+    assert "arrive" in idx
+    print("facade ingest-then-query round trip  [ok]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+"""Real-time co-occurrence network construction from an inverted index —
+JAX/Pallas reproduction + production serving engine.
+
+Entry points: :mod:`repro.api` (string-level :class:`~repro.api.CoocIndex`
+facade), :mod:`repro.core` (packed index, BFS construction, QuerySpec /
+QueryResult), :mod:`repro.serve` (CoocEngine, futures, CoocService shim).
+"""
+
+__version__ = "0.1.0"
+
+
+def __getattr__(name):
+    # lazy so `import repro` stays cheap; `repro.CoocIndex` still works
+    if name == "CoocIndex":
+        from repro.api import CoocIndex
+        return CoocIndex
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,128 @@
+"""repro.api — the string-level facade over the whole stack.
+
+The paper's end-to-end usage is text in, term-string co-occurrence network
+out: tokenise documents, maintain a lexicon + live inverted index, answer
+heterogeneous real-time queries.  :class:`CoocIndex` composes the existing
+layers — ``repro.data.tokenizer`` (tokenise + stopwords), ``Lexicon``
+(term <-> id), ``QueryContext`` (packed index + epoch-versioned caches) and
+``CoocEngine`` (plan-aware micro-batched serving) — behind one object::
+
+    from repro.api import CoocIndex
+
+    idx = CoocIndex.from_texts(["an inverted index maps terms to documents",
+                                "the index answers queries in real time"])
+    idx.network(["index"], depth=2)        # {(term_a, term_b): weight}
+    idx.add_documents(["fresh documents are visible immediately"])
+
+Both capacities are dynamic: the doc axis grows by repack on overflow
+(``on_overflow="grow"``) and the term axis grows as the lexicon mints new
+ids (``grow_vocab``, amortised-doubling) — a live service never has to
+size the index up front.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.core import Lexicon, QueryContext, QueryResult
+from repro.data.tokenizer import DEFAULT_STOPWORDS, tokenize
+from repro.serve.cooc_engine import CoocEngine, CoocFuture
+
+
+class CoocIndex:
+    """Text-level co-occurrence index: tokenizer + lexicon + live packed
+    index + plan-aware query engine.
+
+    The depth/topk/beam/dedup/method constructor arguments are the default
+    query plan; every query method accepts per-call overrides (they flow
+    into a :class:`QuerySpec` and are served through the engine's per-plan
+    executor cache).
+    """
+
+    def __init__(self, *, capacity: int = 1024, vocab_capacity: int = 256,
+                 depth: int = 2, topk: int = 16, beam: int = 32,
+                 dedup: bool = True, method: str = "gemm", q_batch: int = 8,
+                 stopwords: Set[str] = DEFAULT_STOPWORDS,
+                 on_overflow: str = "grow"):
+        self.lexicon = Lexicon()
+        self.stopwords = stopwords
+        self.ctx = QueryContext.from_docs([], max(int(vocab_capacity), 1),
+                                          capacity=max(int(capacity), 32))
+        self.engine = CoocEngine(self.ctx, depth=depth, topk=topk, beam=beam,
+                                 dedup=dedup, method=method, q_batch=q_batch,
+                                 on_overflow=on_overflow)
+
+    @classmethod
+    def from_texts(cls, texts: Sequence[str], **kwargs) -> "CoocIndex":
+        """Build an index over ``texts`` (constructor kwargs pass through)."""
+        idx = cls(**kwargs)
+        idx.add_documents(texts)
+        return idx
+
+    # -- ingest path --------------------------------------------------------
+
+    def add_documents(self, texts: Sequence[str]) -> int:
+        """Tokenise + ingest; new terms extend the lexicon (growing the
+        index's term axis when needed).  The docs are visible to the very
+        next query — the paper's real-time property.  Returns #docs added."""
+        docs = [[self.lexicon.add(w) for w in tokenize(t, self.stopwords)]
+                for t in texts]
+        if not docs:
+            return 0
+        if len(self.lexicon) > self.ctx.vocab_size:
+            self.ctx.grow_vocab(len(self.lexicon))
+        max_len = max(max((len(d) for d in docs), default=1), 1)
+        self.ctx.ingest_docs(docs, max_len=max_len,
+                             on_overflow=self.engine.on_overflow)
+        return len(docs)
+
+    # -- query path ---------------------------------------------------------
+
+    def term_id(self, term: str) -> int:
+        """Lexicon lookup (tokeniser-normalised); KeyError on unseen terms."""
+        tid = self.lexicon.term_to_id.get(str(term).lower())
+        if tid is None:
+            raise KeyError(f"term {term!r} not in lexicon "
+                           f"({len(self.lexicon)} terms indexed)")
+        return tid
+
+    def __contains__(self, term: str) -> bool:
+        return str(term).lower() in self.lexicon.term_to_id
+
+    def submit(self, seed_terms: Sequence[str], **params) -> CoocFuture:
+        """Queue a query rooted at ``seed_terms`` (strings); returns the
+        engine future.  ``params`` override the default plan
+        (depth/topk/beam/dedup/method)."""
+        seeds = tuple(self.term_id(t) for t in seed_terms)
+        return self.engine.submit(seeds, **params)
+
+    def query(self, seed_terms: Sequence[str], **params) -> QueryResult:
+        """Synchronous typed query: submit + drive to completion."""
+        return self.submit(seed_terms, **params).result()
+
+    def network(self, seed_terms: Sequence[str],
+                **params) -> Dict[Tuple[str, str], int]:
+        """The string-level answer: {(term_a, term_b): co-occurrence count}
+        for the BFS network rooted at ``seed_terms``."""
+        res = self.query(seed_terms, **params)
+        id2t = self.lexicon.id_to_term
+        return {(id2t[a], id2t[b]): w for (a, b), w in res.edges().items()}
+
+    def top(self, seed_terms: Sequence[str], limit: int = 10,
+            **params) -> List[Tuple[str, str, int]]:
+        """The ``limit`` heaviest string edges, heaviest first."""
+        res = self.query(seed_terms, **params)
+        id2t = self.lexicon.id_to_term
+        return [(id2t[a], id2t[b], w) for a, b, w in res.top(limit)]
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_docs(self) -> int:
+        return self.ctx.n_docs
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.lexicon)
+
+    def stats(self):
+        return self.engine.stats()

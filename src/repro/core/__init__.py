@@ -9,11 +9,22 @@ from repro.core.inverted_index import (  # noqa: F401
     doc_freq_under_batch,
     empty_mask,
     grow_capacity,
+    grow_vocab,
     incidence_dense,
     ingest,
     mask_count,
     pack_docs,
     term_postings,
+)
+from repro.core.query import (  # noqa: F401
+    CountMethod,
+    PlanKey,
+    QueryResult,
+    QuerySpec,
+    count_method_names,
+    get_count_method,
+    register_count_method,
+    unregister_count_method,
 )
 from repro.core.query_context import (  # noqa: F401
     COUNT_METHODS,
@@ -27,6 +38,7 @@ from repro.core.cooccurrence import (  # noqa: F401
     bfs_construct_host,
     bfs_construct_host_fast,
     build_host_index,
+    construct,
     recursive_construct_host,
     traversal_construct_dense,
     traversal_construct_host,

@@ -24,21 +24,13 @@ of the whole path, i.e. conditional co-occurrence along the BFS path.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.inverted_index import (
-    PackedIndex,
-    and_term,
-    doc_freq_under_batch,
-    doc_freq_under_batch_gemm,
-    empty_mask,
-    incidence_dense,
-    term_postings,
-)
+from repro.core.inverted_index import PackedIndex, incidence_dense
 from repro.core.network import CoocNetwork
 
 
@@ -298,35 +290,65 @@ def chunked_top_k(x: jax.Array, k: int, n_chunks: int = 16):
 
 
 def _frontier_counts(index: PackedIndex, masks: jax.Array, method: str,
-                     x_dense: Optional[jax.Array]) -> jax.Array:
-    """Three-way frontier-expansion dispatch: masks (B, W) -> counts (B, V).
+                     operands: Mapping[str, jax.Array]) -> jax.Array:
+    """Frontier-expansion dispatch: masks (B, W) -> counts (B, V).
 
-    "gemm"     — unpack(masks) @ x_dense on the MXU (x_dense required);
+    Resolved through the single count-method registry in
+    :mod:`repro.core.query` — built-ins:
+
+    "gemm"     — unpack(masks) @ operands["x_dense"] on the MXU;
     "popcount" — AND + popcount over the packed bitmap, pure jnp (VPU);
     "pallas"   — the same popcount op through the tiled Pallas postings
                  kernel (compiled on TPU, interpret mode elsewhere;
                  padding to tile multiples handled by kernels.ops).
     """
-    if method == "gemm":
-        assert x_dense is not None, "gemm method needs the dense incidence"
-        return doc_freq_under_batch_gemm(masks, x_dense)
-    if method == "popcount":
-        return doc_freq_under_batch(index, masks)
-    if method == "pallas":
-        from repro.kernels import ops
-        return ops.postings_counts(masks, index.packed,
-                                   backend=ops.pallas_backend())
-    raise ValueError(f"unknown method {method!r}; "
-                     "choose from gemm / popcount / pallas")
+    from repro.core.query import get_count_method
+    m = get_count_method(method)
+    return m.fn(index, masks, operands)
+
+
+def _resolve_operands(index, method: str, x_dense: Optional[jax.Array],
+                      operands: Optional[Mapping[str, jax.Array]]
+                      ) -> Tuple[PackedIndex, Dict[str, jax.Array]]:
+    """Unwrap a QueryContext and assemble the method's operands mapping.
+
+    Precedence per needed operand: explicit ``operands`` entry > legacy
+    ``x_dense`` kwarg > the context's cached artifact (zero rebuilds on a
+    warm context) > the x_dense one-shot unpack fallback.  This is the one
+    place operand plumbing happens — registering a method with a new
+    ``needs`` entry requires no engine/bfs changes, only a new context
+    artifact.
+    """
+    from repro.core.query import get_count_method
+    from repro.core.query_context import QueryContext
+    ops: Dict[str, jax.Array] = dict(operands) if operands else {}
+    if x_dense is not None:
+        ops.setdefault("x_dense", x_dense)
+    needs = get_count_method(method).needs
+    if isinstance(index, QueryContext):
+        ctx = index
+        index = ctx.index
+        for name in needs:
+            if name not in ops:
+                ops[name] = getattr(ctx, name)()
+    if "x_dense" in needs and "x_dense" not in ops:
+        # Legacy one-shot path (no context): unpack ONCE (outside the level
+        # loop); padding rows beyond n_docs are all-zero bits so they can
+        # never contribute to counts.  Serving goes through QueryContext,
+        # which unpacks once per ingest EPOCH and shards at build time.
+        from repro.launch.sharding import constrain
+        ops["x_dense"] = constrain(incidence_dense(index, jnp.bfloat16),
+                                   ("docs", "terms"))
+    return index, ops
 
 
 def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
-                  method: str, x_dense: Optional[jax.Array] = None):
+                  method: str, operands: Mapping[str, jax.Array]):
     """One BFS level: batched frontier expansion + beam re-selection."""
     b = state.masks.shape[0]
     v = index.vocab_size
 
-    counts = _frontier_counts(index, state.masks, method, x_dense)  # (B, V) int32
+    counts = _frontier_counts(index, state.masks, method, operands)  # (B, V) int32
     # mask self-pairs, invalid rows, and (optionally) visited terms
     counts = counts.at[jnp.arange(b), jnp.clip(state.terms, 0)].set(-1)
     if dedup:
@@ -381,7 +403,9 @@ def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
 def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
                   topk: int, beam: int, dedup: bool = True,
                   method: str = "gemm",
-                  x_dense: Optional[jax.Array] = None) -> CoocNetwork:
+                  x_dense: Optional[jax.Array] = None,
+                  operands: Optional[Mapping[str, jax.Array]] = None
+                  ) -> CoocNetwork:
     """Paper Algorithm 3, TPU-adapted (see README.md §Design).
 
     index: a PackedIndex, or a ``QueryContext`` — with a context, cached
@@ -406,13 +430,12 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
                    kernel (compiled on TPU, interpret mode on CPU).
     All are exact (0/1 operands, fp32/int32 accumulation) and tested
     equal.
+
+    Registered methods receive their ``needs`` through the ``operands``
+    mapping (``x_dense=`` remains as a legacy spelling of
+    ``operands={"x_dense": ...}``).
     """
-    from repro.core.query_context import QueryContext
-    if isinstance(index, QueryContext):
-        ctx = index
-        index = ctx.index
-        if x_dense is None:
-            x_dense = ctx.operands(method).get("x_dense")
+    index, ops = _resolve_operands(index, method, x_dense, operands)
     v = index.vocab_size
     b = beam
     s = seed_terms.shape[0]
@@ -429,18 +452,9 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
 
     state = BFSState(masks0, terms0.astype(jnp.int32), valid0, visited0)
 
-    if method == "gemm" and x_dense is None:
-        # Legacy one-shot path (no context): unpack ONCE (outside the level
-        # loop); padding rows beyond n_docs are all-zero bits so they can
-        # never contribute to counts.  Serving goes through QueryContext,
-        # which unpacks once per ingest EPOCH and shards at build time.
-        from repro.launch.sharding import constrain
-        x_dense = constrain(incidence_dense(index, jnp.bfloat16),
-                            ("docs", "terms"))
-
     def step(state, _):
         new_state, edges = _expand_level(index, state, topk, dedup, method,
-                                         x_dense)
+                                         ops)
         return new_state, edges
 
     from repro.launch.flags import unroll_scans
@@ -464,25 +478,40 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
 def bfs_construct_batch(index, seed_terms: jax.Array, *, depth: int,
                         topk: int, beam: int, dedup: bool = True,
                         method: str = "gemm",
-                        x_dense: Optional[jax.Array] = None) -> CoocNetwork:
+                        x_dense: Optional[jax.Array] = None,
+                        operands: Optional[Mapping[str, jax.Array]] = None
+                        ) -> CoocNetwork:
     """Batched queries (the web-service scenario): seed_terms (Q, S).
 
     vmaps the whole BFS over independent queries; the packed index (and
-    the gemm path's unpacked incidence — whether cached in a QueryContext
-    or passed as ``x_dense``) is closed over — broadcast, i.e. sharded
+    the method's operands — whether cached in a QueryContext or passed via
+    ``operands``/``x_dense``) is closed over — broadcast, i.e. sharded
     once, not replicated per query, under pjit.
     """
-    from repro.core.query_context import QueryContext
-    if isinstance(index, QueryContext):
-        ctx = index
-        index = ctx.index
-        if x_dense is None:
-            x_dense = ctx.operands(method).get("x_dense")
+    index, ops = _resolve_operands(index, method, x_dense, operands)
     fn = functools.partial(bfs_construct, index, depth=depth, topk=topk,
                            beam=beam, dedup=dedup, method=method,
-                           x_dense=x_dense)
+                           operands=ops)
     nets = jax.vmap(fn)(seed_terms)
     return CoocNetwork(
         src=nets.src.reshape(-1), dst=nets.dst.reshape(-1),
         weight=nets.weight.reshape(-1), valid=nets.valid.reshape(-1),
     )
+
+
+def construct(index, spec) -> "QueryResult":
+    """Typed one-shot entry point: run one :class:`~repro.core.query.QuerySpec`
+    and return a :class:`~repro.core.query.QueryResult`.
+
+    ``index`` is a PackedIndex or a QueryContext (cached operands are pulled
+    from a context, exactly as in :func:`bfs_construct`).  This is the
+    reference semantics for the engine's batched path — a micro-batched
+    result must be bit-identical to ``construct(ctx, spec)``.
+    """
+    from repro.core.query import QueryResult
+    from repro.core.query_context import QueryContext
+    net = bfs_construct(index, jnp.asarray(spec.seed_row()), depth=spec.depth,
+                        topk=spec.topk, beam=spec.beam, dedup=spec.dedup,
+                        method=spec.method)
+    epoch = index.epoch if isinstance(index, QueryContext) else 0
+    return QueryResult(network=net, spec=spec, epoch=epoch)

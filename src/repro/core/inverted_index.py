@@ -112,6 +112,27 @@ def grow_capacity(index: PackedIndex, min_capacity: int) -> PackedIndex:
     return PackedIndex(packed, index.doc_freq, index.n_docs)
 
 
+def grow_vocab(index: PackedIndex, min_vocab: int) -> PackedIndex:
+    """Repack to a larger vocabulary (at least ``min_vocab`` term columns).
+
+    The term axis doubles until it fits, so a live lexicon that keeps
+    minting term ids (repro.api.CoocIndex) repacks amortised O(1) per term.
+    New columns are all-zero postings (no document contains the new terms
+    yet) and existing term ids keep their columns, so every existing
+    filter/query result is unchanged; cached dense unpacks must be
+    invalidated because X's term axis grows (``QueryContext.grow_vocab``
+    handles that via its epoch).
+    """
+    if min_vocab <= index.vocab_size:
+        return index
+    v = max(index.vocab_size, 1)
+    while v < min_vocab:
+        v *= 2
+    packed = jnp.pad(index.packed, ((0, 0), (0, v - index.vocab_size)))
+    df = jnp.pad(index.doc_freq, (0, v - index.vocab_size))
+    return PackedIndex(packed, df, index.n_docs)
+
+
 def incidence_dense(index: PackedIndex, dtype=jnp.float32) -> jax.Array:
     """Unpack to the dense incidence matrix X (D, V). D = capacity."""
     w = index.packed  # (W, V)

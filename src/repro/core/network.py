@@ -71,18 +71,28 @@ def top_edges(net: CoocNetwork, limit: int) -> CoocNetwork:
 
 
 def to_edge_dict(net: CoocNetwork) -> Dict[Tuple[int, int], int]:
-    """Host dict {(min, max): weight} (dedup keeps max weight)."""
-    src = np.asarray(net.src)
-    dst = np.asarray(net.dst)
-    w = np.asarray(net.weight)
-    v = np.asarray(net.valid)
-    out: Dict[Tuple[int, int], int] = {}
-    for s, d, wt, ok in zip(src, dst, w, v):
-        if not ok:
-            continue
-        k = (int(min(s, d)), int(max(s, d)))
-        out[k] = max(out.get(k, 0), int(wt))
-    return out
+    """Host dict {(min, max): weight} (dedup keeps max weight).
+
+    Vectorised: this runs host-side in the serving hot path
+    (``CoocEngine.step`` calls it over Q·depth·beam·topk slots per batch),
+    so the per-slot work — canonicalise, drop invalid, dedup-keep-max — is
+    all numpy; Python only touches the surviving unique edges.
+    """
+    ok = np.asarray(net.valid).astype(bool)
+    if not ok.any():
+        return {}
+    src = np.asarray(net.src)[ok].astype(np.int64)
+    dst = np.asarray(net.dst)[ok].astype(np.int64)
+    w = np.asarray(net.weight)[ok].astype(np.int64)
+    a = np.minimum(src, dst)
+    b = np.maximum(src, dst)
+    # sort by (a, b, -w): the first row of each (a, b) run carries max weight
+    order = np.lexsort((-w, b, a))
+    a, b, w = a[order], b[order], w[order]
+    first = np.ones(len(a), bool)
+    first[1:] = (a[1:] != a[:-1]) | (b[1:] != b[:-1])
+    return dict(zip(zip(a[first].tolist(), b[first].tolist()),
+                    w[first].tolist()))
 
 
 def edge_jaccard(n1: CoocNetwork, n2: CoocNetwork) -> float:

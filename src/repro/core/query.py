@@ -1,0 +1,248 @@
+"""Typed query surface: QuerySpec / PlanKey / QueryResult + the count-method
+registry.
+
+Design notes (see README.md §Design):
+
+Before this existed the query parameters travelled as loose kwargs through
+three independent dispatch sites (``COUNT_METHODS`` in query_context, the
+if-chain in ``cooccurrence._frontier_counts``, the validation in
+``CoocEngine``), and the engine froze (depth, topk, beam, method) at
+construction — one engine per parameter combination.  This module is the
+single source of truth:
+
+* :class:`QuerySpec`  — a frozen, validated description of ONE query.  The
+  per-query knobs (seeds) and the per-PLAN knobs (depth/topk/beam/dedup/
+  method) live together; :attr:`QuerySpec.plan_key` splits them back out.
+  Everything that shapes the compiled executable is in the plan key, so an
+  engine can batch heterogeneous specs by grouping on it and cache one
+  jitted executable per distinct key (``serve.cooc_engine``).
+* :class:`QueryResult` — the typed response: the fixed-shape
+  :class:`CoocNetwork` plus serving metadata (latency, index epoch, batch
+  occupancy), with the host-side edge views (``edges`` / ``edge_index`` /
+  ``top`` / ``nodes``) as methods instead of loose ``network.py`` calls.
+* :func:`register_count_method` — the pluggable frontier-count registry.
+  A method is ``(name, needs, fn)`` where ``needs`` names the context
+  artifacts the method consumes (today only ``"x_dense"``) and ``fn`` maps
+  ``(index, masks, operands) -> counts (B, V)`` under jit.  The built-in
+  gemm / popcount / pallas methods are registered here; QueryContext's
+  operand table, ``bfs_construct``'s frontier dispatch, and the engine's
+  validation all read this one registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.inverted_index import (
+    PackedIndex,
+    doc_freq_under_batch,
+    doc_freq_under_batch_gemm,
+)
+from repro.core.network import CoocNetwork, nodes_of, to_edge_dict, to_edge_index
+
+
+# ---------------------------------------------------------------------------
+# Count-method registry (the single dispatch site)
+# ---------------------------------------------------------------------------
+
+#: context artifacts a count method may request via ``needs``.  Each name is
+#: a zero-arg method on QueryContext returning a cached, sharded operand.
+KNOWN_OPERANDS = ("x_dense",)
+
+#: fn(index, masks (B, W) uint32, operands dict) -> counts (B, V) int32,
+#: traceable under jit/vmap.
+CountFn = Callable[[PackedIndex, jax.Array, Mapping[str, jax.Array]], jax.Array]
+
+
+class CountMethod(NamedTuple):
+    name: str
+    needs: Tuple[str, ...]
+    fn: CountFn
+
+
+_REGISTRY: Dict[str, CountMethod] = {}
+
+
+def register_count_method(name: str, needs: Sequence[str], fn: CountFn, *,
+                          overwrite: bool = False) -> CountMethod:
+    """Register a frontier-count method under ``name``.
+
+    ``needs`` lists the QueryContext artifacts the method consumes (subset
+    of :data:`KNOWN_OPERANDS`); they are delivered to ``fn`` in the
+    operands mapping.  Registration makes the method valid everywhere a
+    ``method=`` is accepted: QuerySpec, bfs_construct, CoocEngine,
+    CoocIndex.
+    """
+    needs = tuple(needs)
+    unknown = [n for n in needs if n not in KNOWN_OPERANDS]
+    if unknown:
+        raise ValueError(f"unknown operand(s) {unknown} in needs; "
+                         f"known context artifacts: {KNOWN_OPERANDS}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"count method {name!r} already registered; "
+                         "pass overwrite=True to replace it")
+    m = CountMethod(name, needs, fn)
+    _REGISTRY[name] = m
+    return m
+
+
+def unregister_count_method(name: str) -> None:
+    """Remove a registered method (primarily for test hygiene)."""
+    if name in ("gemm", "popcount", "pallas"):
+        raise ValueError(f"refusing to unregister built-in method {name!r}")
+    _REGISTRY.pop(name, None)
+
+
+def get_count_method(name: str) -> CountMethod:
+    m = _REGISTRY.get(name)
+    if m is None:
+        raise ValueError(f"unknown method {name!r}; "
+                         f"choose from {sorted(_REGISTRY)}")
+    return m
+
+
+def count_method_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _gemm_counts(index: PackedIndex, masks: jax.Array,
+                 operands: Mapping[str, jax.Array]) -> jax.Array:
+    x_dense = operands.get("x_dense")
+    assert x_dense is not None, "gemm method needs the dense incidence"
+    return doc_freq_under_batch_gemm(masks, x_dense)
+
+
+def _popcount_counts(index: PackedIndex, masks: jax.Array,
+                     operands: Mapping[str, jax.Array]) -> jax.Array:
+    return doc_freq_under_batch(index, masks)
+
+
+def _pallas_counts(index: PackedIndex, masks: jax.Array,
+                   operands: Mapping[str, jax.Array]) -> jax.Array:
+    from repro.kernels import ops
+    return ops.postings_counts(masks, index.packed,
+                               backend=ops.pallas_backend())
+
+
+register_count_method("gemm", ("x_dense",), _gemm_counts)
+register_count_method("popcount", (), _popcount_counts)
+register_count_method("pallas", (), _pallas_counts)
+
+
+# ---------------------------------------------------------------------------
+# QuerySpec / PlanKey
+# ---------------------------------------------------------------------------
+
+
+class PlanKey(NamedTuple):
+    """Everything that shapes the compiled executable — and nothing else.
+
+    Two specs with equal plan keys run through the same jitted executable
+    (possibly in the same micro-batch); distinct keys compile separately.
+    """
+    depth: int
+    topk: int
+    beam: int
+    dedup: bool
+    method: str
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """A validated, hashable description of one co-occurrence query.
+
+    seeds  — term ids to root the BFS at (1..beam of them);
+    depth  — BFS levels; topk — edges kept per frontier node per level;
+    beam   — frontier width (and max seeds); dedup — level-synchronous
+    visited-set dedup; method — a registered count method.
+    """
+    seeds: Tuple[int, ...]
+    depth: int = 3
+    topk: int = 16
+    beam: int = 32
+    dedup: bool = True
+    method: str = "gemm"
+
+    def __post_init__(self):
+        seeds = tuple(int(s) for s in self.seeds)
+        object.__setattr__(self, "seeds", seeds)
+        if not seeds:
+            raise ValueError("empty seed set")
+        if any(s < 0 for s in seeds):
+            raise ValueError(f"negative seed term id in {seeds} "
+                             "(-1 is the internal padding sentinel)")
+        if len(seeds) > self.beam:
+            raise ValueError(
+                f"{len(seeds)} seed terms exceed beam={self.beam}; raise the "
+                f"spec's beam or split the query")
+        for field in ("depth", "topk", "beam"):
+            if int(getattr(self, field)) < 1:
+                raise ValueError(f"{field} must be >= 1")
+        get_count_method(self.method)        # unknown method -> ValueError
+
+    @property
+    def plan_key(self) -> PlanKey:
+        return PlanKey(self.depth, self.topk, self.beam, self.dedup,
+                       self.method)
+
+    @property
+    def max_edges(self) -> int:
+        """Edge slots a network built under this spec occupies."""
+        return self.depth * self.beam * self.topk
+
+    def seed_row(self) -> np.ndarray:
+        """(beam,) int32 seeds padded with -1 — the executor's row format."""
+        row = np.full((self.beam,), -1, np.int32)
+        row[:len(self.seeds)] = self.seeds
+        return row
+
+
+# ---------------------------------------------------------------------------
+# QueryResult
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Typed response: the network + serving metadata + host-side views.
+
+    network — fixed-shape edge record (host numpy-backed once served);
+    spec    — the QuerySpec that produced it;
+    epoch   — the index epoch answered against (which ingests are visible);
+    latency_ms / batch_occupancy — serving stats for THIS query (0 / 1 for
+    one-shot construction outside an engine).
+    """
+    network: CoocNetwork
+    spec: QuerySpec
+    epoch: int = 0
+    latency_ms: float = 0.0
+    batch_occupancy: int = 1
+    _edges: Optional[Dict[Tuple[int, int], int]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def edges(self) -> Dict[Tuple[int, int], int]:
+        """Undirected {(min, max): weight} dict (dedup keeps max weight)."""
+        if self._edges is None:
+            self._edges = to_edge_dict(self.network)
+        return self._edges
+
+    def edge_index(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(2, E) int32 symmetrised edge index + (E,) weights (GNN-ready)."""
+        return to_edge_index(self.network)
+
+    def top(self, limit: int) -> List[Tuple[int, int, int]]:
+        """The ``limit`` heaviest undirected edges as (a, b, weight),
+        heaviest first (ties by term ids) — the paper's visualisation cut."""
+        ranked = sorted(((a, b, w) for (a, b), w in self.edges().items()),
+                        key=lambda t: (-t[2], t[0], t[1]))
+        return ranked[:limit]
+
+    def nodes(self) -> List[int]:
+        return nodes_of(self.network)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges())

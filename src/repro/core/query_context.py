@@ -25,6 +25,7 @@ epoch is a new array — no retrace, no stale constants baked into traces.
 """
 from __future__ import annotations
 
+from collections.abc import Mapping
 from typing import Optional, Sequence
 
 import jax
@@ -34,18 +35,40 @@ import numpy as np
 from repro.core.inverted_index import (
     PackedIndex,
     grow_capacity,
+    grow_vocab,
     incidence_dense,
     ingest,
     pack_docs,
 )
+from repro.core.query import get_count_method
 
-#: methods understood by bfs_construct / the engine; values say which extra
-#: operand each one needs from the context.
-COUNT_METHODS = {
-    "gemm": ("x_dense",),     # counts = unpack(masks) @ X on the MXU
-    "popcount": (),           # AND + popcount over packed, pure jnp (VPU)
-    "pallas": (),             # same op through the Pallas postings kernel
-}
+
+class _CountMethodsView(Mapping):
+    """Deprecated read-only alias over the count-method registry.
+
+    The single source of truth is :mod:`repro.core.query`
+    (``register_count_method`` / ``get_count_method``); this view keeps the
+    legacy ``COUNT_METHODS`` mapping-of-needs shape alive for old callers
+    and stays live as methods are registered.
+    """
+
+    def __getitem__(self, name):
+        try:
+            return get_count_method(name).needs
+        except ValueError as e:           # Mapping protocol wants KeyError
+            raise KeyError(name) from e
+
+    def __iter__(self):
+        from repro.core.query import count_method_names
+        return iter(count_method_names())
+
+    def __len__(self):
+        from repro.core.query import count_method_names
+        return len(count_method_names())
+
+
+#: Deprecated: use repro.core.query.get_count_method / register_count_method.
+COUNT_METHODS = _CountMethodsView()
 
 
 class CapacityError(ValueError):
@@ -97,12 +120,10 @@ class QueryContext:
 
     def operands(self, method: str) -> dict:
         """Extra (traced-array) operands ``bfs_construct`` needs for
-        ``method`` — the dispatch table realised against this context."""
-        needs = COUNT_METHODS.get(method)
-        if needs is None:
-            raise ValueError(
-                f"unknown method {method!r}; choose from {sorted(COUNT_METHODS)}")
-        return {name: getattr(self, name)() for name in needs}
+        ``method`` — the registry's ``needs`` realised against this
+        context's caches (raises ValueError on an unregistered method)."""
+        return {name: getattr(self, name)()
+                for name in get_count_method(method).needs}
 
     # -- ingest path --------------------------------------------------------
 
@@ -129,13 +150,38 @@ class QueryContext:
         self._index = ingest(self._index, new_doc_terms, new_doc_valid)
         self.epoch += 1
 
+    def grow_vocab(self, min_vocab: int) -> None:
+        """Widen the term axis to at least ``min_vocab`` (doubling, so
+        repeated growth is amortised O(1) per term).  Existing postings and
+        doc ids are unchanged; the epoch bumps so cached artifacts (the
+        dense X, whose V axis grew) rebuild once."""
+        new = grow_vocab(self._index, min_vocab)
+        if new is not self._index:
+            self._index = new
+            self.epoch += 1
+
     def ingest_docs(self, doc_terms: Sequence[Sequence[int]], *,
-                    max_len: int = 64, on_overflow: str = "raise") -> None:
-        """Host convenience: pad token lists to (N, max_len) and ingest."""
+                    max_len: int = 64, on_overflow: str = "raise",
+                    on_long: str = "raise") -> None:
+        """Host convenience: pad token lists to (N, max_len) and ingest.
+
+        on_long: "raise" -> ValueError when any document holds more than
+        ``max_len`` term ids (truncation would silently drop postings —
+        the repo's raise-don't-drop policy); "truncate" -> explicit opt-in
+        to keep only the first ``max_len`` ids per document.
+        """
+        doc_terms = [list(t) for t in doc_terms]
+        over = [(i, len(t)) for i, t in enumerate(doc_terms) if len(t) > max_len]
+        if over and on_long != "truncate":
+            i0, l0 = over[0]
+            raise ValueError(
+                f"{len(over)} document(s) exceed max_len={max_len} (first: "
+                f"doc {i0} with {l0} terms); term ids past max_len would be "
+                f"silently dropped — raise max_len or pass on_long='truncate'")
         n = len(doc_terms)
         ids = np.full((n, max_len), -1, np.int32)
-        for i, terms in enumerate(doc_terms):
-            t = list(terms)[:max_len]
+        for i, t in enumerate(doc_terms):
+            t = t[:max_len]
             ids[i, :len(t)] = t
         self.ingest(jnp.asarray(ids), jnp.asarray(np.ones((n,), bool)),
                     on_overflow=on_overflow)

@@ -1,8 +1,10 @@
 """Serving substrate: LM decode engine (continuous batching), the
-micro-batched co-occurrence query engine, and the thin CoocService shim
+plan-aware micro-batched co-occurrence query engine (QuerySpec in,
+CoocFuture out), and the deprecated CoocService shim
 (the paper's real-time query + ingest scenario)."""
 from repro.serve.cooc_engine import (  # noqa: F401
     CoocEngine,
+    CoocFuture,
     CoocRequest,
     EngineStats,
 )

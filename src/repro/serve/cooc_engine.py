@@ -1,33 +1,41 @@
-"""CoocEngine — micro-batched co-occurrence query serving.
+"""CoocEngine — plan-aware, micro-batched co-occurrence query serving.
 
 Design notes (see README.md §Design):
 
 The paper's target is web-grade real-time construction over a LIVE index:
-many concurrent queries, continuous ingest.  One-query-at-a-time jit calls
-leave the accelerator mostly idle — the throughput lives in batched
-postings evaluation (Billerbeck et al., PAPERS.md).  This engine applies
-the same slot-admission pattern as :class:`repro.serve.engine.DecodeServer`
-to the BFS query path:
+many concurrent, *heterogeneous* queries, continuous ingest.  One-query-
+at-a-time jit calls leave the accelerator mostly idle — the throughput
+lives in batched postings evaluation (Billerbeck et al., PAPERS.md) — and
+an engine that freezes (depth, topk, beam, method) at construction needs
+one engine (and one compile) per parameter combination.  This engine is
+plan-aware instead:
 
-* queries queue via :meth:`submit`;
-* each :meth:`step` admits up to ``q_batch`` of them into a fixed
-  ``(Q, S)`` seed batch (idle slots padded with -1 seeds, which produce no
-  edges by construction) and runs ONE jitted ``bfs_construct_batch``;
+* queries are typed :class:`~repro.core.query.QuerySpec` objects;
+  :meth:`submit` returns a :class:`CoocFuture` (``.done()`` /
+  ``.result() -> QueryResult``);
+* each :meth:`step` groups queued requests by :class:`PlanKey`
+  (depth/topk/beam/dedup/method — everything that shapes the compiled
+  executable), admits up to ``q_batch`` of the head plan into a fixed
+  ``(Q, beam)`` seed batch (idle slots padded with -1 seeds, which produce
+  no edges by construction) and runs ONE jitted ``bfs_construct_batch``
+  from the **per-plan executor cache** — compile count grows with distinct
+  plans, never with query count;
 * the per-epoch artifacts (gemm's dense incidence) come from the shared
   :class:`repro.core.QueryContext` — cached, sharded, rebuilt only on
   ingest — so a warm engine performs zero unpacks per query;
-* per-query latency and batch-occupancy statistics are recorded.
+* per-query latency and batch-occupancy statistics are kept in fixed-size
+  ring buffers (a long-lived engine holds O(window) state, not O(queries)).
 
-The jit signature is shape-stable: always ``(Q, S)`` with ``S = beam``, so
-the engine compiles once per (method, shape) and never retraces as load
-varies.
+The jit signature per plan is shape-stable: always ``(q_batch, beam)``, so
+the engine never retraces as load varies.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,23 +46,68 @@ from repro.core import (
     PackedIndex,
     QueryContext,
     bfs_construct_batch,
-    to_edge_dict,
 )
-from repro.core.query_context import COUNT_METHODS
+from repro.core.query import PlanKey, QueryResult, QuerySpec, get_count_method
 
 
 @dataclasses.dataclass
 class CoocRequest:
+    """Engine-internal record of one submitted query."""
     rid: int
-    seed_terms: List[int]
+    spec: QuerySpec
     t_submit: float = 0.0
     t_done: float = 0.0
-    edges: Optional[Dict[Tuple[int, int], int]] = None
-    batch_occupancy: int = 0     # queries sharing the batch that served this
+    result: Optional[QueryResult] = None
+
+    @property
+    def seed_terms(self) -> List[int]:
+        return list(self.spec.seeds)
+
+    @property
+    def edges(self) -> Optional[Dict[Tuple[int, int], int]]:
+        return self.result.edges() if self.result is not None else None
 
     @property
     def latency_ms(self) -> float:
         return (self.t_done - self.t_submit) * 1e3
+
+    @property
+    def batch_occupancy(self) -> int:
+        return self.result.batch_occupancy if self.result is not None else 0
+
+
+class CoocFuture:
+    """Handle for a submitted query.
+
+    ``done()`` is non-blocking; ``result()`` drives the owning engine's
+    step loop until this request is served, then returns the
+    :class:`QueryResult` (repeat calls return the same object).
+    """
+
+    __slots__ = ("_engine", "_req")
+
+    def __init__(self, engine: "CoocEngine", req: CoocRequest):
+        self._engine = engine
+        self._req = req
+
+    @property
+    def rid(self) -> int:
+        return self._req.rid
+
+    @property
+    def spec(self) -> QuerySpec:
+        return self._req.spec
+
+    def done(self) -> bool:
+        return self._req.result is not None
+
+    def result(self) -> QueryResult:
+        while self._req.result is None:
+            if self._engine.step() == 0:
+                raise RuntimeError(
+                    f"request {self._req.rid} is not queued in its engine "
+                    "(queue drained without serving it)")   # pragma: no cover
+        return self._req.result
 
 
 @dataclasses.dataclass
@@ -66,68 +119,107 @@ class EngineStats:
     max_ms: float
     batches: int = 0
     mean_occupancy: float = 0.0   # mean admitted queries per executed batch
+    compiled_plans: int = 0       # distinct plan keys compiled so far
 
 
 class CoocEngine:
-    """Micro-batched BFS query engine over a shared QueryContext."""
+    """Plan-aware micro-batched BFS query engine over a shared QueryContext.
+
+    The ``depth/topk/beam/dedup/method`` constructor arguments are only the
+    DEFAULT spec applied when :meth:`submit` receives a bare seed list —
+    any mix of QuerySpecs flows through the same engine, grouped by plan.
+    ``window`` bounds the stats ring buffers (and the ``finished`` log).
+    """
 
     def __init__(self, ctx, *, depth: int = 3, topk: int = 16, beam: int = 32,
                  q_batch: int = 8, method: str = "gemm", dedup: bool = True,
-                 on_overflow: str = "raise"):
-        if method not in COUNT_METHODS:
-            raise ValueError(f"unknown method {method!r}; "
-                             f"choose from {sorted(COUNT_METHODS)}")
+                 on_overflow: str = "raise", window: int = 2048):
+        get_count_method(method)        # unknown method -> ValueError
         if isinstance(ctx, PackedIndex):
             ctx = QueryContext(ctx)
         self.ctx: QueryContext = ctx
         self.depth, self.topk, self.beam = depth, topk, beam
+        self.dedup, self.method = dedup, method
         self.q_batch = q_batch
-        self.method = method
         self.on_overflow = on_overflow
+        self.window = window
         self.queue: List[CoocRequest] = []
-        self.finished: List[CoocRequest] = []
-        self.latencies_ms: List[float] = []
-        self.batch_occupancy: List[int] = []
+        self.finished: Deque[CoocRequest] = deque(maxlen=window)
+        self.latencies_ms: Deque[float] = deque(maxlen=window)
+        self.batch_occupancy: Deque[int] = deque(maxlen=window)
+        self.served_total = 0
+        self.batches_total = 0
         self._next_rid = 0
-        self._run = jax.jit(functools.partial(
-            bfs_construct_batch, depth=depth, topk=topk, beam=beam,
-            dedup=dedup, method=method))
+        self._executors: Dict[PlanKey, callable] = {}
+
+    # -- plan cache ---------------------------------------------------------
+
+    @property
+    def compiled_plans(self) -> int:
+        """Size of the per-plan executor cache: grows with DISTINCT plan
+        keys served, never with query count (acceptance metric)."""
+        return len(self._executors)
+
+    def _executor(self, key: PlanKey):
+        fn = self._executors.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                bfs_construct_batch, depth=key.depth, topk=key.topk,
+                beam=key.beam, dedup=key.dedup, method=key.method))
+            self._executors[key] = fn
+        return fn
 
     # -- query path ---------------------------------------------------------
 
-    def submit(self, seed_terms: Sequence[int]) -> int:
-        """Queue a query; returns its request id.
+    def make_spec(self, seed_terms: Sequence[int], **overrides) -> QuerySpec:
+        """Engine defaults + per-query overrides -> a validated QuerySpec."""
+        params = dict(depth=self.depth, topk=self.topk, beam=self.beam,
+                      dedup=self.dedup, method=self.method)
+        params.update(overrides)
+        return QuerySpec(seeds=tuple(int(s) for s in seed_terms), **params)
 
-        Raises ValueError when the seed set exceeds the beam — the frontier
-        holds ``beam`` slots, so extra seeds could only be dropped silently
-        (the old service truncated them, losing results without a signal).
+    def submit(self, query: Union[QuerySpec, Sequence[int]],
+               **overrides) -> CoocFuture:
+        """Queue a query; returns its CoocFuture.
+
+        ``query`` is a QuerySpec, or a bare seed-term sequence completed
+        with the engine defaults (plus keyword overrides).  Validation
+        (empty seeds, seeds exceeding the beam, unknown method) happens
+        here, in QuerySpec — invalid queries never reach the device.
         """
-        seeds = [int(s) for s in seed_terms]
-        if len(seeds) > self.beam:
-            raise ValueError(
-                f"{len(seeds)} seed terms exceed beam={self.beam}; raise the "
-                f"engine's beam or split the query")
-        if not seeds:
-            raise ValueError("empty seed set")
-        rid = self._next_rid
+        if isinstance(query, QuerySpec):
+            if overrides:
+                query = dataclasses.replace(query, **overrides)
+            spec = query
+        else:
+            spec = self.make_spec(query, **overrides)
+        req = CoocRequest(self._next_rid, spec, t_submit=time.perf_counter())
         self._next_rid += 1
-        self.queue.append(CoocRequest(rid, seeds,
-                                      t_submit=time.perf_counter()))
-        return rid
+        self.queue.append(req)
+        return CoocFuture(self, req)
 
     def step(self) -> int:
-        """Serve one micro-batch: admit up to q_batch queued queries, run
-        ONE jitted batched BFS, distribute results.  Returns #served."""
+        """Serve one micro-batch: admit up to q_batch queued queries of the
+        head-of-queue PLAN, run its cached jitted executable once,
+        distribute QueryResults.  Returns #served."""
         if not self.queue:
             return 0
-        admitted = self.queue[:self.q_batch]
-        self.queue = self.queue[self.q_batch:]
+        key = self.queue[0].spec.plan_key
+        admitted: List[CoocRequest] = []
+        rest: List[CoocRequest] = []
+        for req in self.queue:
+            if req.spec.plan_key == key and len(admitted) < self.q_batch:
+                admitted.append(req)
+            else:
+                rest.append(req)
+        self.queue = rest
 
-        seeds = np.full((self.q_batch, self.beam), -1, np.int32)
+        seeds = np.full((self.q_batch, key.beam), -1, np.int32)
         for i, req in enumerate(admitted):
-            seeds[i, :len(req.seed_terms)] = req.seed_terms
-        x_dense = (self.ctx.x_dense() if self.method == "gemm" else None)
-        net = self._run(self.ctx.index, jnp.asarray(seeds), x_dense=x_dense)
+            seeds[i] = req.spec.seed_row()
+        operands = self.ctx.operands(key.method)
+        net = self._executor(key)(self.ctx.index, jnp.asarray(seeds),
+                                  operands=operands)
         jax.block_until_ready(net.src)
 
         src = np.asarray(net.src).reshape(self.q_batch, -1)
@@ -137,56 +229,57 @@ class CoocEngine:
         t_done = time.perf_counter()
         occ = len(admitted)
         self.batch_occupancy.append(occ)
+        self.batches_total += 1
         for i, req in enumerate(admitted):
-            req.edges = to_edge_dict(CoocNetwork(src[i], dst[i], w[i], valid[i]))
             req.t_done = t_done
-            req.batch_occupancy = occ
+            req.result = QueryResult(
+                network=CoocNetwork(src[i], dst[i], w[i], valid[i]),
+                spec=req.spec, epoch=self.ctx.epoch,
+                latency_ms=req.latency_ms, batch_occupancy=occ)
             self.latencies_ms.append(req.latency_ms)
             self.finished.append(req)
+            self.served_total += 1
         return occ
 
     def run_until_drained(self, max_steps: int = 100000) -> List[CoocRequest]:
+        """Step until the queue is empty; returns the (window-bounded)
+        finished log as a list snapshot."""
         for _ in range(max_steps):
             if not self.queue:
                 break
             self.step()
-        return self.finished
+        return list(self.finished)
 
-    def query(self, seed_terms: Sequence[int]) -> Dict[Tuple[int, int], int]:
-        """Synchronous convenience: submit + drain + return this query's
-        edges (earlier queued queries are served first, FIFO).
-
-        The returned request is REMOVED from ``finished`` — a long-lived
-        service looping on query() holds O(1) result state, not O(queries)
-        (latency scalars still accumulate for stats, as before).  Batch
-        users (submit + run_until_drained) read ``finished`` themselves
-        and should clear it between bursts.
-        """
-        rid = self.submit(seed_terms)
-        self.run_until_drained()
-        for i in range(len(self.finished) - 1, -1, -1):
-            if self.finished[i].rid == rid:
-                return self.finished.pop(i).edges
-        raise RuntimeError("request vanished")    # pragma: no cover
+    def query(self, seed_terms: Union[QuerySpec, Sequence[int]],
+              **overrides) -> Dict[Tuple[int, int], int]:
+        """Synchronous convenience: submit + drive to completion + return
+        this query's edge dict (earlier queued queries are served first,
+        FIFO within their plan)."""
+        return self.submit(seed_terms, **overrides).result().edges()
 
     # -- ingest path --------------------------------------------------------
 
     def ingest_docs(self, doc_terms: Sequence[Sequence[int]], *,
-                    max_len: int = 64) -> None:
+                    max_len: int = 64, on_long: str = "raise") -> None:
         """Real-time ingest through the context: host-side capacity check
         (raise/grow per ``on_overflow``), jitted scatter, epoch bump — the
         next batch sees the new docs and rebuilds the dense cache once."""
         self.ctx.ingest_docs(doc_terms, max_len=max_len,
-                             on_overflow=self.on_overflow)
+                             on_overflow=self.on_overflow, on_long=on_long)
 
     # -- stats --------------------------------------------------------------
 
     def stats(self) -> EngineStats:
+        """Latency/occupancy percentiles over the ring-buffer window (the
+        last ``window`` queries/batches); cumulative totals live on
+        ``served_total`` / ``batches_total``."""
         xs = sorted(self.latencies_ms)
         if not xs:
-            return EngineStats(0, 0, 0, 0, 0)
+            return EngineStats(0, 0, 0, 0, 0,
+                               compiled_plans=self.compiled_plans)
         q = lambda p: xs[min(int(len(xs) * p), len(xs) - 1)]
         occ = self.batch_occupancy
         return EngineStats(len(xs), q(0.5), q(0.95), q(0.99), xs[-1],
                            batches=len(occ),
-                           mean_occupancy=float(np.mean(occ)) if occ else 0.0)
+                           mean_occupancy=float(np.mean(occ)) if occ else 0.0,
+                           compiled_plans=self.compiled_plans)

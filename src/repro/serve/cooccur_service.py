@@ -5,8 +5,11 @@ with web-grade latency tracking (the paper reports < 0.16 s per query as
 meeting web-system requirements; §Paper-validation benchmarks reproduce
 that comparison).
 
-This module is now a thin API-compatibility shim: the device path is
-served by :class:`repro.serve.cooc_engine.CoocEngine` over a shared
+DEPRECATED: this module is a thin API-compatibility shim kept for old
+callers.  New code should use :class:`repro.api.CoocIndex` (string-level)
+or :class:`repro.serve.cooc_engine.CoocEngine` directly (typed QuerySpec
+in, CoocFuture/QueryResult out, heterogeneous plans through one engine).
+The device path here is served by CoocEngine over a shared
 :class:`repro.core.QueryContext` (cached incidence, micro-batched jitted
 queries — see README.md §Design); the host path keeps the paper-faithful
 postings implementation.  Ingest appends documents to the packed index
@@ -85,10 +88,11 @@ class CoocService:
         return edges
 
     def ingest_docs(self, doc_terms: Sequence[Sequence[int]],
-                    max_len: int = 64) -> None:
+                    max_len: int = 64, on_long: str = "raise") -> None:
         # Host-side capacity check happens in QueryContext.ingest (raises
-        # CapacityError instead of the old silent mode="drop" truncation).
-        self.ctx.ingest_docs(doc_terms, max_len=max_len)
+        # CapacityError instead of the old silent mode="drop" truncation);
+        # over-long docs likewise raise unless on_long="truncate" opts in.
+        self.ctx.ingest_docs(doc_terms, max_len=max_len, on_long=on_long)
         self._docs.extend([list(t)[:max_len] for t in doc_terms])
         if self.engine == "host":
             # host engine: rebuild is O(corpus); a production deployment

@@ -1,0 +1,94 @@
+"""repro.api.CoocIndex — the string-level facade: text round-trip,
+real-time ingest (including vocab growth), plan overrides, error paths."""
+import pytest
+
+from repro.api import CoocIndex
+from repro.core import QuerySpec, construct
+from repro.data import build_lexicon
+
+CORPUS = [
+    "graph neural networks learn node embeddings from graph structure",
+    "co-occurrence networks reveal semantic relationships in text corpora",
+    "inverted index maps keywords to documents for fast retrieval",
+    "keyword co-occurrence networks support text mining and retrieval",
+    "the inverted index makes co-occurrence network construction fast",
+    "fast retrieval of documents uses the inverted index keywords",
+    "text mining extracts keywords and builds co-occurrence networks",
+]
+
+
+class TestRoundTrip:
+    def test_text_to_string_network(self):
+        """Acceptance: text -> network with term-string edges, identical to
+        the manual pipeline (build_lexicon + construct + id mapping)."""
+        idx = CoocIndex.from_texts(CORPUS, depth=2, topk=4, beam=8, q_batch=2)
+        got = idx.network(["index"])
+        assert got and all(isinstance(a, str) and isinstance(b, str)
+                           for a, b in got)
+
+        lex, docs = build_lexicon(CORPUS)
+        from repro.core import QueryContext
+        ctx = QueryContext.from_docs(
+            docs, idx.ctx.vocab_size, capacity=idx.ctx.index.capacity)
+        spec = QuerySpec(seeds=(lex.lookup("index"),), depth=2, topk=4,
+                         beam=8)
+        ref = {(lex.id_to_term[a], lex.id_to_term[b]): w
+               for (a, b), w in construct(ctx, spec).edges().items()}
+        assert got == ref
+
+    def test_query_returns_typed_result(self):
+        idx = CoocIndex.from_texts(CORPUS, depth=1, topk=4, beam=4)
+        res = idx.query(["index"])
+        assert res.spec.depth == 1
+        assert res.num_edges == len(res.edges())
+        top = idx.top(["index"], limit=3)
+        assert len(top) <= 3
+        assert all(isinstance(t[0], str) for t in top)
+        ws = [w for _, _, w in top]
+        assert ws == sorted(ws, reverse=True)
+
+    def test_tokenizer_normalisation_and_stopwords(self):
+        idx = CoocIndex.from_texts(CORPUS)
+        assert "index" in idx
+        assert "Index" in idx                    # lookup lowercases
+        assert "the" not in idx                  # stopword never indexed
+        assert idx.term_id("INDEX") == idx.term_id("index")
+
+
+class TestIngest:
+    def test_ingest_then_query_sees_new_docs(self):
+        idx = CoocIndex.from_texts(CORPUS, depth=1, topk=4, beam=4)
+        before = idx.network(["index"]).get(("inverted", "index"), 0)
+        n = idx.add_documents(["inverted index inverted index speedup"] * 3)
+        assert n == 3
+        after = idx.network(["index"]).get(("inverted", "index"), 0)
+        assert after == before + 3               # visible to the next query
+
+    def test_ingest_grows_vocab_for_unseen_terms(self):
+        idx = CoocIndex.from_texts(CORPUS[:2], vocab_capacity=4)
+        assert idx.ctx.vocab_size >= idx.n_terms  # grew past 4 already
+        idx.add_documents(["zyzzyva quokka zyzzyva corpus expansion"] * 2)
+        net = idx.network(["zyzzyva"], depth=1)
+        assert net[("zyzzyva", "quokka")] == 2
+
+    def test_capacity_grows_with_documents(self):
+        idx = CoocIndex.from_texts(CORPUS, capacity=32)
+        idx.add_documents(["repeated growth document"] * 80)
+        assert idx.n_docs == len(CORPUS) + 80
+
+
+class TestErrors:
+    def test_unknown_seed_term_raises(self):
+        idx = CoocIndex.from_texts(CORPUS)
+        with pytest.raises(KeyError, match="not in lexicon"):
+            idx.network(["nonexistent-term"])
+
+    def test_plan_overrides_flow_to_engine(self):
+        idx = CoocIndex.from_texts(CORPUS, depth=2, topk=4, beam=8)
+        idx.network(["index"])
+        idx.network(["index"], depth=1)
+        assert idx.engine.compiled_plans == 2
+        idx.network(["keywords"], depth=1)       # same plan, no new compile
+        assert idx.engine.compiled_plans == 2
+        with pytest.raises(ValueError, match="unknown method"):
+            idx.network(["index"], method="turbo")

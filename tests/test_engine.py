@@ -1,5 +1,6 @@
 """QueryContext + CoocEngine: cached incidence (epoch invalidation),
-micro-batched serving, capacity/beam guard rails, method dispatch parity."""
+plan-aware micro-batched serving (QuerySpec/futures/per-plan executor
+cache), capacity/beam guard rails, count-method registry, dispatch parity."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,13 +8,18 @@ import pytest
 from repro.core import (
     CapacityError,
     QueryContext,
+    QuerySpec,
     bfs_construct,
     bfs_construct_batch,
+    construct,
     grow_capacity,
     pack_docs,
+    register_count_method,
     to_edge_dict,
+    unregister_count_method,
 )
 from repro.core import cooccurrence as C
+from repro.core.inverted_index import doc_freq_under_batch
 from repro.data import synthetic_csl
 from repro.serve import CoocEngine, CoocService
 
@@ -124,7 +130,7 @@ class TestCoocEngine:
         eng.run_until_drained()
         st = eng.stats()
         assert st.batches == 2
-        assert eng.batch_occupancy == [4, 1]
+        assert list(eng.batch_occupancy) == [4, 1]
         assert st.mean_occupancy == pytest.approx(2.5)
         last = eng.finished[-1]
         assert last.edges == _single(ctx, 11)
@@ -200,6 +206,247 @@ class TestServiceShim:
                           beam=4)
         with pytest.raises(CapacityError):
             svc.ingest_docs([[2, 3]] * 3)
+
+
+class TestQuerySpec:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="empty"):
+            QuerySpec(seeds=())
+        with pytest.raises(ValueError, match="exceed beam"):
+            QuerySpec(seeds=tuple(range(9)), beam=8)
+        with pytest.raises(ValueError, match="negative seed"):
+            QuerySpec(seeds=(3, -1))
+        with pytest.raises(ValueError, match="unknown method"):
+            QuerySpec(seeds=(1,), method="turbo")
+        with pytest.raises(ValueError, match="depth"):
+            QuerySpec(seeds=(1,), depth=0)
+
+    def test_plan_key_splits_plan_from_seeds(self):
+        a = QuerySpec(seeds=(1,), depth=2, topk=4, beam=8)
+        b = QuerySpec(seeds=(2, 3), depth=2, topk=4, beam=8)
+        c = QuerySpec(seeds=(1,), depth=3, topk=4, beam=8)
+        assert a.plan_key == b.plan_key
+        assert a.plan_key != c.plan_key
+        assert a.plan_key.method == "gemm"
+
+    def test_seed_row_padding(self):
+        s = QuerySpec(seeds=(5, 7), beam=4, depth=1, topk=2)
+        np.testing.assert_array_equal(s.seed_row(), [5, 7, -1, -1])
+
+
+class TestPlanAwareEngine:
+    def _ctx(self):
+        return QueryContext.from_docs(synthetic_csl(300, 64, seed=4), 64)
+
+    def test_heterogeneous_plans_match_standalone(self):
+        """Acceptance: one engine serves mixed (depth, topk, beam, method)
+        specs; each result is bit-identical to a standalone construct."""
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, q_batch=4)
+        specs = [
+            QuerySpec(seeds=(3,), depth=2, topk=6, beam=8),
+            QuerySpec(seeds=(5,), depth=1, topk=4, beam=4, method="popcount"),
+            QuerySpec(seeds=(7, 9), depth=2, topk=6, beam=8),
+            QuerySpec(seeds=(11,), depth=3, topk=3, beam=8, dedup=False),
+            QuerySpec(seeds=(13,), depth=1, topk=4, beam=4, method="popcount"),
+            QuerySpec(seeds=(15,), depth=2, topk=6, beam=8),
+        ]
+        futs = [eng.submit(s) for s in specs]
+        for fut, spec in zip(futs, specs):
+            got = fut.result()
+            ref = construct(ctx, spec)
+            assert got.edges() == ref.edges()
+            np.testing.assert_array_equal(np.asarray(got.network.src),
+                                          np.asarray(ref.network.src))
+            np.testing.assert_array_equal(np.asarray(got.network.weight),
+                                          np.asarray(ref.network.weight))
+
+    def test_compile_count_tracks_plans_not_queries(self):
+        """Acceptance: the per-plan executor cache grows with distinct plan
+        keys, not with query count."""
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, q_batch=2, depth=2, topk=4, beam=8)
+        assert eng.compiled_plans == 0
+        for s in range(1, 13):
+            eng.query([s])                       # 12 queries, one plan
+        assert eng.compiled_plans == 1
+        eng.query([3], depth=1)                  # second distinct plan
+        eng.query([5], depth=1)
+        assert eng.compiled_plans == 2
+        eng.query([3], method="popcount")        # third
+        assert eng.compiled_plans == 3
+        assert eng.stats().compiled_plans == 3
+
+    def test_step_groups_by_plan(self):
+        """A step admits only requests sharing the head-of-queue plan; the
+        other plan is served by the next step, FIFO preserved."""
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, q_batch=4, depth=2, topk=4, beam=8)
+        f_a1 = eng.submit([3])
+        f_b = eng.submit([5], depth=1)
+        f_a2 = eng.submit([7])
+        assert eng.step() == 2                   # both depth-2 queries
+        assert f_a1.done() and f_a2.done() and not f_b.done()
+        assert eng.step() == 1
+        assert f_b.done()
+        assert [r.rid for r in eng.finished] == [0, 2, 1]
+
+    def test_submit_spec_with_overrides(self):
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, q_batch=1, depth=2, topk=4, beam=8)
+        base = QuerySpec(seeds=(3,), depth=2, topk=4, beam=8)
+        fut = eng.submit(base, depth=1)
+        assert fut.spec.depth == 1
+        assert fut.result().edges() == construct(
+            ctx, QuerySpec(seeds=(3,), depth=1, topk=4, beam=8)).edges()
+
+    def test_result_metadata(self):
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, q_batch=4, depth=1, topk=4, beam=4)
+        futs = [eng.submit([s]) for s in (3, 5)]
+        res = [f.result() for f in futs]
+        for r in res:
+            assert r.batch_occupancy == 2
+            assert r.latency_ms > 0
+            assert r.epoch == 0
+        eng.ingest_docs([[1, 2]] * 3)
+        assert eng.submit([1]).result().epoch == 1
+
+
+class TestCoocFuture:
+    def test_lifecycle_pending_to_done(self):
+        ctx = QueryContext.from_docs(synthetic_csl(200, 64, seed=5), 64)
+        eng = CoocEngine(ctx, q_batch=2, depth=1, topk=4, beam=4)
+        fut = eng.submit([3])
+        assert not fut.done()
+        assert len(eng.queue) == 1
+        r1 = fut.result()                        # drives the engine
+        assert fut.done()
+        assert not eng.queue
+        r2 = fut.result()                        # double-result(): same object
+        assert r2 is r1
+        assert r1.edges() == _single(ctx, 3, depth=1, topk=4, beam=4)
+
+    def test_futures_resolve_out_of_order_submission(self):
+        ctx = QueryContext.from_docs(synthetic_csl(200, 64, seed=5), 64)
+        eng = CoocEngine(ctx, q_batch=8, depth=1, topk=4, beam=4)
+        futs = [eng.submit([s]) for s in (3, 5, 7)]
+        # resolving the LAST future serves the whole admitted batch
+        futs[-1].result()
+        assert all(f.done() for f in futs)
+
+
+class TestCountMethodRegistry:
+    def test_unknown_method_raises_everywhere(self):
+        ctx = QueryContext.from_docs([[0, 1]], 4)
+        with pytest.raises(ValueError, match="unknown method"):
+            QuerySpec(seeds=(1,), method="turbo")
+        with pytest.raises(ValueError, match="unknown method"):
+            ctx.operands("turbo")
+        with pytest.raises(ValueError, match="unknown method"):
+            CoocEngine(ctx, method="turbo")
+
+    def test_custom_method_registers_and_serves(self):
+        """A registered method is valid end-to-end: QuerySpec validation,
+        context operands, engine serving — and matches its reference."""
+        def fn(index, masks, operands):
+            return doc_freq_under_batch(index, masks)
+        register_count_method("popcount_alias", (), fn)
+        try:
+            ctx = QueryContext.from_docs(synthetic_csl(200, 64, seed=6), 64)
+            assert ctx.operands("popcount_alias") == {}
+            eng = CoocEngine(ctx, q_batch=2, depth=2, topk=4, beam=8)
+            got = eng.query([3], method="popcount_alias")
+            assert got == eng.query([3], method="popcount")
+            assert eng.compiled_plans == 2
+        finally:
+            unregister_count_method("popcount_alias")
+        with pytest.raises(ValueError, match="unknown method"):
+            QuerySpec(seeds=(1,), method="popcount_alias")
+
+    def test_duplicate_and_builtin_guards(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_count_method("gemm", ("x_dense",), lambda *a: None)
+        with pytest.raises(ValueError, match="built-in"):
+            unregister_count_method("gemm")
+        with pytest.raises(ValueError, match="unknown operand"):
+            register_count_method("needs_bogus", ("y_sparse",),
+                                  lambda *a: None)
+
+    def test_legacy_count_methods_view_tracks_registry(self):
+        from repro.core import COUNT_METHODS
+        assert set(COUNT_METHODS) >= {"gemm", "popcount", "pallas"}
+        assert COUNT_METHODS["gemm"] == ("x_dense",)
+        register_count_method("tmp_view_probe", (), lambda *a: None)
+        try:
+            assert "tmp_view_probe" in COUNT_METHODS
+        finally:
+            unregister_count_method("tmp_view_probe")
+        assert "tmp_view_probe" not in COUNT_METHODS
+
+
+class TestRingBuffers:
+    def test_stats_state_is_bounded(self):
+        """latencies/occupancy/finished hold at most ``window`` entries no
+        matter how many queries a long-lived engine serves."""
+        ctx = QueryContext.from_docs(synthetic_csl(100, 32, seed=7), 32)
+        eng = CoocEngine(ctx, q_batch=2, depth=1, topk=3, beam=4, window=6)
+        for s in range(16):
+            eng.submit([s % 30])
+        eng.run_until_drained()
+        assert eng.served_total == 16
+        assert eng.batches_total == 8
+        assert len(eng.latencies_ms) == 6
+        assert len(eng.finished) == 6
+        assert len(eng.batch_occupancy) == 6
+        st = eng.stats()
+        assert st.n == 6                         # window, not lifetime
+        assert st.mean_occupancy == 2.0
+
+
+class TestIngestLongDocs:
+    def test_overlong_doc_raises_by_default(self):
+        """Raise-don't-drop: ingest_docs must not silently truncate term
+        lists past max_len."""
+        ctx = QueryContext.from_docs([[0, 1]], 8, capacity=64)
+        with pytest.raises(ValueError, match="exceed max_len"):
+            ctx.ingest_docs([[0, 1, 2, 3, 4]], max_len=4)
+        assert ctx.n_docs == 1                   # nothing ingested
+
+    def test_truncate_opt_in(self):
+        ctx = QueryContext.from_docs([[0, 1]], 8, capacity=64)
+        ctx.ingest_docs([[2, 3, 4, 5, 6]], max_len=4, on_long="truncate")
+        assert ctx.n_docs == 2
+        df = np.asarray(ctx.index.doc_freq)
+        assert df[5] == 1 and df[6] == 0         # id 6 explicitly dropped
+
+    def test_engine_and_service_pass_through(self):
+        docs = [[0, 1]] * 4
+        eng = CoocEngine(QueryContext.from_docs(docs, 8, capacity=64),
+                         depth=1, topk=3, beam=4, q_batch=1)
+        with pytest.raises(ValueError, match="exceed max_len"):
+            eng.ingest_docs([[0, 1, 2]], max_len=2)
+        svc = CoocService(docs, 8, capacity=64, depth=1, topk=3, beam=4)
+        with pytest.raises(ValueError, match="exceed max_len"):
+            svc.ingest_docs([[0, 1, 2]], max_len=2)
+
+
+class TestGrowVocab:
+    def test_grow_vocab_preserves_results(self):
+        docs = synthetic_csl(100, 32, seed=8)
+        ctx = QueryContext.from_docs(docs, 32)
+        before = _single(ctx, 3, depth=1, topk=4, beam=4)
+        epoch0 = ctx.epoch
+        ctx.grow_vocab(40)                       # doubles to 64
+        assert ctx.vocab_size == 64
+        assert ctx.epoch == epoch0 + 1           # cached X invalidated
+        assert _single(ctx, 3, depth=1, topk=4, beam=4) == before
+
+    def test_grow_vocab_noop_when_fits(self):
+        ctx = QueryContext.from_docs([[0, 1]], 32)
+        ctx.grow_vocab(16)
+        assert ctx.vocab_size == 32
+        assert ctx.epoch == 0
 
 
 class TestBatchedConstructContext:
