@@ -1,0 +1,111 @@
+"""Steady-state streaming: ingest -> evict -> query under a sliding window.
+
+The streaming claim: with ``window=N`` the live index holds O(N) memory
+FOREVER — every ingest beyond the window retires the oldest block on
+device (clear postings bits + decrement doc_freq) and reuses its slots —
+while queries stay exact over the surviving docs.  This bench drives a
+long ingest/query loop (several windows' worth of documents), asserts the
+capacity never grows past the configured window, and reports steady-state
+ingest and query throughput for full-window and scoped queries.
+
+    PYTHONPATH=src python -m benchmarks.bench_streaming_window
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import QueryContext, QuerySpec
+from repro.data import synthetic_csl
+from repro.serve import CoocEngine
+from benchmarks.common import section, write_csv
+
+
+def main(argv: List[str] | None = None) -> List[Dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--window", type=int, default=4096)
+    ap.add_argument("--block", type=int, default=256,
+                    help="docs per ingest block")
+    ap.add_argument("--rounds", type=int, default=48,
+                    help="ingest blocks streamed (> window/block: must evict)")
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--queries-per-round", type=int, default=8)
+    ap.add_argument("--method", default="gemm",
+                    choices=("gemm", "popcount", "pallas"))
+    args = ap.parse_args(argv)
+
+    section(f"Streaming window — window={args.window}, block={args.block}, "
+            f"{args.rounds} rounds, method={args.method}")
+    docs = synthetic_csl(args.block * args.rounds, args.vocab, seed=0)
+    max_len = max(len(d) for d in docs)
+    ctx = QueryContext.from_docs([], args.vocab, window=args.window)
+    eng = CoocEngine(ctx, depth=2, topk=8, beam=8, q_batch=args.queries_per_round,
+                     method=args.method)
+    cap0 = ctx.index.capacity
+    df = np.bincount(np.concatenate([np.unique(d) for d in docs]),
+                     minlength=args.vocab)
+    hot = np.argsort(-df)[:64]
+
+    # warmup: one full round through the jitted path (compile excluded)
+    ctx.ingest_docs(docs[:args.block], max_len=max_len, scope="warm")
+    for s in hot[:args.queries_per_round]:
+        eng.submit([int(s)])
+    eng.run_until_drained()
+    eng.submit(QuerySpec(seeds=(int(hot[0]),), depth=2, topk=8, beam=8,
+                         method=args.method, scope="warm")).result()
+
+    t0 = time.perf_counter()
+    t_ingest = 0.0
+    n_queries = 0
+    for r in range(1, args.rounds):
+        blk = docs[r * args.block:(r + 1) * args.block]
+        ti = time.perf_counter()
+        ctx.ingest_docs(blk, max_len=max_len, scope=f"round_{r % 4}")
+        t_ingest += time.perf_counter() - ti
+        assert ctx.index.capacity == cap0, \
+            f"capacity grew: {ctx.index.capacity} > {cap0}"
+        assert ctx.live_docs <= args.window
+        scope = f"round_{r % 4}" if r % 2 else None
+        for s in hot[:args.queries_per_round]:
+            eng.submit(QuerySpec(seeds=(int(s),), depth=2, topk=8, beam=8,
+                                 method=args.method, scope=scope))
+        eng.run_until_drained()
+        n_queries += args.queries_per_round
+    wall = time.perf_counter() - t0
+
+    st = eng.stats()
+    ingested = args.block * (args.rounds - 1)
+    print(f"capacity held at {cap0} slots over {ingested + args.block} docs "
+          f"({ctx.evicted_docs_total} evicted)  [ok]")
+    print(f"ingest: {ingested / t_ingest:,.0f} docs/s   "
+          f"queries: {n_queries / (wall - t_ingest):,.1f} q/s "
+          f"(p50 {st.p50_ms:.1f} ms, p99 {st.p99_ms:.1f} ms)")
+    print(f"compiled plans: {eng.compiled_plans} "
+          f"(scoped + unscoped — never per scope name or per round)")
+
+    rows = [{
+        "window": args.window, "block": args.block, "rounds": args.rounds,
+        "method": args.method, "capacity": cap0,
+        "evicted_docs": ctx.evicted_docs_total,
+        "ingest_docs_per_s": ingested / t_ingest,
+        "query_qps": n_queries / (wall - t_ingest),
+        "p50_ms": st.p50_ms, "p99_ms": st.p99_ms,
+        "compiled_plans": eng.compiled_plans,
+    }]
+    path = write_csv("streaming_window", rows)
+    print(f"CSV -> {path}")
+    return [
+        {"name": "streaming_capacity_slots", "value": cap0},
+        {"name": "streaming_evicted_docs", "value": ctx.evicted_docs_total},
+        {"name": "streaming_ingest_docs_per_s",
+         "value": ingested / t_ingest},
+        {"name": "streaming_query_qps",
+         "value": n_queries / (wall - t_ingest)},
+    ]
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,8 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true",
                     help="smaller corpora (CI-speed)")
     ap.add_argument("--only", default=None,
-                    choices=("fig7", "fig5", "scaling", "engine", "roofline"))
+                    choices=("fig7", "fig5", "scaling", "engine", "streaming",
+                             "roofline"))
     args = ap.parse_args()
 
     results = []
@@ -61,6 +62,12 @@ def main() -> int:
     engine_argv = (["--n-docs", "1024", "--n-queries", "64"]
                    if args.quick else [])
     run_bench("engine", lambda: bench_engine_throughput.main(engine_argv))
+
+    from benchmarks import bench_streaming_window
+    streaming_argv = (["--window", "512", "--block", "64", "--rounds", "12"]
+                      if args.quick else [])
+    run_bench("streaming",
+              lambda: bench_streaming_window.main(streaming_argv))
 
     from benchmarks import roofline
     run_bench("roofline", roofline.main)

@@ -18,14 +18,51 @@ Both capacities are dynamic: the doc axis grows by repack on overflow
 (``on_overflow="grow"``) and the term axis grows as the lexicon mints new
 ids (``grow_vocab``, amortised-doubling) — a live service never has to
 size the index up front.
+
+**Streaming mode.**  ``CoocIndex(window=100_000)`` caps live documents:
+when an ingest would exceed the window, the oldest ingest blocks are
+evicted (postings cleared, document frequencies decremented) and their
+slots reused — memory stays O(window) forever.  Every document carries an
+ingest timestamp (``add_documents(..., timestamp=...)``, default now), and
+queries can be scoped to a trailing time bucket or a named source tag::
+
+    idx = CoocIndex(window=100_000)
+    idx.add_documents(news_texts, source="news")
+    idx.network(["inflation"], scope="7d")       # last 7 days only
+    idx.network(["inflation"], scope="news")     # tagged source only
+
+A scope is one more ``(W,)`` bitmap ANDed into the seed filters on device
+— scoped queries are exactly as if the index held only the scoped docs,
+with no re-indexing.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Set, Tuple
+import re
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from repro.core import Lexicon, QueryContext, QueryResult
 from repro.data.tokenizer import DEFAULT_STOPWORDS, tokenize
 from repro.serve.cooc_engine import CoocEngine, CoocFuture
+
+_DURATION_RE = re.compile(r"^(\d+)(s|m|h|d|w)$")
+_DURATION_SECONDS = {"s": 1, "m": 60, "h": 3600, "d": 86400, "w": 604800}
+
+#: most duration-derived time buckets kept alive at once (LRU beyond this):
+#: query(scope=...) fed user-controlled duration strings must not grow a
+#: long-lived service's scope table without bound
+MAX_TIME_BUCKETS = 32
+
+
+def parse_duration(spec: str) -> Optional[float]:
+    """``"7d"`` -> 604800.0 seconds; None when ``spec`` is not a duration
+    (then it names an explicit scope instead)."""
+    m = _DURATION_RE.match(spec)
+    if m is None:
+        return None
+    return float(m.group(1)) * _DURATION_SECONDS[m.group(2)]
 
 
 class CoocIndex:
@@ -35,21 +72,38 @@ class CoocIndex:
     The depth/topk/beam/dedup/method constructor arguments are the default
     query plan; every query method accepts per-call overrides (they flow
     into a :class:`QuerySpec` and are served through the engine's per-plan
-    executor cache).
+    executor cache).  ``window`` enters sliding-window (streaming) mode:
+    at most ``window`` live docs, oldest-ingest-first eviction, fixed
+    memory.
     """
 
-    def __init__(self, *, capacity: int = 1024, vocab_capacity: int = 256,
+    def __init__(self, *, capacity: Optional[int] = None,
+                 vocab_capacity: int = 256,
                  depth: int = 2, topk: int = 16, beam: int = 32,
                  dedup: bool = True, method: str = "gemm", q_batch: int = 8,
                  stopwords: Set[str] = DEFAULT_STOPWORDS,
-                 on_overflow: str = "grow"):
+                 on_overflow: str = "grow", window: Optional[int] = None):
+        if capacity is not None and window is not None:
+            raise ValueError(
+                f"capacity={capacity} and window={window} are contradictory:"
+                " window mode pins the doc buffer at ceil(window/32)*32"
+                " slots and reuses them forever — pass only one")
         self.lexicon = Lexicon()
         self.stopwords = stopwords
+        # window mode: no pre-allocation — set_window owns the ring sizing
+        cap = max(int(capacity or 1024), 32) if window is None else 32
         self.ctx = QueryContext.from_docs([], max(int(vocab_capacity), 1),
-                                          capacity=max(int(capacity), 32))
+                                          capacity=cap, window=window)
         self.engine = CoocEngine(self.ctx, depth=depth, topk=topk, beam=beam,
                                  dedup=dedup, method=method, q_batch=q_batch,
                                  on_overflow=on_overflow)
+        self._doc_time = np.zeros((self.ctx.index.capacity,), np.float64)
+        # per-epoch: live slots sorted by timestamp (drives the time
+        # buckets); per-scope: (epoch, cutoff) of the last materialisation
+        self._lt_epoch = -1
+        self._lt_slots = np.zeros((0,), np.int64)
+        self._lt_times = np.zeros((0,), np.float64)
+        self._bucket_state: Dict[str, Tuple[int, float]] = {}
 
     @classmethod
     def from_texts(cls, texts: Sequence[str], **kwargs) -> "CoocIndex":
@@ -60,10 +114,32 @@ class CoocIndex:
 
     # -- ingest path --------------------------------------------------------
 
-    def add_documents(self, texts: Sequence[str]) -> int:
+    def add_documents(self, texts: Sequence[str], *,
+                      timestamp: Optional[float] = None,
+                      source: Optional[str] = None) -> int:
         """Tokenise + ingest; new terms extend the lexicon (growing the
         index's term axis when needed).  The docs are visible to the very
-        next query — the paper's real-time property.  Returns #docs added."""
+        next query — the paper's real-time property.  Returns #docs added.
+
+        timestamp — ingest time of this batch (seconds, default
+        ``time.time()``); drives the trailing time-bucket scopes
+        (``scope="7d"``).  source — optional tag: the batch joins the named
+        scope, queryable via ``scope=source``.  In window mode the oldest
+        batches are evicted first when the window fills.
+        """
+        if source is not None and parse_duration(source) is not None:
+            raise ValueError(
+                f"source tag {source!r} collides with the duration-scope "
+                "syntax ('7d', '24h', ...); a later query(scope="
+                f"{source!r}) would silently overwrite the tag with a "
+                "time bucket — pick a non-duration name")
+        if self.ctx.window is not None and len(texts) > self.ctx.window:
+            # reject BEFORE interning: the lexicon must not keep phantom
+            # terms for a batch that never indexes
+            raise ValueError(
+                f"batch of {len(texts)} docs exceeds window="
+                f"{self.ctx.window}; it could never be live in full — "
+                "split the batch or raise the window")
         docs = [[self.lexicon.add(w) for w in tokenize(t, self.stopwords)]
                 for t in texts]
         if not docs:
@@ -71,8 +147,15 @@ class CoocIndex:
         if len(self.lexicon) > self.ctx.vocab_size:
             self.ctx.grow_vocab(len(self.lexicon))
         max_len = max(max((len(d) for d in docs), default=1), 1)
-        self.ctx.ingest_docs(docs, max_len=max_len,
-                             on_overflow=self.engine.on_overflow)
+        slots = self.ctx.ingest_docs(docs, max_len=max_len,
+                                     on_overflow=self.engine.on_overflow,
+                                     scope=source)
+        cap = self.ctx.index.capacity
+        if cap > len(self._doc_time):
+            self._doc_time = np.pad(self._doc_time,
+                                    (0, cap - len(self._doc_time)))
+        t = time.time() if timestamp is None else float(timestamp)
+        self._doc_time[slots] = t
         return len(docs)
 
     # -- query path ---------------------------------------------------------
@@ -88,11 +171,76 @@ class CoocIndex:
     def __contains__(self, term: str) -> bool:
         return str(term).lower() in self.lexicon.term_to_id
 
-    def submit(self, seed_terms: Sequence[str], **params) -> CoocFuture:
+    def _live_by_time(self):
+        """Live slots sorted by ingest timestamp, rebuilt once per index
+        epoch (so per-query time-bucket work is a binary search, not an
+        O(window) scan)."""
+        if self._lt_epoch != self.ctx.epoch:
+            live = self.ctx.live_slots()
+            t = self._doc_time[live]
+            order = np.argsort(t, kind="stable")
+            self._lt_slots, self._lt_times = live[order], t[order]
+            self._lt_epoch = self.ctx.epoch
+        return self._lt_slots, self._lt_times
+
+    def _resolve_scope(self, scope: Optional[str],
+                       now: Optional[float]) -> Optional[str]:
+        """A duration string ("7d", "24h", "30m") refreshes the matching
+        time-bucket scope from the live docs' timestamps; any other string
+        must name an existing scope (a source tag or a user-defined
+        bitmap)."""
+        if scope is None:
+            return None
+        seconds = parse_duration(scope)
+        if seconds is not None:
+            t_now = time.time() if now is None else float(now)
+            cutoff = t_now - seconds
+            slots, times = self._live_by_time()
+            state = self._bucket_state.get(scope)
+            if (state is not None and state[0] == self.ctx.epoch
+                    and scope in self.ctx.scope_names()):
+                # membership = {t >= cutoff}: it changed iff some live
+                # timestamp lies in [old_cutoff, new_cutoff) (or the
+                # reverse interval) — two binary searches decide that,
+                # skipping the O(window) bitmap rebuild for the common
+                # nothing-crossed-the-boundary query
+                lo, hi = sorted((state[1], cutoff))
+                if (np.searchsorted(times, hi, side="left")
+                        == np.searchsorted(times, lo, side="left")):
+                    del self._bucket_state[scope]    # re-insert: LRU newest
+                    self._bucket_state[scope] = (self.ctx.epoch, cutoff)
+                    return scope
+            sel = slots[np.searchsorted(times, cutoff, side="left"):]
+            self.ctx.define_scope(scope, sel)
+            self._bucket_state.pop(scope, None)      # re-insert as newest
+            self._bucket_state[scope] = (self.ctx.epoch, cutoff)
+            while len(self._bucket_state) > MAX_TIME_BUCKETS:
+                old = next(iter(self._bucket_state))
+                del self._bucket_state[old]
+                self.ctx.drop_scope(old)
+            return scope
+        if scope not in self.ctx.scope_names():
+            raise KeyError(
+                f"unknown scope {scope!r}: not a duration (like '7d') and "
+                f"no such tag; defined scopes: {list(self.ctx.scope_names())}")
+        return scope
+
+    def submit(self, seed_terms: Sequence[str], *,
+               scope: Optional[str] = None, now: Optional[float] = None,
+               **params) -> CoocFuture:
         """Queue a query rooted at ``seed_terms`` (strings); returns the
         engine future.  ``params`` override the default plan
-        (depth/topk/beam/dedup/method)."""
+        (depth/topk/beam/dedup/method).  ``scope`` restricts the query to a
+        document subset: a trailing time bucket ("7d", "24h" — relative to
+        ``now``, default wall clock) or a named tag (``source=`` at
+        ingest).  Time buckets are materialised AT SUBMIT: queue several
+        duration-scoped queries before draining and they all execute
+        against the bucket as of the LAST submit — drain between submits
+        when distinct ``now`` snapshots matter."""
         seeds = tuple(self.term_id(t) for t in seed_terms)
+        name = self._resolve_scope(scope, now)
+        if name is not None:
+            params["scope"] = name
         return self.engine.submit(seeds, **params)
 
     def query(self, seed_terms: Sequence[str], **params) -> QueryResult:
@@ -119,6 +267,16 @@ class CoocIndex:
     @property
     def n_docs(self) -> int:
         return self.ctx.n_docs
+
+    @property
+    def live_docs(self) -> int:
+        """Docs currently answering queries (== n_docs until a window
+        evicts)."""
+        return self.ctx.live_docs
+
+    @property
+    def window(self) -> Optional[int]:
+        return self.ctx.window
 
     @property
     def n_terms(self) -> int:

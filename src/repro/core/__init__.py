@@ -12,8 +12,11 @@ from repro.core.inverted_index import (  # noqa: F401
     grow_vocab,
     incidence_dense,
     ingest,
+    ingest_at,
     mask_count,
     pack_docs,
+    retire_docs,
+    slots_bitmap,
     term_postings,
 )
 from repro.core.query import (  # noqa: F401

@@ -355,7 +355,15 @@ def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
         counts = jnp.where(state.visited[None, :], -1, counts)
     counts = jnp.where(state.valid[:, None], counts, -1)
 
-    w_top, idx_top = chunked_top_k(counts, topk)                # (B, k)
+    # k can exceed V (tiny vocab, generous spec): top_k caps at V and the
+    # missing slots pad back as invalid — the (depth, B, topk) edge-record
+    # shape contract is independent of the vocabulary
+    k_eff = min(topk, v)
+    w_top, idx_top = chunked_top_k(counts, k_eff)               # (B, k_eff)
+    if k_eff < topk:
+        w_top = jnp.pad(w_top, ((0, 0), (0, topk - k_eff)),
+                        constant_values=-1)
+        idx_top = jnp.pad(idx_top, ((0, 0), (0, topk - k_eff)))
     edge_valid = w_top > 0
     edges = (
         jnp.broadcast_to(state.terms[:, None], (b, topk)),      # src
@@ -404,7 +412,8 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
                   topk: int, beam: int, dedup: bool = True,
                   method: str = "gemm",
                   x_dense: Optional[jax.Array] = None,
-                  operands: Optional[Mapping[str, jax.Array]] = None
+                  operands: Optional[Mapping[str, jax.Array]] = None,
+                  scope_mask: Optional[jax.Array] = None
                   ) -> CoocNetwork:
     """Paper Algorithm 3, TPU-adapted (see README.md §Design).
 
@@ -434,6 +443,13 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
     Registered methods receive their ``needs`` through the ``operands``
     mapping (``x_dense=`` remains as a legacy spelling of
     ``operands={"x_dense": ...}``).
+
+    scope_mask: optional (W,) uint32 document bitmap restricting the query
+    to a doc subset (a time window, a source tag — see
+    ``QueryContext.scope``).  ANDed into the depth-0 seed filters only:
+    every deeper filter is ``parent_mask & postings``, so the scope is
+    inherited by the whole BFS for free, and results are exactly those of
+    an index containing only the scoped documents.
     """
     index, ops = _resolve_operands(index, method, x_dense, operands)
     v = index.vocab_size
@@ -446,6 +462,8 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
     masks0 = jnp.zeros((b, index.n_words), jnp.uint32)
     masks0 = masks0.at[:s].set(jnp.where(seed_valid[:, None],
                                          index.packed.T[seeds], jnp.uint32(0)))
+    if scope_mask is not None:
+        masks0 = masks0 & scope_mask[None, :]
     terms0 = jnp.full((b,), -1, jnp.int32).at[:s].set(jnp.where(seed_valid, seeds, -1))
     valid0 = jnp.zeros((b,), jnp.bool_).at[:s].set(seed_valid)
     visited0 = (jnp.zeros((v,), jnp.int32).at[seeds].add(seed_valid.astype(jnp.int32))) > 0
@@ -479,19 +497,22 @@ def bfs_construct_batch(index, seed_terms: jax.Array, *, depth: int,
                         topk: int, beam: int, dedup: bool = True,
                         method: str = "gemm",
                         x_dense: Optional[jax.Array] = None,
-                        operands: Optional[Mapping[str, jax.Array]] = None
+                        operands: Optional[Mapping[str, jax.Array]] = None,
+                        scope_mask: Optional[jax.Array] = None
                         ) -> CoocNetwork:
     """Batched queries (the web-service scenario): seed_terms (Q, S).
 
     vmaps the whole BFS over independent queries; the packed index (and
     the method's operands — whether cached in a QueryContext or passed via
     ``operands``/``x_dense``) is closed over — broadcast, i.e. sharded
-    once, not replicated per query, under pjit.
+    once, not replicated per query, under pjit.  ``scope_mask`` is shared
+    by the whole batch (the engine groups queries by scope, so a batch is
+    scope-homogeneous).
     """
     index, ops = _resolve_operands(index, method, x_dense, operands)
     fn = functools.partial(bfs_construct, index, depth=depth, topk=topk,
                            beam=beam, dedup=dedup, method=method,
-                           operands=ops)
+                           operands=ops, scope_mask=scope_mask)
     nets = jax.vmap(fn)(seed_terms)
     return CoocNetwork(
         src=nets.src.reshape(-1), dst=nets.dst.reshape(-1),
@@ -507,11 +528,22 @@ def construct(index, spec) -> "QueryResult":
     from a context, exactly as in :func:`bfs_construct`).  This is the
     reference semantics for the engine's batched path — a micro-batched
     result must be bit-identical to ``construct(ctx, spec)``.
+
+    A spec with ``scope`` set requires a QueryContext (the scope NAME
+    resolves to the context's cached bitmap; a bare PackedIndex has no
+    scope table).
     """
     from repro.core.query import QueryResult
     from repro.core.query_context import QueryContext
+    scope_mask = None
+    if spec.scope is not None:
+        if not isinstance(index, QueryContext):
+            raise ValueError(
+                f"spec.scope={spec.scope!r} needs a QueryContext to resolve "
+                "the scope name to a document bitmap; got a bare index")
+        scope_mask = index.scope(spec.scope)
     net = bfs_construct(index, jnp.asarray(spec.seed_row()), depth=spec.depth,
                         topk=spec.topk, beam=spec.beam, dedup=spec.dedup,
-                        method=spec.method)
+                        method=spec.method, scope_mask=scope_mask)
     epoch = index.epoch if isinstance(index, QueryContext) else 0
     return QueryResult(network=net, spec=spec, epoch=epoch)

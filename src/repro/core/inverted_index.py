@@ -226,6 +226,43 @@ def doc_freq_under_batch_gemm(masks: jax.Array, x_dense: jax.Array) -> jax.Array
     return counts.astype(jnp.int32)
 
 
+def slots_bitmap(doc_slots, n_words: int) -> np.ndarray:
+    """Host helper: doc slot ids -> (W,) uint32 doc bitmap.
+
+    The bitmap form of a document set — a retirement target for
+    :func:`retire_docs`, or a scope operand for ``bfs_construct``'s
+    ``scope_mask`` (both consume the same representation).
+    """
+    m = np.zeros((n_words,), np.uint32)
+    s = np.asarray(doc_slots, np.int64).reshape(-1)
+    if s.size:
+        if s.min() < 0 or s.max() >= n_words * 32:
+            raise ValueError(f"doc slot out of range [0, {n_words * 32})")
+        np.bitwise_or.at(m, s // 32, np.uint32(1) << (s % 32).astype(np.uint32))
+    return m
+
+
+def retire_docs(index: PackedIndex, doc_mask: jax.Array) -> PackedIndex:
+    """Evict a document set: clear its postings bits, decrement doc_freq.
+
+    doc_mask: (W,) uint32 bitmap of the doc slots to retire (see
+    :func:`slots_bitmap`).  Purely functional and jit-safe: one AND pass
+    over ``packed`` plus a popcount reduction for the df decrement.
+
+    Doc slot ids are stable (no compaction): retired slots keep their
+    positions but hold all-zero postings, so no term filter — and hence no
+    query — can ever match them again.  ``n_docs`` is unchanged: it is the
+    valid-slot high-water mark (bits at/above it are guaranteed zero), not
+    the live-doc count; the ring bookkeeping in ``QueryContext`` tracks
+    liveness and hands freed slots to :func:`ingest_at`.
+    """
+    removed = index.packed & doc_mask[:, None]
+    df_removed = jnp.sum(jax.lax.population_count(removed).astype(jnp.int32),
+                         axis=0)
+    packed = index.packed & ~doc_mask[:, None]
+    return PackedIndex(packed, index.doc_freq - df_removed, index.n_docs)
+
+
 def ingest(index: PackedIndex, new_doc_terms: jax.Array, new_doc_valid: jax.Array) -> PackedIndex:
     """Real-time ingest: append a block of documents to the index.
 
@@ -236,11 +273,27 @@ def ingest(index: PackedIndex, new_doc_terms: jax.Array, new_doc_valid: jax.Arra
     ``index.n_docs``; the returned index answers queries immediately
     (the paper's 'real-time' property).  Requires capacity headroom.
     """
-    n_new, m = new_doc_terms.shape
-    v = index.vocab_size
     doc_ids = index.n_docs + jnp.cumsum(new_doc_valid.astype(jnp.int32)) - 1  # (N,)
+    return ingest_at(index, new_doc_terms, new_doc_valid, doc_ids)
+
+
+def ingest_at(index: PackedIndex, new_doc_terms: jax.Array,
+              new_doc_valid: jax.Array, doc_slots: jax.Array) -> PackedIndex:
+    """Scatter a block of documents into EXPLICIT slot positions.
+
+    The ring-write primitive behind sliding-window ingest: ``doc_slots``
+    (N,) int32 names the target slot of each row (slots of invalid rows are
+    ignored).  Target slots must currently hold all-zero postings — either
+    never used, or cleared by :func:`retire_docs` — because the OR-scatter
+    below relies on the target bits being 0; ``QueryContext`` evicts before
+    it reuses.  ``n_docs`` advances to the new valid-slot high-water mark
+    (it never shrinks: slot ids are stable).
+    """
+    n_new, m = new_doc_terms.shape
+    if n_new == 0:
+        return index
     flat_terms = new_doc_terms.reshape(-1)
-    flat_docs = jnp.repeat(doc_ids, m)
+    flat_docs = jnp.repeat(jnp.clip(doc_slots, 0), m)
     valid = (flat_terms >= 0) & jnp.repeat(new_doc_valid, m)
 
     # Dedupe (doc, term) pairs so each (doc, term) contributes one bit and
@@ -267,5 +320,7 @@ def ingest(index: PackedIndex, new_doc_terms: jax.Array, new_doc_valid: jax.Arra
     packed = index.packed.at[word_s, terms_s].add(contrib, mode="drop")
 
     df = index.doc_freq.at[terms_s].add(jnp.where(first, 1, 0), mode="drop")
-    n_docs = index.n_docs + jnp.sum(new_doc_valid.astype(jnp.int32))
+    high_water = jnp.max(jnp.where(new_doc_valid,
+                                   jnp.clip(doc_slots, 0) + 1, 0))
+    n_docs = jnp.maximum(index.n_docs, high_water.astype(jnp.int32))
     return PackedIndex(packed, df, n_docs)

@@ -138,16 +138,22 @@ register_count_method("pallas", (), _pallas_counts)
 
 
 class PlanKey(NamedTuple):
-    """Everything that shapes the compiled executable — and nothing else.
+    """Everything that shapes one executed batch — and nothing else.
 
     Two specs with equal plan keys run through the same jitted executable
-    (possibly in the same micro-batch); distinct keys compile separately.
+    (possibly in the same micro-batch).  ``scope`` is the one field that is
+    an OPERAND name rather than a compile-time shape: it keeps batches
+    scope-homogeneous (one bitmap per executed batch) and tells the engine
+    which context bitmap to fetch, but the engine's executor cache
+    collapses all scoped plans with equal shape fields onto one compiled
+    executable (the bitmap is a traced argument).
     """
     depth: int
     topk: int
     beam: int
     dedup: bool
     method: str
+    scope: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,7 +163,11 @@ class QuerySpec:
     seeds  — term ids to root the BFS at (1..beam of them);
     depth  — BFS levels; topk — edges kept per frontier node per level;
     beam   — frontier width (and max seeds); dedup — level-synchronous
-    visited-set dedup; method — a registered count method.
+    visited-set dedup; method — a registered count method;
+    scope  — optional name of a QueryContext document scope (time bucket,
+    source tag): the query runs as if the index held only the scoped docs.
+    Scope existence is checked at execution (the name resolves against the
+    serving context, which QuerySpec never sees).
     """
     seeds: Tuple[int, ...]
     depth: int = 3
@@ -165,6 +175,7 @@ class QuerySpec:
     beam: int = 32
     dedup: bool = True
     method: str = "gemm"
+    scope: Optional[str] = None
 
     def __post_init__(self):
         seeds = tuple(int(s) for s in self.seeds)
@@ -181,12 +192,16 @@ class QuerySpec:
         for field in ("depth", "topk", "beam"):
             if int(getattr(self, field)) < 1:
                 raise ValueError(f"{field} must be >= 1")
+        if self.scope is not None and (not isinstance(self.scope, str)
+                                       or not self.scope):
+            raise ValueError(f"scope must be None or a non-empty scope name, "
+                             f"got {self.scope!r}")
         get_count_method(self.method)        # unknown method -> ValueError
 
     @property
     def plan_key(self) -> PlanKey:
         return PlanKey(self.depth, self.topk, self.beam, self.dedup,
-                       self.method)
+                       self.method, self.scope)
 
     @property
     def max_edges(self) -> int:

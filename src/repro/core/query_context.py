@@ -6,10 +6,10 @@ Before this existed, each jitted ``bfs_construct`` call re-unpacked the
 bit-packed index into the dense incidence matrix X (D, V) — per query, per
 service, with no reuse and no sharding at the unpack site.  The context
 inverts that: it owns the packed index plus **epoch-versioned derived
-artifacts** (today: the dense X used by the ``gemm`` method), builds them
-lazily ONCE per ingest epoch, and shards them at build time via
-``launch.sharding.constrain`` so the jitted query functions receive
-already-placed operands.
+artifacts** (the dense X used by the ``gemm`` method, the named scope
+bitmaps), builds them lazily ONCE per ingest epoch, and shards them at
+build time via ``launch.sharding.constrain`` so the jitted query functions
+receive already-placed operands.
 
 * ``x_dense()``     — cached dense incidence, rebuilt iff the epoch moved.
 * ``ingest(...)``   — host-side capacity check (raise or grow-by-repack)
@@ -19,14 +19,35 @@ already-placed operands.
                       for ``bfs_construct`` (gemm needs X; popcount and
                       pallas read the packed bitmap directly).
 
+**Sliding window (streaming mode).**  With ``window=N`` the context stops
+growing and manages doc slots as a ring: each ingest batch is a *block*
+occupying consecutive ring slots, and when live docs would exceed the
+window the OLDEST blocks are evicted — their postings bits cleared and
+their ``doc_freq`` contributions decremented on device
+(:func:`~repro.core.inverted_index.retire_docs`) — before the new block is
+scattered into the freed slots (:func:`~repro.core.inverted_index.ingest_at`).
+Capacity is fixed at ``ceil(window / 32) * 32`` slots: a long-lived
+streaming index holds O(window) memory no matter how many docs flow
+through.  Doc slot ids are stable for a block's whole lifetime; liveness
+is host bookkeeping (the block deque), never a device search.
+
+**Scopes.**  A scope is a named ``(W,)`` uint32 document bitmap — a time
+bucket, a source tag — maintained host-side and served to queries as a
+cached epoch-versioned device artifact (``scope(name)``).  In the
+bit-packed index a doc scope is just one more bitmap ANDed into the
+depth-0 seed filters (``bfs_construct(..., scope_mask=...)``), so scoped
+queries cost one extra AND, not a re-index.  Eviction clears retired docs
+from every scope; ``ingest_docs(..., scope="tag")`` tags the new block.
+
 The context is host-side state (plain Python object, NOT a pytree): jitted
 functions take ``(index, seeds, x_dense)`` as array arguments, so a new
 epoch is a new array — no retrace, no stale constants baked into traces.
 """
 from __future__ import annotations
 
+from collections import deque
 from collections.abc import Mapping
-from typing import Optional, Sequence
+from typing import Deque, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +58,10 @@ from repro.core.inverted_index import (
     grow_capacity,
     grow_vocab,
     incidence_dense,
-    ingest,
+    ingest_at,
     pack_docs,
+    retire_docs,
+    slots_bitmap,
 )
 from repro.core.query import get_count_method
 
@@ -78,20 +101,48 @@ class CapacityError(ValueError):
 class QueryContext:
     """Packed index + epoch-versioned caches + method dispatch table."""
 
-    def __init__(self, index: PackedIndex, *, dtype=jnp.bfloat16):
+    def __init__(self, index: PackedIndex, *, dtype=jnp.bfloat16,
+                 window: Optional[int] = None):
         self._index = index
         self._dtype = dtype
         self.epoch = 0
         self._x_dense: Optional[jax.Array] = None
         self._x_epoch = -1
         self.unpack_count = 0   # monitoring: dense rebuilds == ingest epochs
+        # streaming state: live ingest blocks (slot arrays, oldest first),
+        # ring write head, named scope bitmaps + their device cache
+        n0 = int(index.n_docs)
+        self._blocks: Deque[np.ndarray] = deque()
+        if n0 > 0:
+            self._blocks.append(np.arange(n0, dtype=np.int64))
+        self._ring_tail = n0
+        self._window: Optional[int] = None
+        # blocks allocated before a set_window capacity growth may sit
+        # anywhere in the padded ring ("stranded"); only the oldest
+        # _stranded blocks can ever overlap a fresh target range, so the
+        # ingest-path overlap sweep is O(0) in steady state
+        self._stranded = 0
+        self._scopes: Dict[str, np.ndarray] = {}
+        self._scope_dev: Dict[str, Tuple[int, jax.Array]] = {}
+        self.evicted_docs_total = 0    # monitoring: docs retired by the ring
+        if window is not None:
+            if n0 > int(window):
+                # same contract as the ingest path: a block that could
+                # never be live in full is an error, not a silent wipe
+                # (set_window's whole-block eviction would retire the
+                # entire initial corpus)
+                raise ValueError(
+                    f"initial corpus of {n0} docs exceeds window={window}; "
+                    "it could never be live in full — raise the window or "
+                    "pre-trim the corpus")
+            self.set_window(window)
 
     @classmethod
     def from_docs(cls, doc_terms: Sequence[Sequence[int]], vocab_size: int, *,
-                  capacity: Optional[int] = None, dtype=jnp.bfloat16
-                  ) -> "QueryContext":
+                  capacity: Optional[int] = None, dtype=jnp.bfloat16,
+                  window: Optional[int] = None) -> "QueryContext":
         return cls(pack_docs(doc_terms, vocab_size, capacity=capacity),
-                   dtype=dtype)
+                   dtype=dtype, window=window)
 
     @property
     def index(self) -> PackedIndex:
@@ -104,6 +155,137 @@ class QueryContext:
     @property
     def n_docs(self) -> int:
         return int(self._index.n_docs)
+
+    # -- streaming window ---------------------------------------------------
+
+    @property
+    def window(self) -> Optional[int]:
+        return self._window
+
+    @property
+    def live_docs(self) -> int:
+        """Documents currently answering queries (ingested minus evicted)."""
+        return sum(len(b) for b in self._blocks)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self._blocks)
+
+    def live_slots(self) -> np.ndarray:
+        """Slot ids of all live documents, oldest block first."""
+        if not self._blocks:
+            return np.zeros((0,), np.int64)
+        return np.concatenate(list(self._blocks))
+
+    def set_window(self, window: int) -> None:
+        """Enter (or resize) sliding-window mode: at most ``window`` live
+        docs, capacity pinned at ``ceil(window/32)*32`` slots.  Shrinking
+        below the current live count evicts oldest blocks to fit."""
+        window = int(window)
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        need_words = (window + 31) // 32
+        if need_words > self._index.n_words:
+            packed = jnp.pad(self._index.packed,
+                             ((0, need_words - self._index.n_words), (0, 0)))
+            self._index = PackedIndex(packed, self._index.doc_freq,
+                                      self._index.n_docs)
+            self.epoch += 1          # X's doc axis grew: rebuild once
+            if self._blocks:
+                self._stranded = len(self._blocks)
+        self._window = window
+        if self._evict_for(0):
+            self.epoch += 1          # retired docs: caches must rebuild
+
+    def _evict_for(self, n_new: int) -> int:
+        """Evict oldest blocks until ``live + n_new <= window``; one device
+        retire pass for all of them.  Returns #docs evicted."""
+        assert self._window is not None
+        evicted: list = []
+        while self._blocks and self.live_docs + n_new > self._window:
+            evicted.append(self._blocks.popleft())
+            self._stranded = max(0, self._stranded - 1)
+        if not evicted:
+            return 0
+        slots = np.concatenate(evicted)
+        self._retire_slots(slots)
+        return len(slots)
+
+    def _retire_slots(self, slots: np.ndarray) -> None:
+        """One device retire pass + host scope cleanup for ``slots``."""
+        mask = slots_bitmap(slots, self._index.n_words)
+        self._index = retire_docs(self._index, jnp.asarray(mask))
+        for name in self._scopes:
+            self._scopes[name] = self._scope_host(name) & ~mask
+            self._scope_dev.pop(name, None)
+        self.evicted_docs_total += len(slots)
+
+    def retire_oldest_block(self) -> int:
+        """Manually evict the oldest ingest block (postings cleared,
+        doc_freq decremented, scopes updated).  Returns #docs retired;
+        bumps the epoch iff anything was retired."""
+        if not self._blocks:
+            return 0
+        slots = self._blocks.popleft()
+        self._stranded = max(0, self._stranded - 1)
+        self._retire_slots(slots)
+        self.epoch += 1
+        return len(slots)
+
+    # -- scopes -------------------------------------------------------------
+
+    def _scope_host(self, name: str) -> np.ndarray:
+        """Host bitmap for ``name``, padded to the current word count
+        (capacity growth only appends all-zero words)."""
+        m = self._scopes[name]
+        w = self._index.n_words
+        if len(m) < w:
+            m = np.pad(m, (0, w - len(m)))
+            self._scopes[name] = m
+        return m
+
+    def tag_scope(self, name: str, doc_slots) -> None:
+        """OR ``doc_slots`` into the named scope bitmap (created empty on
+        first use)."""
+        if name not in self._scopes:
+            self._scopes[name] = np.zeros((self._index.n_words,), np.uint32)
+        self._scopes[name] = (self._scope_host(name)
+                              | slots_bitmap(doc_slots, self._index.n_words))
+        self._scope_dev.pop(name, None)
+
+    def define_scope(self, name: str, doc_slots) -> None:
+        """Set/replace the named scope to exactly ``doc_slots``.  A no-op
+        when the membership is unchanged, so callers that re-derive a scope
+        per query (the facade's trailing time buckets) keep the device
+        cache warm instead of re-uploading an identical bitmap."""
+        new = slots_bitmap(doc_slots, self._index.n_words)
+        old = self._scopes.get(name)
+        if old is not None and len(old) == len(new) and (old == new).all():
+            return
+        self._scopes[name] = new
+        self._scope_dev.pop(name, None)
+
+    def drop_scope(self, name: str) -> None:
+        self._scopes.pop(name, None)
+        self._scope_dev.pop(name, None)
+
+    def scope_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._scopes))
+
+    def scope(self, name: str) -> jax.Array:
+        """Device bitmap of the named scope — the ``scope_mask`` operand of
+        ``bfs_construct``.  Cached per epoch (ingest/evict/grow all bump the
+        epoch; ``tag_scope``/``define_scope`` invalidate explicitly), so a
+        warm scoped plan uploads nothing per query."""
+        if name not in self._scopes:
+            raise KeyError(f"unknown scope {name!r}; "
+                           f"defined scopes: {list(self.scope_names())}")
+        ent = self._scope_dev.get(name)
+        if ent is None or ent[0] != self.epoch:
+            arr = jnp.asarray(self._scope_host(name))
+            self._scope_dev[name] = (self.epoch, arr)
+            ent = self._scope_dev[name]
+        return ent[1]
 
     # -- cached artifacts ---------------------------------------------------
 
@@ -128,27 +310,79 @@ class QueryContext:
     # -- ingest path --------------------------------------------------------
 
     def ingest(self, new_doc_terms: jax.Array, new_doc_valid: jax.Array, *,
-               on_overflow: str = "raise") -> None:
-        """Append documents; host-side capacity check BEFORE the jitted
+               on_overflow: str = "raise",
+               scope: Union[str, Sequence[str], None] = None) -> np.ndarray:
+        """Ingest a block of documents; returns the slot ids assigned to
+        the block's valid rows (in row order).
+
+        Append mode (no window): host-side capacity check BEFORE the jitted
         scatter (the device scatter clamps out-of-range writes with
         ``mode="drop"``, which silently loses docs — never acceptable in
-        the serving path).
+        the serving path).  on_overflow: "raise" -> CapacityError; "grow"
+        -> double capacity via :func:`grow_capacity` repack until the block
+        fits.
 
-        on_overflow: "raise" -> CapacityError; "grow" -> double capacity
-        via :func:`grow_capacity` repack until the block fits.
+        Window mode: the oldest blocks are evicted until the new block fits
+        under ``window``, then the block is scattered into ring slots —
+        capacity NEVER grows.  A block larger than the window is rejected
+        (it could never be live in full).
+
+        ``scope`` tags the new block into the named scope bitmap(s).
         """
-        n_new = int(np.asarray(new_doc_valid).sum())
-        needed = self.n_docs + n_new
-        if needed > self._index.capacity:
-            if on_overflow == "grow":
-                self._index = grow_capacity(self._index, needed)
-            else:
-                raise CapacityError(
-                    f"ingest of {n_new} docs would exceed capacity "
-                    f"{self._index.capacity} (n_docs={self.n_docs}); "
-                    f"pass on_overflow='grow' to repack")
-        self._index = ingest(self._index, new_doc_terms, new_doc_valid)
+        valid_np = np.asarray(new_doc_valid).astype(bool)
+        n_new = int(valid_np.sum())
+        n_rows = valid_np.shape[0]
+        if self._window is not None:
+            if n_new > self._window:
+                raise ValueError(
+                    f"ingest block of {n_new} docs exceeds window="
+                    f"{self._window}; it could never be live in full — "
+                    "split the block or raise the window")
+            self._evict_for(n_new)
+            cap = self._index.capacity
+            slots = (self._ring_tail + np.arange(n_new, dtype=np.int64)) % cap
+            # ingest_at's OR-scatter needs all-zero target slots.  The
+            # window-count eviction above guarantees that while the live
+            # region is circular-contiguous, but a set_window(...) growth
+            # repack can leave wrapped live blocks stranded anywhere in the
+            # ring — evict (oldest-first) until none overlaps the target
+            # range.  Only the oldest _stranded blocks can overlap (post-
+            # growth blocks are allocated consecutively from the tail), so
+            # steady-state ingest skips the sweep entirely.
+            stranded = []
+            while self._stranded and any(
+                    np.isin(b, slots).any()
+                    for b in list(self._blocks)[:self._stranded]):
+                stranded.append(self._blocks.popleft())
+                self._stranded -= 1
+            if stranded:
+                self._retire_slots(np.concatenate(stranded))
+            self._ring_tail = int((self._ring_tail + n_new) % cap)
+        else:
+            needed = self.n_docs + n_new
+            if needed > self._index.capacity:
+                if on_overflow == "grow":
+                    self._index = grow_capacity(self._index, needed)
+                else:
+                    raise CapacityError(
+                        f"ingest of {n_new} docs would exceed capacity "
+                        f"{self._index.capacity} (n_docs={self.n_docs}); "
+                        f"pass on_overflow='grow' to repack")
+            start = self.n_docs
+            slots = np.arange(start, start + n_new, dtype=np.int64)
+            self._ring_tail = start + n_new
+        row_slots = np.zeros((n_rows,), np.int64)
+        row_slots[np.flatnonzero(valid_np)] = slots
+        self._index = ingest_at(self._index, new_doc_terms, new_doc_valid,
+                                jnp.asarray(row_slots, jnp.int32))
+        if n_new > 0:
+            self._blocks.append(slots)
+            if scope is not None:
+                names = (scope,) if isinstance(scope, str) else tuple(scope)
+                for name in names:
+                    self.tag_scope(name, slots)
         self.epoch += 1
+        return slots
 
     def grow_vocab(self, min_vocab: int) -> None:
         """Widen the term axis to at least ``min_vocab`` (doubling, so
@@ -162,14 +396,23 @@ class QueryContext:
 
     def ingest_docs(self, doc_terms: Sequence[Sequence[int]], *,
                     max_len: int = 64, on_overflow: str = "raise",
-                    on_long: str = "raise") -> None:
+                    on_long: str = "raise", window: Optional[int] = None,
+                    scope: Union[str, Sequence[str], None] = None
+                    ) -> np.ndarray:
         """Host convenience: pad token lists to (N, max_len) and ingest.
+        Returns the slot ids assigned to the new docs.
 
         on_long: "raise" -> ValueError when any document holds more than
         ``max_len`` term ids (truncation would silently drop postings —
         the repo's raise-don't-drop policy); "truncate" -> explicit opt-in
         to keep only the first ``max_len`` ids per document.
+
+        window: enters (or resizes) sliding-window mode before this ingest
+        — equivalent to :meth:`set_window` then :meth:`ingest`.
+        scope: tag the new docs into the named scope bitmap(s).
         """
+        if window is not None:
+            self.set_window(window)
         doc_terms = [list(t) for t in doc_terms]
         over = [(i, len(t)) for i, t in enumerate(doc_terms) if len(t) > max_len]
         if over and on_long != "truncate":
@@ -183,5 +426,5 @@ class QueryContext:
         for i, t in enumerate(doc_terms):
             t = t[:max_len]
             ids[i, :len(t)] = t
-        self.ingest(jnp.asarray(ids), jnp.asarray(np.ones((n,), bool)),
-                    on_overflow=on_overflow)
+        return self.ingest(jnp.asarray(ids), jnp.asarray(np.ones((n,), bool)),
+                           on_overflow=on_overflow, scope=scope)

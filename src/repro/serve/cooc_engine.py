@@ -58,6 +58,7 @@ class CoocRequest:
     t_submit: float = 0.0
     t_done: float = 0.0
     result: Optional[QueryResult] = None
+    error: Optional[Exception] = None
 
     @property
     def seed_terms(self) -> List[int]:
@@ -81,7 +82,10 @@ class CoocFuture:
 
     ``done()`` is non-blocking; ``result()`` drives the owning engine's
     step loop until this request is served, then returns the
-    :class:`QueryResult` (repeat calls return the same object).
+    :class:`QueryResult` (repeat calls return the same object).  A request
+    that FAILED at execution (e.g. its scope was dropped between submit
+    and step) raises that error from ``result()`` instead — repeat calls
+    re-raise; the rest of the queue is unaffected.
     """
 
     __slots__ = ("_engine", "_req")
@@ -99,14 +103,16 @@ class CoocFuture:
         return self._req.spec
 
     def done(self) -> bool:
-        return self._req.result is not None
+        return self._req.result is not None or self._req.error is not None
 
     def result(self) -> QueryResult:
-        while self._req.result is None:
+        while self._req.result is None and self._req.error is None:
             if self._engine.step() == 0:
                 raise RuntimeError(
                     f"request {self._req.rid} is not queued in its engine "
                     "(queue drained without serving it)")   # pragma: no cover
+        if self._req.error is not None:
+            raise self._req.error
         return self._req.result
 
 
@@ -161,12 +167,17 @@ class CoocEngine:
         return len(self._executors)
 
     def _executor(self, key: PlanKey):
-        fn = self._executors.get(key)
+        """Jitted executable for ``key``.  The cache key collapses the
+        scope NAME to scoped-or-not: the scope bitmap is a traced operand,
+        so every scoped plan with equal shape fields shares one executable
+        — queries over "7d" and "30d" never compile twice."""
+        exec_key = key._replace(scope=key.scope is not None)
+        fn = self._executors.get(exec_key)
         if fn is None:
             fn = jax.jit(functools.partial(
                 bfs_construct_batch, depth=key.depth, topk=key.topk,
                 beam=key.beam, dedup=key.dedup, method=key.method))
-            self._executors[key] = fn
+            self._executors[exec_key] = fn
         return fn
 
     # -- query path ---------------------------------------------------------
@@ -193,6 +204,14 @@ class CoocEngine:
             spec = query
         else:
             spec = self.make_spec(query, **overrides)
+        if spec.scope is not None and spec.scope not in self.ctx.scope_names():
+            # same policy as the rest of QuerySpec validation: fail at
+            # submit, never after the request is admitted (a step-time
+            # failure would drop the whole micro-batch's futures)
+            raise KeyError(
+                f"unknown scope {spec.scope!r}; define/tag it on the "
+                f"context before submitting (defined: "
+                f"{list(self.ctx.scope_names())})")
         req = CoocRequest(self._next_rid, spec, t_submit=time.perf_counter())
         self._next_rid += 1
         self.queue.append(req)
@@ -201,10 +220,29 @@ class CoocEngine:
     def step(self) -> int:
         """Serve one micro-batch: admit up to q_batch queued queries of the
         head-of-queue PLAN, run its cached jitted executable once,
-        distribute QueryResults.  Returns #served."""
+        distribute QueryResults.  Returns #requests resolved (served, or
+        failed onto their futures)."""
         if not self.queue:
             return 0
         key = self.queue[0].spec.plan_key
+        kwargs = {}
+        if key.scope is not None:
+            # resolved BEFORE the queue is mutated; grouping by plan key
+            # guarantees the whole batch shares this one bitmap.  A scope
+            # dropped between submit and step poisons exactly that plan's
+            # requests — they fail onto their futures and leave the queue,
+            # so one bad scope can never wedge the engine.
+            try:
+                kwargs["scope_mask"] = self.ctx.scope(key.scope)
+            except KeyError as e:
+                poisoned = [r for r in self.queue if r.spec.plan_key == key]
+                self.queue = [r for r in self.queue
+                              if r.spec.plan_key != key]
+                t_done = time.perf_counter()
+                for r in poisoned:
+                    r.error = e
+                    r.t_done = t_done
+                return len(poisoned)
         admitted: List[CoocRequest] = []
         rest: List[CoocRequest] = []
         for req in self.queue:
@@ -219,7 +257,7 @@ class CoocEngine:
             seeds[i] = req.spec.seed_row()
         operands = self.ctx.operands(key.method)
         net = self._executor(key)(self.ctx.index, jnp.asarray(seeds),
-                                  operands=operands)
+                                  operands=operands, **kwargs)
         jax.block_until_ready(net.src)
 
         src = np.asarray(net.src).reshape(self.q_batch, -1)
@@ -260,26 +298,41 @@ class CoocEngine:
     # -- ingest path --------------------------------------------------------
 
     def ingest_docs(self, doc_terms: Sequence[Sequence[int]], *,
-                    max_len: int = 64, on_long: str = "raise") -> None:
+                    max_len: int = 64, on_long: str = "raise",
+                    doc_window=None, scope=None):
         """Real-time ingest through the context: host-side capacity check
         (raise/grow per ``on_overflow``), jitted scatter, epoch bump — the
-        next batch sees the new docs and rebuilds the dense cache once."""
-        self.ctx.ingest_docs(doc_terms, max_len=max_len,
-                             on_overflow=self.on_overflow, on_long=on_long)
+        next batch sees the new docs and rebuilds the dense cache once.
+
+        ``doc_window``/``scope`` pass through to
+        :meth:`QueryContext.ingest_docs` (sliding-window doc cap, scope
+        tagging); returns the new docs' slot ids.  Named ``doc_window``
+        here — NOT ``window`` — because the engine constructor's
+        ``window=`` already sizes the stats ring buffers."""
+        return self.ctx.ingest_docs(doc_terms, max_len=max_len,
+                                    on_overflow=self.on_overflow,
+                                    on_long=on_long, window=doc_window,
+                                    scope=scope)
 
     # -- stats --------------------------------------------------------------
 
     def stats(self) -> EngineStats:
         """Latency/occupancy percentiles over the ring-buffer window (the
         last ``window`` queries/batches); cumulative totals live on
-        ``served_total`` / ``batches_total``."""
-        xs = sorted(self.latencies_ms)
-        if not xs:
+        ``served_total`` / ``batches_total``.
+
+        Quantiles are ``np.percentile`` (linear interpolation) over a
+        snapshot of the window — the former hand-rolled ``xs[int(n * p)]``
+        index was off by one at exact rank multiples (e.g. p50 of 4
+        samples read the 3rd-smallest, not the midpoint).
+        """
+        xs = np.fromiter(self.latencies_ms, dtype=np.float64)
+        if xs.size == 0:
             return EngineStats(0, 0, 0, 0, 0,
                                compiled_plans=self.compiled_plans)
-        q = lambda p: xs[min(int(len(xs) * p), len(xs) - 1)]
+        p50, p95, p99 = np.percentile(xs, [50.0, 95.0, 99.0])
         occ = self.batch_occupancy
-        return EngineStats(len(xs), q(0.5), q(0.95), q(0.99), xs[-1],
-                           batches=len(occ),
+        return EngineStats(int(xs.size), float(p50), float(p95), float(p99),
+                           float(xs.max()), batches=len(occ),
                            mean_occupancy=float(np.mean(occ)) if occ else 0.0,
                            compiled_plans=self.compiled_plans)

@@ -368,6 +368,50 @@ class TestChunkedTopK:
         w0, i0 = jax.lax.top_k(x, 3)
         np.testing.assert_array_equal(np.asarray(i), np.asarray(i0))
 
+    @staticmethod
+    def _assert_order_pinned(x, k, n_chunks):
+        from repro.core.cooccurrence import chunked_top_k
+        xj = jnp.asarray(x)
+        w0, i0 = jax.lax.top_k(xj, k)
+        w1, i1 = chunked_top_k(xj, k, n_chunks=n_chunks)
+        np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+    def test_tie_break_regression_adversarial(self):
+        """Pin chunked_top_k ORDER == lax.top_k on the adversarial tie
+        shapes that could silently reorder edges if the two-stage merge
+        ever lost the lower-index-first guarantee: all-equal rows, equal
+        runs straddling chunk boundaries, ties at chunk edges."""
+        cases = []
+        cases.append(np.full((2, 64), 7, np.int32))        # every weight equal
+        x = np.zeros((1, 64), np.int32)                    # runs straddle the
+        x[0, 14:18] = 9                                    # 0|1 and 1|2 chunk
+        x[0, 30:34] = 9                                    # boundaries (c=16)
+        cases.append(x)
+        # descending plateaus, each plateau crossing a boundary
+        cases.append(np.repeat(np.arange(8, 0, -1, np.int32), 8)[None, :])
+        # ties exactly at chunk-edge positions (last of one, first of next)
+        x = np.zeros((2, 64), np.int32)
+        x[:, 15] = 5
+        x[:, 16] = 5
+        x[0, 63] = 5
+        x[1, 0] = 5
+        cases.append(x)
+        for x in cases:
+            for k in (1, 3, 8, 16):
+                self._assert_order_pinned(x, k, n_chunks=4)
+
+    @given(st.integers(1, 6), st.integers(0, 1 << 16))
+    @settings(max_examples=15, deadline=None)
+    def test_tie_break_property_two_valued(self, k, seed):
+        """Two-valued weight rows (the worst tie density) with counts
+        straddling every chunk boundary: order equality must hold for any
+        k and chunking that the BFS can produce."""
+        rng = np.random.default_rng(seed)
+        x = rng.integers(0, 2, (3, 128)).astype(np.int32)
+        for n_chunks in (4, 8, 16):
+            self._assert_order_pinned(x, k, n_chunks=n_chunks)
+
 
 class TestNetworkOps:
     def test_top_edges_limit(self):

@@ -1,0 +1,172 @@
+"""Differential test harness: every execution path of Algorithm 3 must
+agree on randomized adversarial corpora.
+
+Hypothesis-driven: random corpora seeded with the known nasty shapes —
+empty documents, heavy within-doc term repetition, vocab-boundary ids
+(0 and V-1), all-identical docs — asserting that
+
+* ``bfs_construct`` edge sets are IDENTICAL across the three device count
+  methods (gemm / popcount / pallas),
+* they match the paper-faithful host deployment
+  (``bfs_construct_host_fast``) edge-for-edge,
+* depth-1 edge weights equal the ``traversal_construct_host`` oracle's
+  exact pair counts,
+
+and that the agreement survives interleaved ``ingest_docs`` /
+``retire_docs`` (window eviction) / ``grow_vocab`` sequences — the full
+streaming mutation surface — by comparing against an index rebuilt from
+scratch on the surviving docs after every mutation.
+
+Registered under the ``slow`` marker; the per-test example budget is
+``COOC_DIFF_EXAMPLES`` (CI sets a reduced profile so the suite runs on
+every PR without blowing the time budget).
+"""
+import os
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    QueryContext,
+    QuerySpec,
+    bfs_construct,
+    bfs_construct_host_fast,
+    build_host_index,
+    construct,
+    pack_docs,
+    to_edge_dict,
+    traversal_construct_host,
+)
+
+pytestmark = pytest.mark.slow
+
+MAX_EXAMPLES = int(os.environ.get("COOC_DIFF_EXAMPLES", "12"))
+METHODS = ("gemm", "popcount", "pallas")
+
+
+def _adversarial_corpus(n_docs, vocab, seed, flavor):
+    """Random corpus mixing the known-nasty document shapes."""
+    rng = np.random.default_rng(seed)
+    docs = []
+    for i in range(n_docs):
+        kind = (i + flavor) % 5
+        if kind == 0:
+            docs.append([])                                   # empty doc
+        elif kind == 1:                                       # duplicate terms
+            t = int(rng.integers(0, vocab))
+            docs.append([t] * int(rng.integers(2, 6)))
+        elif kind == 2:                                       # boundary ids
+            docs.append([0, vocab - 1, vocab - 1, 0])
+        else:
+            docs.append(rng.integers(0, vocab,
+                                     int(rng.integers(1, 8))).tolist())
+    if flavor == 4 and docs:
+        docs = [list(docs[-1])] * n_docs                      # all identical
+    return docs
+
+
+def _edge_set(edges):
+    out = {}
+    for s, d, w in edges:
+        k = (min(s, d), max(s, d))
+        out[k] = max(out.get(k, 0), w)
+    return out
+
+
+def _seed_term(doc_freq):
+    """A term with postings when one exists (else 0 — still must agree)."""
+    df = np.asarray(doc_freq)
+    return int(np.argmax(df))
+
+
+class TestDeviceHostOracleAgreement:
+    @given(st.integers(1, 50), st.integers(2, 32), st.integers(0, 10**6),
+           st.integers(0, 4))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_methods_agree_and_match_host_fast(self, n_docs, vocab, seed,
+                                               flavor):
+        docs = _adversarial_corpus(n_docs, vocab, seed, flavor)
+        idx = pack_docs(docs, vocab)
+        s = _seed_term(idx.doc_freq)
+        seeds = jnp.asarray([s, -1, -1, -1], jnp.int32)
+        nets = {m: to_edge_dict(bfs_construct(idx, seeds, depth=2, topk=4,
+                                              beam=8, method=m))
+                for m in METHODS}
+        assert nets["gemm"] == nets["popcount"] == nets["pallas"]
+        hidx = build_host_index(docs, vocab)
+        fast = _edge_set(bfs_construct_host_fast(hidx, [s], depth=2, topk=4,
+                                                 beam=8))
+        assert nets["gemm"] == fast
+
+    @given(st.integers(1, 50), st.integers(2, 32), st.integers(0, 10**6),
+           st.integers(0, 4))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_depth1_weights_match_traversal_oracle(self, n_docs, vocab, seed,
+                                                   flavor):
+        """Every depth-1 edge weight is the oracle's exact pair count (and
+        no edge exists that the oracle doesn't know)."""
+        docs = _adversarial_corpus(n_docs, vocab, seed, flavor)
+        idx = pack_docs(docs, vocab)
+        oracle = traversal_construct_host(docs, vocab)
+        s = _seed_term(idx.doc_freq)
+        net = to_edge_dict(bfs_construct(
+            idx, jnp.asarray([s, -1, -1, -1], jnp.int32), depth=1, topk=6,
+            beam=8, method="popcount"))
+        for (a, b), w in net.items():
+            assert oracle.get((a, b)) == w, (a, b, w)
+
+
+class TestInterleavedMutations:
+    @given(st.integers(0, 10**6), st.integers(4, 24))
+    @settings(max_examples=max(MAX_EXAMPLES // 2, 4), deadline=None)
+    def test_mutation_sequences_match_rebuild(self, seed, vocab):
+        """Random ingest / retire-oldest / grow_vocab interleavings: after
+        every mutation the windowed context answers exactly like an index
+        rebuilt from scratch on the currently-live docs — for all three
+        device methods AND the host-fast reference at the end."""
+        rng = np.random.default_rng(seed)
+        window = int(rng.integers(8, 33))
+        ctx = QueryContext.from_docs([], vocab, window=window)
+        mirror = deque()                  # host mirror of the live blocks
+
+        def live_docs():
+            return [d for blk in mirror for d in blk]
+
+        for step in range(5):
+            op = int(rng.integers(0, 4))
+            if op <= 1 or not mirror:     # ingest (biased: it enables the rest)
+                n = int(rng.integers(1, min(window, 8) + 1))
+                blk = _adversarial_corpus(n, ctx.vocab_size,
+                                          int(rng.integers(0, 10**6)),
+                                          int(rng.integers(0, 5)))
+                while mirror and sum(map(len, mirror)) + n > window:
+                    mirror.popleft()      # same oldest-first policy as the ring
+                ctx.ingest_docs(blk, max_len=8)
+                mirror.append(blk)
+            elif op == 2:                 # explicit retire of the oldest block
+                ctx.retire_oldest_block()
+                mirror.popleft()
+            else:                         # grow the term axis
+                ctx.grow_vocab(ctx.vocab_size + int(rng.integers(1, 9)))
+            ref = QueryContext.from_docs(live_docs(), ctx.vocab_size)
+            np.testing.assert_array_equal(np.asarray(ctx.index.doc_freq),
+                                          np.asarray(ref.index.doc_freq))
+            s = _seed_term(ref.index.doc_freq)
+            spec = QuerySpec(seeds=(s,), depth=2, topk=4, beam=8,
+                             method="popcount")
+            assert construct(ctx, spec).edges() == construct(ref, spec).edges()
+
+        final = live_docs()
+        s = _seed_term(ctx.index.doc_freq)
+        seeds = jnp.asarray([s, -1, -1, -1], jnp.int32)
+        nets = {m: to_edge_dict(bfs_construct(ctx, seeds, depth=2, topk=4,
+                                              beam=8, method=m))
+                for m in METHODS}
+        assert nets["gemm"] == nets["popcount"] == nets["pallas"]
+        hidx = build_host_index(final, ctx.vocab_size)
+        fast = _edge_set(bfs_construct_host_fast(hidx, [s], depth=2, topk=4,
+                                                 beam=8))
+        assert nets["gemm"] == fast

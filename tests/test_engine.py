@@ -385,6 +385,54 @@ class TestCountMethodRegistry:
         assert "tmp_view_probe" not in COUNT_METHODS
 
 
+class TestEngineStatsPercentiles:
+    def _engine(self, window=2048):
+        return CoocEngine(QueryContext.from_docs([[0, 1]], 4), depth=1,
+                          topk=2, beam=4, q_batch=1, window=window)
+
+    def test_quantiles_match_np_percentile(self):
+        """The quantile read must equal np.percentile over the (unsorted)
+        window snapshot — the former hand-rolled ``xs[int(n * p)]`` index
+        was off by one at exact rank multiples."""
+        eng = self._engine()
+        lat = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 10.0]
+        eng.latencies_ms.extend(lat)
+        st = eng.stats()
+        assert st.n == 10
+        assert st.p50_ms == pytest.approx(np.percentile(lat, 50))
+        assert st.p95_ms == pytest.approx(np.percentile(lat, 95))
+        assert st.p99_ms == pytest.approx(np.percentile(lat, 99))
+        assert st.max_ms == 10.0
+
+    def test_even_window_median_interpolates(self):
+        """Regression for the off-by-one: the median of [1, 2, 3, 4] is
+        2.5; the old ``xs[int(4 * 0.5)]`` read 3.0."""
+        eng = self._engine()
+        eng.latencies_ms.extend([4.0, 1.0, 3.0, 2.0])
+        st = eng.stats()
+        assert st.p50_ms == pytest.approx(2.5)
+        assert st.max_ms == 4.0
+
+    def test_single_sample_all_quantiles_collapse(self):
+        eng = self._engine()
+        eng.latencies_ms.append(7.0)
+        st = eng.stats()
+        assert st.p50_ms == st.p95_ms == st.p99_ms == st.max_ms == 7.0
+
+    def test_quantiles_cover_window_only(self):
+        """The ring caps at ``window``: stats must reflect the LAST window
+        samples, not the lifetime."""
+        eng = self._engine(window=4)
+        for v in [1000.0, 1000.0, 1000.0, 4.0, 3.0, 2.0, 1.0]:
+            eng.latencies_ms.append(v)
+        assert len(eng.latencies_ms) == 4
+        st = eng.stats()
+        assert st.n == 4
+        assert st.max_ms == 4.0
+        assert st.p50_ms == pytest.approx(np.percentile([4.0, 3.0, 2.0, 1.0],
+                                                        50))
+
+
 class TestRingBuffers:
     def test_stats_state_is_bounded(self):
         """latencies/occupancy/finished hold at most ``window`` entries no

@@ -1,0 +1,548 @@
+"""Streaming window + scoped queries: retire/ring/scope primitives, the
+eviction-equivalence guarantee (windowed index == from-scratch rebuild on
+the surviving docs, all count methods, warm and cold caches), and the
+string-level facade's time buckets / source tags."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CoocIndex, parse_duration
+from repro.core import (
+    QueryContext,
+    QuerySpec,
+    bfs_construct,
+    construct,
+    ingest_at,
+    pack_docs,
+    retire_docs,
+    slots_bitmap,
+    to_edge_dict,
+)
+from repro.serve import CoocEngine
+
+METHODS = ("gemm", "popcount", "pallas")
+
+
+def _random_docs(n_docs, vocab, seed, mean_len=5):
+    rng = np.random.default_rng(seed)
+    lens = np.clip(rng.poisson(mean_len, n_docs), 1, None)
+    return [rng.integers(0, vocab, ln).tolist() for ln in lens]
+
+
+def _assert_identical_networks(ctx_a, ctx_b, seed_term, *, method="gemm",
+                               depth=2, topk=4, beam=8, scope=None):
+    """Queries against both contexts must be BIT-identical (same fixed-shape
+    edge record, not just the same edge dict) — the acceptance bar for
+    eviction/scope equivalence."""
+    spec = QuerySpec(seeds=(int(seed_term),), depth=depth, topk=topk,
+                     beam=beam, method=method, scope=scope)
+    ref_spec = QuerySpec(seeds=(int(seed_term),), depth=depth, topk=topk,
+                         beam=beam, method=method)
+    a = construct(ctx_a, spec).network
+    b = construct(ctx_b, ref_spec).network
+    for field in ("src", "dst", "weight", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)),
+                                      err_msg=f"{method}/{field}")
+
+
+# ---------------------------------------------------------------------------
+# Core primitives: retire_docs / ingest_at / slots_bitmap
+# ---------------------------------------------------------------------------
+
+
+class TestRetireDocs:
+    def test_retire_equals_rebuild_on_survivors(self):
+        docs = _random_docs(60, 32, 0)
+        idx = pack_docs(docs, 32, capacity=64)
+        gone = np.asarray([0, 3, 17, 41, 59])
+        idx2 = retire_docs(idx, jnp.asarray(slots_bitmap(gone, idx.n_words)))
+        keep = [d for i, d in enumerate(docs) if i not in set(gone.tolist())]
+        ref = pack_docs(keep, 32, capacity=64)
+        # doc_freq is position-independent: must match the rebuild exactly
+        np.testing.assert_array_equal(np.asarray(idx2.doc_freq),
+                                      np.asarray(ref.doc_freq))
+        # retired slots hold all-zero postings
+        packed = np.asarray(idx2.packed)
+        for s in gone:
+            assert not (packed[s // 32] >> np.uint32(s % 32) & 1).any()
+        assert int(idx2.n_docs) == 60        # slot ids stable, no compaction
+
+    def test_retire_is_jit_safe(self):
+        docs = _random_docs(40, 16, 1)
+        idx = pack_docs(docs, 16)
+        mask = jnp.asarray(slots_bitmap([1, 2, 3], idx.n_words))
+        eager = retire_docs(idx, mask)
+        jitted = jax.jit(retire_docs)(idx, mask)
+        np.testing.assert_array_equal(np.asarray(eager.packed),
+                                      np.asarray(jitted.packed))
+        np.testing.assert_array_equal(np.asarray(eager.doc_freq),
+                                      np.asarray(jitted.doc_freq))
+
+    def test_retire_empty_mask_is_identity(self):
+        idx = pack_docs(_random_docs(20, 8, 2), 8)
+        idx2 = retire_docs(idx, jnp.zeros((idx.n_words,), jnp.uint32))
+        np.testing.assert_array_equal(np.asarray(idx.packed),
+                                      np.asarray(idx2.packed))
+        np.testing.assert_array_equal(np.asarray(idx.doc_freq),
+                                      np.asarray(idx2.doc_freq))
+
+
+class TestIngestAt:
+    def test_ring_write_into_retired_slots(self):
+        """retire a slot range, rewrite different docs into it: equals an
+        index built directly with the final doc-per-slot assignment."""
+        docs = _random_docs(32, 16, 3)
+        idx = pack_docs(docs, 16, capacity=64)
+        gone = np.arange(8)
+        idx = retire_docs(idx, jnp.asarray(slots_bitmap(gone, idx.n_words)))
+        fresh = _random_docs(8, 16, 4)
+        ids = np.full((8, 16), -1, np.int32)
+        for i, d in enumerate(fresh):
+            ids[i, :len(d)] = d[:16]
+        idx = ingest_at(idx, jnp.asarray(ids), jnp.ones(8, bool),
+                        jnp.asarray(gone, jnp.int32))
+        final = fresh + docs[8:]              # slot layout after the wrap
+        ref = pack_docs(final, 16, capacity=64)
+        np.testing.assert_array_equal(np.asarray(idx.packed),
+                                      np.asarray(ref.packed))
+        np.testing.assert_array_equal(np.asarray(idx.doc_freq),
+                                      np.asarray(ref.doc_freq))
+
+    def test_high_water_mark_never_shrinks(self):
+        idx = pack_docs(_random_docs(10, 8, 5), 8, capacity=64)
+        ids = np.asarray([[0, 1]], np.int32)
+        # low slot must be retired (all-zero) before reuse — ingest_at's
+        # OR-scatter precondition
+        cleared = retire_docs(idx, jnp.asarray(slots_bitmap([3], idx.n_words)))
+        idx2 = ingest_at(cleared, jnp.asarray(ids), jnp.ones(1, bool),
+                         jnp.asarray([3], jnp.int32))     # rewrite low slot
+        assert int(idx2.n_docs) == 10
+        idx3 = ingest_at(idx, jnp.asarray(ids), jnp.ones(1, bool),
+                         jnp.asarray([41], jnp.int32))    # advance high water
+        assert int(idx3.n_docs) == 42
+
+    def test_slots_bitmap_bounds(self):
+        with pytest.raises(ValueError, match="out of range"):
+            slots_bitmap([64], 2)
+        m = slots_bitmap([0, 33, 63], 2)
+        assert m[0] == 1 and m[1] == (1 << 1) | (1 << 31)
+
+
+# ---------------------------------------------------------------------------
+# QueryContext sliding window (the ring)
+# ---------------------------------------------------------------------------
+
+
+class TestWindowRing:
+    def test_capacity_pinned_and_live_bounded(self):
+        ctx = QueryContext.from_docs([], 16, window=50)
+        cap0 = ctx.index.capacity
+        assert cap0 == 64                      # ceil(50/32)*32
+        for r in range(20):
+            ctx.ingest_docs(_random_docs(10, 16, 100 + r), max_len=16)
+            assert ctx.index.capacity == cap0
+            assert ctx.live_docs <= 50
+        assert ctx.evicted_docs_total == 150   # 200 in, 50 live
+
+    @pytest.mark.parametrize("method", METHODS)
+    def test_eviction_equivalence_warm_and_cold(self, method):
+        """Acceptance: after the ring evicts, query results are bit-identical
+        to an index rebuilt from scratch on the surviving docs — for every
+        count method, through a WARM context cache (dense X built before the
+        eviction) and a COLD one."""
+        blocks = [_random_docs(12, 24, 200 + r) for r in range(6)]
+        ctx = QueryContext.from_docs([], 24, window=30)
+        ctx.ingest_docs(blocks[0], max_len=16)
+        # warm the epoch caches before any eviction happens
+        construct(ctx, QuerySpec(seeds=(1,), depth=1, topk=2, beam=4,
+                                 method=method))
+        warm_unpacks = ctx.unpack_count
+        for blk in blocks[1:]:
+            ctx.ingest_docs(blk, max_len=16)
+        surviving = [d for blk in blocks[-2:] for d in blk]   # last 2 blocks
+        assert ctx.live_docs == len(surviving) == 24
+        cold = QueryContext.from_docs(surviving, 24,
+                                      capacity=ctx.index.capacity)
+        df = np.asarray(cold.index.doc_freq)
+        np.testing.assert_array_equal(np.asarray(ctx.index.doc_freq), df)
+        seed = int(np.argmax(df))
+        _assert_identical_networks(ctx, cold, seed, method=method)   # warm
+        if method == "gemm":
+            assert ctx.unpack_count == warm_unpacks + 1   # once per query epoch
+        ctx2 = QueryContext(ctx.index)                    # cold cache, same index
+        _assert_identical_networks(ctx2, cold, seed, method=method)
+
+    def test_ring_wraps_and_reuses_slots(self):
+        """More ingest rounds than capacity/blocks: writes wrap modulo
+        capacity and reuse retired slots without collisions."""
+        ctx = QueryContext.from_docs([], 8, window=33)    # capacity 64 > window
+        seen = {}
+        for r in range(12):
+            slots = ctx.ingest_docs([[r % 8]] * 10, max_len=2)
+            for s in slots.tolist():
+                seen[s] = r
+        live = ctx.live_slots()
+        assert len(np.unique(live)) == len(live) == ctx.live_docs <= 33
+        df = np.asarray(ctx.index.doc_freq)
+        assert df.sum() == ctx.live_docs
+
+    def test_block_larger_than_window_rejected(self):
+        ctx = QueryContext.from_docs([], 8, window=16)
+        with pytest.raises(ValueError, match="exceeds window"):
+            ctx.ingest_docs([[0]] * 17, max_len=2)
+
+    def test_initial_corpus_larger_than_window_rejected(self):
+        """Regression: the constructor must raise like the ingest path does
+        — whole-block eviction would otherwise silently retire the ENTIRE
+        initial corpus (one block) and serve an empty index."""
+        docs = [[0, 1]] * 100
+        with pytest.raises(ValueError, match="exceeds window"):
+            QueryContext.from_docs(docs, 8, window=50)
+        ok = QueryContext.from_docs(docs, 8, window=100)
+        assert ok.live_docs == 100
+
+    def test_window_via_ingest_docs_kwarg(self):
+        ctx = QueryContext.from_docs(_random_docs(20, 8, 6), 8, capacity=64)
+        assert ctx.window is None
+        ctx.ingest_docs(_random_docs(10, 8, 7), max_len=16, window=24)
+        assert ctx.window == 24
+        assert ctx.live_docs <= 24             # oldest block evicted to fit
+
+    def test_shrinking_window_evicts_immediately(self):
+        ctx = QueryContext.from_docs([], 8, window=40)
+        for r in range(4):
+            ctx.ingest_docs([[r % 8]] * 10, max_len=2)
+        assert ctx.live_docs == 40
+        ctx.set_window(15)
+        assert ctx.live_docs == 10             # whole-block granularity
+
+    def test_window_growth_after_wrap_never_collides(self):
+        """Regression: growing the window once the ring has wrapped strands
+        live blocks in the middle of the (padded) ring; the next ingest
+        must evict any stranded block overlapping its target slots rather
+        than OR-scatter into occupied ones (which would merge documents and
+        inflate doc_freq forever)."""
+        ctx = QueryContext.from_docs([], 8, window=33)
+        slot2doc = {}
+        for r in range(8):                     # wraps the 64-slot ring
+            blk = [[r % 8, (r + 1) % 8]] * 10
+            for s, d in zip(ctx.ingest_docs(blk, max_len=4).tolist(), blk):
+                slot2doc[s] = d
+        ctx.set_window(100)                    # pads capacity 64 -> 128
+        blk = [[3, 5]] * 70
+        for s, d in zip(ctx.ingest_docs(blk, max_len=4).tolist(), blk):
+            slot2doc[s] = d
+        live = ctx.live_slots()
+        assert len(np.unique(live)) == len(live)
+        surviving = [slot2doc[s] for s in live.tolist()]
+        ref = QueryContext.from_docs(surviving, 8,
+                                     capacity=ctx.index.capacity)
+        np.testing.assert_array_equal(np.asarray(ctx.index.doc_freq),
+                                      np.asarray(ref.index.doc_freq))
+        spec = QuerySpec(seeds=(3,), depth=1, topk=4, beam=4,
+                         method="popcount")
+        assert construct(ctx, spec).edges() == construct(ref, spec).edges()
+
+    def test_set_window_shrink_invalidates_warm_gemm_cache(self):
+        """Regression: shrinking the window evicts docs; a gemm query
+        through a WARM dense-X cache must see the eviction (epoch bump),
+        not count retired docs that popcount no longer sees."""
+        docs = _random_docs(40, 16, 8)
+        ctx = QueryContext.from_docs([], 16, window=40)
+        for i in range(4):
+            ctx.ingest_docs(docs[i * 10:(i + 1) * 10], max_len=16)
+        spec_g = QuerySpec(seeds=(1,), depth=1, topk=4, beam=4)
+        construct(ctx, spec_g)                 # warm x_dense
+        ctx.set_window(15)                     # evicts 3 blocks
+        assert ctx.live_docs == 10
+        ref = QueryContext.from_docs(docs[30:], 16)
+        got_g = construct(ctx, spec_g).edges()
+        got_p = construct(ctx, QuerySpec(seeds=(1,), depth=1, topk=4,
+                                         beam=4, method="popcount")).edges()
+        want = construct(ref, spec_g).edges()
+        assert got_g == got_p == want
+
+    def test_retire_oldest_block_manual(self):
+        ctx = QueryContext.from_docs([], 8, capacity=64)
+        ctx.ingest_docs([[0, 1]] * 5, max_len=4)
+        ctx.ingest_docs([[2, 3]] * 4, max_len=4)
+        epoch = ctx.epoch
+        assert ctx.retire_oldest_block() == 5
+        assert ctx.epoch == epoch + 1
+        assert ctx.live_docs == 4
+        df = np.asarray(ctx.index.doc_freq)
+        np.testing.assert_array_equal(df, [0, 0, 4, 4, 0, 0, 0, 0])
+        assert ctx.retire_oldest_block() == 4
+        assert ctx.retire_oldest_block() == 0  # empty: no-op, no epoch bump
+
+
+# ---------------------------------------------------------------------------
+# Scoped queries
+# ---------------------------------------------------------------------------
+
+
+class TestScopes:
+    def _two_block_ctx(self, vocab=24):
+        b1 = _random_docs(20, vocab, 300)
+        b2 = _random_docs(20, vocab, 301)
+        ctx = QueryContext.from_docs([], vocab, capacity=64)
+        ctx.ingest_docs(b1, max_len=16, scope="old")
+        ctx.ingest_docs(b2, max_len=16, scope=("new", "all"))
+        return ctx, b1, b2
+
+    @pytest.mark.parametrize("method", METHODS)
+    def test_scoped_query_equals_scoped_only_index(self, method):
+        """Acceptance: a scoped query over the full index is bit-identical
+        to the same query on an index holding only the scoped docs."""
+        ctx, b1, b2 = self._two_block_ctx()
+        only_new = QueryContext.from_docs(b2, 24, capacity=ctx.index.capacity)
+        seed = int(np.argmax(np.asarray(only_new.index.doc_freq)))
+        _assert_identical_networks(ctx, only_new, seed, method=method,
+                                   scope="new")
+
+    def test_scope_mask_direct_bfs_kwarg(self):
+        ctx, b1, b2 = self._two_block_ctx()
+        seeds = jnp.asarray([2, -1, -1, -1], jnp.int32)
+        via_name = to_edge_dict(bfs_construct(
+            ctx, seeds, depth=2, topk=4, beam=8,
+            scope_mask=ctx.scope("old")))
+        only_old = QueryContext.from_docs(b1, 24)
+        ref = to_edge_dict(bfs_construct(only_old, seeds, depth=2, topk=4,
+                                         beam=8))
+        assert via_name == ref
+
+    def test_multi_tag_and_union_semantics(self):
+        ctx, b1, b2 = self._two_block_ctx()
+        # "all" was tagged only on block 2
+        assert set(ctx.scope_names()) == {"old", "new", "all"}
+        m_new = np.asarray(ctx.scope("new"))
+        m_all = np.asarray(ctx.scope("all"))
+        np.testing.assert_array_equal(m_new, m_all)
+
+    def test_eviction_clears_scope_bits(self):
+        ctx = QueryContext.from_docs([], 8, window=10)
+        ctx.ingest_docs([[0, 1]] * 6, max_len=4, scope="tagged")
+        ctx.ingest_docs([[2, 3]] * 6, max_len=4, scope="tagged")  # evicts blk 1
+        spec = QuerySpec(seeds=(2,), depth=1, topk=4, beam=4, scope="tagged")
+        edges = construct(ctx, spec).edges()
+        assert edges == {(2, 3): 6}
+        # the evicted block's bits are gone from the bitmap itself
+        live = slots_bitmap(ctx.live_slots(), ctx.index.n_words)
+        assert (np.asarray(ctx.scope("tagged")) & ~live).sum() == 0
+
+    def test_unknown_scope_raises(self):
+        ctx, _, _ = self._two_block_ctx()
+        with pytest.raises(KeyError, match="unknown scope"):
+            ctx.scope("nope")
+        with pytest.raises(ValueError, match="needs a QueryContext"):
+            construct(ctx.index, QuerySpec(seeds=(1,), depth=1, topk=2,
+                                           beam=4, scope="old"))
+
+    def test_spec_scope_validation(self):
+        with pytest.raises(ValueError, match="scope"):
+            QuerySpec(seeds=(1,), scope="")
+        s = QuerySpec(seeds=(1,), scope="7d")
+        assert s.plan_key.scope == "7d"
+        assert s.plan_key != QuerySpec(seeds=(1,)).plan_key
+
+
+class TestEngineScopedServing:
+    def test_scoped_batches_match_construct_and_share_executables(self):
+        ctx = QueryContext.from_docs([], 32, capacity=128)
+        ctx.ingest_docs(_random_docs(40, 32, 400), max_len=16, scope="a")
+        ctx.ingest_docs(_random_docs(40, 32, 401), max_len=16, scope="b")
+        eng = CoocEngine(ctx, depth=2, topk=4, beam=8, q_batch=4)
+        specs = [QuerySpec(seeds=(3,), depth=2, topk=4, beam=8, scope=sc)
+                 for sc in ("a", "b", None, "a")]
+        futs = [eng.submit(s) for s in specs]
+        for fut, spec in zip(futs, specs):
+            assert fut.result().edges() == construct(ctx, spec).edges()
+        # "a" and "b" share ONE scoped executable; unscoped is the second —
+        # the executor cache never grows per scope NAME
+        assert eng.compiled_plans == 2
+
+    def test_unknown_scope_fails_at_submit_with_queue_intact(self):
+        """Regression: an unknown scope must be rejected at submit — a
+        step-time failure would dequeue the whole micro-batch and strand
+        its futures."""
+        ctx = QueryContext.from_docs([[0, 1]] * 4, 4)
+        eng = CoocEngine(ctx, depth=1, topk=2, beam=4, q_batch=2)
+        ok = eng.submit([0])
+        with pytest.raises(KeyError, match="unknown scope"):
+            eng.submit(QuerySpec(seeds=(0,), depth=1, topk=2, beam=4,
+                                 scope="typo"))
+        assert len(eng.queue) == 1             # the good query is untouched
+        assert ok.result().edges() == {(0, 1): 4}
+
+    def test_dropped_scope_fails_only_its_futures(self):
+        """Regression: a scope dropped between submit and step poisons
+        exactly that plan's requests — their futures raise the KeyError —
+        and the engine keeps serving everything else (one bad scope must
+        never wedge the queue)."""
+        ctx = QueryContext.from_docs([], 4, capacity=64)
+        ctx.ingest_docs([[0, 1]] * 3, max_len=4, scope="temp")
+        eng = CoocEngine(ctx, depth=1, topk=2, beam=4, q_batch=2)
+        bad = eng.submit(QuerySpec(seeds=(0,), depth=1, topk=2, beam=4,
+                                   scope="temp"))
+        good = eng.submit([0])
+        ctx.drop_scope("temp")
+        with pytest.raises(KeyError, match="unknown scope"):
+            bad.result()
+        assert bad.done()
+        with pytest.raises(KeyError):          # repeat calls re-raise
+            bad.result()
+        assert good.result().edges() == {(0, 1): 3}
+        assert not eng.queue                   # nothing stranded
+
+    def test_step_groups_by_scope(self):
+        """Queries under different scopes never share a micro-batch (each
+        batch executes against exactly one scope bitmap)."""
+        ctx = QueryContext.from_docs([], 8, capacity=64)
+        ctx.ingest_docs([[0, 1]] * 4, max_len=4, scope="a")
+        ctx.ingest_docs([[0, 2]] * 4, max_len=4, scope="b")
+        eng = CoocEngine(ctx, depth=1, topk=4, beam=4, q_batch=8)
+        fa = [eng.submit(QuerySpec(seeds=(0,), depth=1, topk=4, beam=4,
+                                   scope="a")) for _ in range(2)]
+        fb = eng.submit(QuerySpec(seeds=(0,), depth=1, topk=4, beam=4,
+                                  scope="b"))
+        assert eng.step() == 2                 # both "a" queries only
+        assert all(f.done() for f in fa) and not fb.done()
+        assert eng.step() == 1
+        assert fb.result().edges() == {(0, 2): 4}
+
+
+# ---------------------------------------------------------------------------
+# String-level facade: window + time buckets + source tags
+# ---------------------------------------------------------------------------
+
+
+class TestFacadeStreaming:
+    def _streamed(self):
+        idx = CoocIndex(window=8, depth=1, topk=8, beam=8)
+        idx.add_documents(["alpha beta gamma"] * 3, timestamp=100.0,
+                          source="wire")
+        idx.add_documents(["alpha beta delta"] * 3, timestamp=200.0)
+        idx.add_documents(["alpha epsilon beta"] * 3, timestamp=300.0,
+                          source="wire")
+        return idx
+
+    def test_window_bounds_live_docs_and_capacity(self):
+        idx = self._streamed()
+        assert idx.window == 8
+        assert idx.live_docs == 6              # first block evicted
+        assert idx.ctx.index.capacity == 32    # pinned at ceil(8/32)*32
+        full = idx.network(["alpha"])
+        assert full[("alpha", "beta")] == 6    # gamma block gone
+        assert ("alpha", "gamma") not in full
+
+    def test_time_bucket_scope(self):
+        idx = self._streamed()
+        recent = idx.network(["alpha"], scope="2m", now=330.0)
+        assert recent == {("alpha", "epsilon"): 3, ("alpha", "beta"): 3}
+        # inclusive cutoff: now=320 puts the t=200 block ON the boundary
+        both = idx.network(["alpha"], scope="2m", now=320.0)
+        assert both[("alpha", "beta")] == 6
+
+    def test_source_tag_scope(self):
+        idx = self._streamed()
+        wire = idx.network(["alpha"], scope="wire")
+        # the first wire-tagged block was evicted by the window
+        assert wire == {("alpha", "epsilon"): 3, ("alpha", "beta"): 3}
+
+    def test_unknown_scope_raises(self):
+        idx = self._streamed()
+        with pytest.raises(KeyError, match="unknown scope"):
+            idx.network(["alpha"], scope="nope")
+
+    def test_capacity_with_window_is_contradictory(self):
+        """window pins the ring size; an explicit capacity alongside it
+        would be silently ignored — raise instead (fail-loud policy)."""
+        with pytest.raises(ValueError, match="contradictory"):
+            CoocIndex(capacity=100_000, window=1000)
+        assert CoocIndex(capacity=64).ctx.index.capacity == 64
+        assert CoocIndex(window=1000).ctx.index.capacity == 1024
+
+    def test_engine_ingest_doc_window_kwarg(self):
+        """The engine spells the sliding doc cap ``doc_window`` (its own
+        ``window=`` already sizes the stats ring buffers)."""
+        ctx = QueryContext.from_docs([], 8, capacity=64)
+        eng = CoocEngine(ctx, depth=1, topk=2, beam=4, q_batch=1, window=16)
+        eng.ingest_docs([[0, 1]] * 10, max_len=4, doc_window=12)
+        assert ctx.window == 12
+        assert eng.window == 16                # stats window untouched
+        eng.ingest_docs([[2, 3]] * 10, max_len=4)
+        assert ctx.live_docs <= 12
+
+    def test_duration_shaped_source_tag_rejected(self):
+        """Regression: a source tag named like a duration ("7d") would be
+        silently overwritten by the first time-bucket query of that name."""
+        idx = CoocIndex(depth=1, topk=4, beam=4)
+        with pytest.raises(ValueError, match="duration-scope syntax"):
+            idx.add_documents(["alpha beta"], source="7d")
+
+    def test_time_bucket_reuse_keeps_device_cache_warm(self):
+        """An unchanged time bucket must not re-upload its bitmap: the
+        second identical query hits the epoch-versioned device cache."""
+        idx = self._streamed()
+        idx.network(["alpha"], scope="2m", now=330.0)
+        ent1 = idx.ctx._scope_dev.get("2m")
+        idx.network(["alpha"], scope="2m", now=331.0)   # same membership
+        ent2 = idx.ctx._scope_dev.get("2m")
+        assert ent1 is not None and ent2 is not None
+        assert ent1[1] is ent2[1]              # same device array object
+
+    def test_time_bucket_advancing_now_crosses_boundary(self):
+        """The binary-search skip must NOT suppress a real membership
+        change: advancing ``now`` past a doc's timestamp shrinks the
+        bucket."""
+        idx = self._streamed()
+        both = idx.network(["alpha"], scope="2m", now=300.0)
+        assert both[("alpha", "beta")] == 6    # t=200 and t=300 blocks
+        only_new = idx.network(["alpha"], scope="2m", now=321.0)
+        assert only_new == {("alpha", "epsilon"): 3, ("alpha", "beta"): 3}
+        # and re-querying after a drop re-materialises the bucket
+        idx.ctx.drop_scope("2m")
+        again = idx.network(["alpha"], scope="2m", now=321.0)
+        assert again == only_new
+
+    def test_time_buckets_are_lru_bounded(self):
+        """User-controlled duration strings must not grow the scope table
+        without bound: beyond MAX_TIME_BUCKETS the least-recently-used
+        bucket is dropped (and still re-materialises on demand)."""
+        from repro.api import MAX_TIME_BUCKETS
+        idx = self._streamed()
+        for i in range(MAX_TIME_BUCKETS + 5):
+            idx.network(["alpha"], scope=f"{i + 1}h", now=330.0)
+        assert len(idx._bucket_state) == MAX_TIME_BUCKETS
+        assert len(idx.ctx.scope_names()) <= MAX_TIME_BUCKETS + 1  # + "wire"
+        assert "1h" not in idx.ctx.scope_names()   # oldest evicted
+        evicted = idx.network(["alpha"], scope="1h", now=330.0)
+        assert evicted == idx.network(["alpha"], scope="2h", now=330.0)
+
+    def test_oversize_batch_rejected_before_lexicon_mutation(self):
+        """Regression: a batch that can never fit the window must be
+        rejected BEFORE its terms are interned — no phantom lexicon
+        entries on failure."""
+        idx = CoocIndex(window=4, depth=1, topk=4, beam=4)
+        with pytest.raises(ValueError, match="exceeds window"):
+            idx.add_documents(["zyzzyva quokka"] * 5)
+        assert "zyzzyva" not in idx
+        assert idx.n_terms == 0 and idx.n_docs == 0
+
+    def test_parse_duration(self):
+        assert parse_duration("7d") == 7 * 86400
+        assert parse_duration("90s") == 90
+        assert parse_duration("2w") == 2 * 604800
+        assert parse_duration("30m") == 1800
+        assert parse_duration("wire") is None
+        assert parse_duration("7dd") is None
+
+    def test_unwindowed_facade_unchanged(self):
+        idx = CoocIndex.from_texts(["alpha beta", "alpha gamma"], depth=1,
+                                   topk=4, beam=4)
+        assert idx.window is None
+        assert idx.live_docs == idx.n_docs == 2
+        assert idx.network(["alpha"]) == {("alpha", "beta"): 1,
+                                          ("alpha", "gamma"): 1}
