@@ -1,0 +1,105 @@
+"""Corpus-level network materialization: pallas vs gemm vs popcount.
+
+The whole-corpus artifact (the paper's CSL experiments build the FULL
+network, not seed-rooted neighborhoods): ``materialize`` computes
+``C = X^T X`` tile-by-tile with a streaming per-row top-k, so the (V, V)
+matrix is never allocated — the result is O(V·k) neighbor lists.  This
+bench sweeps the three count paths over one corpus and reports
+materialization throughput (vocab rows/s and co-occurrence cells/s), the
+warm-cache hit time, and the global statistics of the resulting network
+(nodes, edges, density — the downstream consumers' figures).
+
+    PYTHONPATH=src python -m benchmarks.bench_full_network
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.core import QueryContext, global_statistics, materialize
+from repro.data import synthetic_csl
+from benchmarks.common import section, write_csv
+
+METHODS = ("pallas", "gemm", "popcount")
+
+
+def main(argv: List[str] | None = None) -> List[Dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-docs", type=int, default=8192)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--row-tile", type=int, default=128)
+    ap.add_argument("--col-tile", type=int, default=512)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    section(f"Full-network materialization — {args.n_docs} docs, "
+            f"V={args.vocab}, k={args.k}, tiles "
+            f"({args.row_tile}, {args.col_tile})")
+    docs = synthetic_csl(args.n_docs, args.vocab, seed=0)
+    ctx = QueryContext.from_docs(docs, args.vocab)
+    cells = float(args.vocab) * args.vocab
+
+    rows, out = [], []
+    nets = {}
+    for method in METHODS:
+        def run():
+            net = materialize(ctx, k=args.k, method=method,
+                              row_tile=args.row_tile, col_tile=args.col_tile,
+                              use_cache=False)
+            jax.block_until_ready(net.weight)
+            return net
+        nets[method] = run()                       # compile + warm the caches
+        ts = []
+        for _ in range(args.repeats):
+            t0 = time.perf_counter()
+            run()
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[len(ts) // 2]
+        # prime the context cache (the timed runs above bypass it), THEN
+        # time the hit — a warm call is a dict lookup, not a rebuild
+        primed = materialize(ctx, k=args.k, method=method,
+                             row_tile=args.row_tile, col_tile=args.col_tile)
+        jax.block_until_ready(primed.weight)
+        t0 = time.perf_counter()
+        cached = materialize(ctx, k=args.k, method=method,
+                             row_tile=args.row_tile, col_tile=args.col_tile)
+        t_warm = time.perf_counter() - t0
+        assert cached is primed
+        print(f"{method:>9}: {t * 1e3:8.1f} ms   "
+              f"{args.vocab / t:10,.0f} rows/s   "
+              f"{cells / t / 1e6:8.1f} Mcells/s   "
+              f"(warm cache hit {t_warm * 1e6:.0f} us)")
+        rows.append({"method": method, "n_docs": args.n_docs,
+                     "vocab": args.vocab, "k": args.k, "time_s": t,
+                     "rows_per_s": args.vocab / t,
+                     "mcells_per_s": cells / t / 1e6})
+        out.append({"name": f"full_network_{method}_rows_per_s",
+                    "value": args.vocab / t})
+
+    base = {m: _edge_rows(nets[m]) for m in METHODS}
+    assert base["pallas"] == base["gemm"] == base["popcount"], \
+        "count paths disagree on the materialized network"
+    st = global_statistics(nets["gemm"], args.vocab)
+    print(f"network: {st.n_nodes} nodes, {st.n_edges} edges, "
+          f"density {st.density:.4f}, mean degree {st.mean_degree:.1f}, "
+          f"max degree {st.max_degree}  (methods agree  [ok])")
+    out.append({"name": "full_network_edges", "value": st.n_edges})
+    out.append({"name": "full_network_density", "value": st.density})
+    path = write_csv("full_network", rows)
+    print(f"CSV -> {path}")
+    return out
+
+
+def _edge_rows(net) -> dict:
+    import numpy as np
+    src, dst, w, ok = (np.asarray(x) for x in net)
+    return {(int(s), int(d)): int(wt)
+            for s, d, wt, o in zip(src, dst, w, ok) if o}
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ def main() -> int:
                     help="smaller corpora (CI-speed)")
     ap.add_argument("--only", default=None,
                     choices=("fig7", "fig5", "scaling", "engine", "streaming",
-                             "roofline"))
+                             "full_network", "roofline"))
     args = ap.parse_args()
 
     results = []
@@ -68,6 +68,12 @@ def main() -> int:
                       if args.quick else [])
     run_bench("streaming",
               lambda: bench_streaming_window.main(streaming_argv))
+
+    from benchmarks import bench_full_network
+    full_net_argv = (["--n-docs", "1024", "--vocab", "256", "--k", "8",
+                      "--repeats", "1"] if args.quick else [])
+    run_bench("full_network",
+              lambda: bench_full_network.main(full_net_argv))
 
     from benchmarks import roofline
     run_bench("roofline", roofline.main)

@@ -1,0 +1,85 @@
+"""Whole-corpus network materialization + global statistics.
+
+    PYTHONPATH=src python examples/full_network.py
+
+The BFS query path answers "what co-occurs around THIS term"; the paper's
+corpus-level experiments need the WHOLE network.  This example:
+
+1. builds a string-level CoocIndex and materializes the full network —
+   every term's top-k heaviest neighbors, computed tile-by-tile (never
+   the (V, V) matrix),
+2. prints the global statistics downstream network analysis reports
+   (nodes, edges, density, degree distribution),
+3. cross-checks the materialized rows against the exact traversal counts,
+4. scopes the materialization to one source tag, then ingests fresh
+   documents and watches the cached network invalidate and rebuild.
+"""
+import numpy as np
+
+from repro.api import CoocIndex
+from repro.core import degree_histogram, traversal_construct_host
+from repro.data import build_lexicon
+
+CORPUS = [
+    "graph neural networks learn node embeddings from graph structure",
+    "co-occurrence networks reveal semantic relationships in text corpora",
+    "inverted index maps keywords to documents for fast retrieval",
+    "breadth first search expands the network frontier level by level",
+    "keyword co-occurrence networks support text mining and retrieval",
+    "the inverted index makes co-occurrence network construction fast",
+    "semantic networks and knowledge graphs organise scientific keywords",
+    "fast retrieval of documents uses the inverted index keywords",
+    "text mining extracts keywords and builds co-occurrence networks",
+    "network construction from an inverted index runs in real time",
+]
+
+
+def main():
+    idx = CoocIndex.from_texts(CORPUS)
+    print(f"corpus: {idx.n_docs} docs, lexicon {idx.n_terms} terms")
+
+    # 1. the whole-corpus artifact: top-4 neighbors per term, string edges
+    net = idx.full_network(k=4)
+    print(f"full network (k=4): {len(net)} unique undirected edges")
+
+    # 2. the global statistics (the Fig.-style numbers)
+    st = idx.network_stats(k=4)
+    print(f"nodes {st.n_nodes}, edges {st.n_edges}, "
+          f"density {st.density:.3f}, mean degree {st.mean_degree:.1f}, "
+          f"max degree {st.max_degree}")
+    hist = degree_histogram(st)
+    print("degree distribution:",
+          {g: int(c) for g, c in enumerate(hist) if c})
+
+    # 3. every materialized weight equals the exact traversal pair count
+    lex, docs = build_lexicon(CORPUS)
+    trav = traversal_construct_host(docs, len(lex))
+    for (a, b), w in net.items():
+        key = (min(lex.lookup(a), lex.lookup(b)),
+               max(lex.lookup(a), lex.lookup(b)))
+        assert trav.get(key) == w, (a, b, w)
+    print("all edge weights match the exact traversal counts  [ok]")
+
+    heaviest = sorted(net.items(), key=lambda kv: -kv[1])[:5]
+    print("\nheaviest corpus-level edges:")
+    for (a, b), w in heaviest:
+        print(f"  {a:>14} -- {b:<14} (co-occurs in {w} docs)")
+
+    # 4. scoped materialization + real-time invalidation
+    idx.add_documents(["quasar telescope survey maps the quasar sky"] * 2,
+                      source="astro")
+    astro = idx.full_network(k=4, scope="astro")
+    assert all("quasar" in e or "telescope" in e or "survey" in e
+               or "sky" in e or "maps" in e for e in astro)
+    print(f"\nscoped to source='astro': {len(astro)} edges "
+          f"(only the tagged docs)")
+    grown = idx.full_network(k=4)
+    assert ("quasar", "telescope") in grown
+    print("after ingest the cached full network rebuilt "
+          f"({len(grown)} edges) — real-time visibility  [ok]")
+
+    assert np.all(st.degree >= 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -43,7 +43,16 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.core import Lexicon, QueryContext, QueryResult
+from repro.core import (
+    CapacityError,
+    Lexicon,
+    NetworkStats,
+    QueryContext,
+    QueryResult,
+    global_statistics,
+    materialize,
+    to_edge_dict,
+)
 from repro.data.tokenizer import DEFAULT_STOPWORDS, tokenize
 from repro.serve.cooc_engine import CoocEngine, CoocFuture
 
@@ -140,16 +149,46 @@ class CoocIndex:
                 f"batch of {len(texts)} docs exceeds window="
                 f"{self.ctx.window}; it could never be live in full — "
                 "split the batch or raise the window")
-        docs = [[self.lexicon.add(w) for w in tokenize(t, self.stopwords)]
-                for t in texts]
-        if not docs:
+        token_docs = [tokenize(t, self.stopwords) for t in texts]
+        # ingest atomicity: every failure the ingest path can raise is
+        # checked BEFORE the lexicon interns anything or the term axis
+        # grows — a rejected batch must leave no phantom terms behind
+        if (self.ctx.window is None and self.engine.on_overflow != "grow"
+                and self.ctx.n_docs + len(token_docs)
+                > self.ctx.index.capacity):
+            raise CapacityError(
+                f"ingest of {len(token_docs)} docs would exceed capacity "
+                f"{self.ctx.index.capacity} (n_docs={self.ctx.n_docs}); "
+                f"pass on_overflow='grow' to repack")
+        if not token_docs:
+            if source is not None:
+                # the tag scope must exist even when the batch indexes
+                # nothing: a later query(scope=source) gets the (empty)
+                # scope, never a KeyError.  (Non-empty batches — including
+                # all-stopword docs, which index as empty documents — are
+                # tagged by the ingest itself, on success only.)
+                self.ctx.tag_scope(source, [])
             return 0
-        if len(self.lexicon) > self.ctx.vocab_size:
-            self.ctx.grow_vocab(len(self.lexicon))
-        max_len = max(max((len(d) for d in docs), default=1), 1)
-        slots = self.ctx.ingest_docs(docs, max_len=max_len,
-                                     on_overflow=self.engine.on_overflow,
-                                     scope=source)
+        lex_size = len(self.lexicon)
+        vocab_size = self.ctx.vocab_size
+        docs = [[self.lexicon.add(w) for w in ws] for ws in token_docs]
+        try:
+            if len(self.lexicon) > self.ctx.vocab_size:
+                self.ctx.grow_vocab(len(self.lexicon))
+            max_len = max(max((len(d) for d in docs), default=1), 1)
+            slots = self.ctx.ingest_docs(docs, max_len=max_len,
+                                         on_overflow=self.engine.on_overflow,
+                                         scope=source)
+        except Exception:
+            # belt and braces for raise paths the precheck can't foresee:
+            # un-intern this batch's new terms and un-grow the term axis so
+            # the lexicon and the index never disagree about which terms
+            # exist — a rejected batch leaves NO trace
+            for term in self.lexicon.id_to_term[lex_size:]:
+                del self.lexicon.term_to_id[term]
+            del self.lexicon.id_to_term[lex_size:]
+            self.ctx.shrink_vocab(vocab_size)
+            raise
         cap = self.ctx.index.capacity
         if cap > len(self._doc_time):
             self._doc_time = np.pad(self._doc_time,
@@ -261,6 +300,46 @@ class CoocIndex:
         res = self.query(seed_terms, **params)
         id2t = self.lexicon.id_to_term
         return [(id2t[a], id2t[b], w) for a, b, w in res.top(limit)]
+
+    # -- whole-corpus network -----------------------------------------------
+
+    def _materialize(self, k, scope, now, method,
+                     **kwargs):
+        name = self._resolve_scope(scope, now)
+        return materialize(self.ctx, k=int(k),
+                           method=method or self.engine.method, scope=name,
+                           **kwargs)
+
+    def full_network(self, k: int = 8, *, scope: Optional[str] = None,
+                     now: Optional[float] = None,
+                     method: Optional[str] = None,
+                     **kwargs) -> Dict[Tuple[str, str], int]:
+        """The CORPUS-level network: every indexed term's top-``k``
+        heaviest co-occurrence neighbors, as string edges
+        ``{(term_a, term_b): count}`` — the paper's whole-corpus artifact,
+        versus :meth:`network`'s seed-rooted neighborhood.
+
+        Computed tile-by-tile (O(V·k) memory, never the (V, V) matrix) by
+        :func:`repro.core.materialize`; ``scope`` restricts it to a time
+        bucket ("7d") or source tag exactly as in :meth:`query`;
+        ``method`` defaults to the engine's.  A warm context (no ingest
+        since the last call) serves the cached result.
+        """
+        net = self._materialize(k, scope, now, method, **kwargs)
+        id2t = self.lexicon.id_to_term
+        return {(id2t[a], id2t[b]): w
+                for (a, b), w in to_edge_dict(net).items()}
+
+    def network_stats(self, k: int = 8, *, scope: Optional[str] = None,
+                      now: Optional[float] = None,
+                      method: Optional[str] = None,
+                      **kwargs) -> NetworkStats:
+        """Global statistics of the materialized corpus network (node and
+        edge counts, density, degree / weighted-degree distributions) —
+        the Fig.-style numbers the downstream network-analysis consumers
+        report.  Same k/scope/method semantics as :meth:`full_network`."""
+        net = self._materialize(k, scope, now, method, **kwargs)
+        return global_statistics(net, self.ctx.vocab_size)
 
     # -- introspection ------------------------------------------------------
 

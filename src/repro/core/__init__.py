@@ -48,10 +48,14 @@ from repro.core.cooccurrence import (  # noqa: F401
 )
 from repro.core.network import (  # noqa: F401
     CoocNetwork,
+    NetworkStats,
+    degree_histogram,
     edge_jaccard,
+    global_statistics,
     merge_duplicates,
     nodes_of,
     to_edge_dict,
     to_edge_index,
     top_edges,
 )
+from repro.core.materialize import materialize  # noqa: F401

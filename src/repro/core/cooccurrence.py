@@ -275,18 +275,30 @@ def chunked_top_k(x: jax.Array, k: int, n_chunks: int = 16):
     ORDER too: lax.top_k breaks ties by lower index; merged candidates are
     laid out chunk-major = global-index-major, and within a chunk local
     top-k already emits lower index first.
+
+    Shape contract: always returns (B, k) — ``k > V`` (tiny vocab,
+    generous spec) is clamped to V internally and the missing slots pad
+    back with weight -1 / index 0, matching ``_expand_level``'s invalid-
+    slot convention.  The former behavior — falling through to
+    ``jax.lax.top_k(x, k)``, which REQUIRES k <= V — crashed every caller
+    that didn't replicate ``_expand_level``'s private guard.
     """
     b, v = x.shape
-    if v % n_chunks != 0 or v // n_chunks < k:
-        return jax.lax.top_k(x, k)
-    c = v // n_chunks
-    xs = x.reshape(b, n_chunks, c)
-    w1, i1 = jax.lax.top_k(xs, k)                         # (B, n_chunks, k)
-    gi = i1 + (jnp.arange(n_chunks, dtype=i1.dtype) * c)[None, :, None]
-    w1f = w1.reshape(b, n_chunks * k)
-    gif = gi.reshape(b, n_chunks * k)
-    w2, sel = jax.lax.top_k(w1f, k)
-    return w2, jnp.take_along_axis(gif, sel, axis=1)
+    k_eff = min(k, v)
+    if v % n_chunks != 0 or v // n_chunks < k_eff:
+        w, gi = jax.lax.top_k(x, k_eff)
+    else:
+        c = v // n_chunks
+        xs = x.reshape(b, n_chunks, c)
+        w1, i1 = jax.lax.top_k(xs, k_eff)                 # (B, n_chunks, k)
+        gi1 = i1 + (jnp.arange(n_chunks, dtype=i1.dtype) * c)[None, :, None]
+        w2, sel = jax.lax.top_k(w1.reshape(b, n_chunks * k_eff), k_eff)
+        w, gi = w2, jnp.take_along_axis(gi1.reshape(b, n_chunks * k_eff),
+                                        sel, axis=1)
+    if k_eff < k:
+        w = jnp.pad(w, ((0, 0), (0, k - k_eff)), constant_values=-1)
+        gi = jnp.pad(gi, ((0, 0), (0, k - k_eff)))
+    return w, gi
 
 
 def _frontier_counts(index: PackedIndex, masks: jax.Array, method: str,
@@ -346,7 +358,6 @@ def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
                   method: str, operands: Mapping[str, jax.Array]):
     """One BFS level: batched frontier expansion + beam re-selection."""
     b = state.masks.shape[0]
-    v = index.vocab_size
 
     counts = _frontier_counts(index, state.masks, method, operands)  # (B, V) int32
     # mask self-pairs, invalid rows, and (optionally) visited terms
@@ -355,15 +366,11 @@ def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
         counts = jnp.where(state.visited[None, :], -1, counts)
     counts = jnp.where(state.valid[:, None], counts, -1)
 
-    # k can exceed V (tiny vocab, generous spec): top_k caps at V and the
-    # missing slots pad back as invalid — the (depth, B, topk) edge-record
-    # shape contract is independent of the vocabulary
-    k_eff = min(topk, v)
-    w_top, idx_top = chunked_top_k(counts, k_eff)               # (B, k_eff)
-    if k_eff < topk:
-        w_top = jnp.pad(w_top, ((0, 0), (0, topk - k_eff)),
-                        constant_values=-1)
-        idx_top = jnp.pad(idx_top, ((0, 0), (0, topk - k_eff)))
+    # k can exceed V (tiny vocab, generous spec): chunked_top_k clamps to
+    # V and pads the missing slots back as invalid (weight -1 / index 0)
+    # — the (depth, B, topk) edge-record shape contract is independent of
+    # the vocabulary
+    w_top, idx_top = chunked_top_k(counts, topk)                # (B, topk)
     edge_valid = w_top > 0
     edges = (
         jnp.broadcast_to(state.terms[:, None], (b, topk)),      # src

@@ -1,0 +1,250 @@
+"""Corpus-level network materialization (the paper's whole-corpus artifact).
+
+The BFS query path (`bfs_construct`) serves seed-rooted neighborhoods; the
+paper's CSL experiments, and every global-statistics consumer downstream
+(degree distributions, density — Margan et al., PAPERS.md), need the FULL
+co-occurrence network.  Computing it naively is the (V, V) dense matrix
+``C = X^T X`` — quadratic memory that no serving deployment can afford.
+
+:func:`materialize` computes the same network **tile by tile** and keeps
+only each term's top-``k`` heaviest neighbors (Billerbeck et al.'s
+observation that corpus-scale pair counting is tractable when you tile and
+truncate per term):
+
+* rows are processed in ``(row_tile,)`` blocks of terms; a block's filter
+  bitmaps are its postings rows (AND a scope bitmap, if any), so
+  ``C[i, j] = popcount(post_i & scope & post_j)`` — exactly the counts the
+  query path computes, over exactly the scoped document set;
+* counts come from ``method=``:
+
+  - ``"pallas"``   — the tiled Pallas co-occurrence GEMM
+    (:func:`repro.kernels.cooccur.cooccur_gemm_pallas` via
+    ``kernels.ops.cooccur_counts``): ``C_tile = X_l^T @ X_r`` over the
+    dense incidence columns of the row/column tiles; the tiles stream
+    through a running per-row top-``k`` merge (`lax.scan`), so the block
+    never holds more than one ``(row_tile, col_tile)`` count tile
+    (compiled on TPU, interpret mode elsewhere);
+  - ``"gemm"`` / ``"popcount"`` (and any registered method) — the
+    count-method registry (:mod:`repro.core.query`): one registry call
+    per row block produces the (row_tile, V) counts, reduced by one
+    ``chunked_top_k`` (identical tie order);
+
+  either way the (V, V) matrix is never allocated — the peak transient is
+  a single row block's counts and the result is O(V·k).
+
+Top-k semantics match the host oracles bit-exactly: ties break toward the
+lower term id (`lax.top_k` order; earlier column tiles occupy earlier
+candidate slots), self-pairs are excluded, zero counts emit no edge.
+
+With a :class:`~repro.core.query_context.QueryContext` the dense incidence
+and the transposed postings are the context's epoch-versioned cached
+artifacts — a warm context materializes with ZERO unpacks — and the
+finished network itself is cached per (k, method, scope) and invalidated
+by ingest/evict/grow epoch bumps (and by scope redefinition, via the
+per-scope version counters).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.inverted_index import (
+    PackedIndex,
+    incidence_dense,
+    unpack_bitmap,
+)
+from repro.core.network import CoocNetwork
+from repro.core.query import get_count_method
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "row_tile", "col_tile", "method"))
+def _topk_row_block(index: PackedIndex, packed_t: jax.Array,
+                    scope_mask: Optional[jax.Array],
+                    operands: Mapping[str, jax.Array], row_start, *,
+                    k: int, row_tile: int, col_tile: int, method: str
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k neighbors for one block of ``row_tile`` consecutive terms;
+    returns (weights, neighbor ids), weight -1 marking empty slots.
+
+    Registry methods produce the block's (row_tile, V) counts in one call
+    and reduce through ``chunked_top_k``; the pallas path never holds more
+    than a (row_tile, col_tile) count tile — tiles stream through a
+    running (row_tile, k) merge.  Both orders are exact ``lax.top_k``
+    order: in the merge, the running candidates (earlier = lower column
+    tiles, already weight-sorted with lower-id-first ties) precede the new
+    tile's columns (laid out in id order), and ``lax.top_k`` prefers
+    earlier slots.
+    """
+    v = packed_t.shape[0]
+    rows = row_start + jnp.arange(row_tile, dtype=jnp.int32)        # (bm,)
+    masks = packed_t[jnp.clip(rows, 0, v - 1)]                      # (bm, W)
+    masks = jnp.where((rows < v)[:, None], masks, jnp.uint32(0))
+    if scope_mask is not None:
+        masks = masks & scope_mask[None, :]
+
+    if method != "pallas":
+        # one registry call materializes the whole (row_tile, V) count
+        # block — reduce it in one chunked_top_k (same lower-id-first tie
+        # order as the streaming merge below, and the k > V pad already
+        # matches the -1/0 empty-slot contract)
+        from repro.core.cooccurrence import chunked_top_k
+        blk = get_count_method(method).fn(index, masks, operands)   # (bm, V)
+        blk = blk.at[jnp.arange(row_tile), jnp.clip(rows, 0, v - 1)].set(-1)
+        return chunked_top_k(blk, k)
+
+    from repro.kernels import ops
+    v_pad = _round_up(v, col_tile)
+    n_tiles = v_pad // col_tile
+    x = operands["x_dense"]                        # (D, v_pad) — pre-padded
+    xl = unpack_bitmap(masks, x.dtype).T                            # (D, bm)
+    backend = ops.pallas_backend()
+
+    def tile_counts(j0):
+        xr = jax.lax.dynamic_slice(x, (0, j0), (x.shape[0], col_tile))
+        return ops.cooccur_counts(xl, xr, backend=backend,
+                                  bm=row_tile, bn=col_tile)
+
+    def merge(carry, jt):
+        run_w, run_i = carry
+        j0 = jt * col_tile
+        cols = j0 + jnp.arange(col_tile, dtype=jnp.int32)
+        counts = tile_counts(j0)
+        counts = jnp.where(cols[None, :] == rows[:, None], -1, counts)
+        cand_w = jnp.concatenate([run_w, counts], axis=1)
+        cand_i = jnp.concatenate(
+            [run_i, jnp.broadcast_to(cols[None, :], counts.shape)], axis=1)
+        w2, sel = jax.lax.top_k(cand_w, k)
+        return (w2, jnp.take_along_axis(cand_i, sel, axis=1)), None
+
+    run0 = (jnp.full((row_tile, k), -1, jnp.int32),
+            jnp.zeros((row_tile, k), jnp.int32))
+    (run_w, run_i), _ = jax.lax.scan(merge, run0,
+                                     jnp.arange(n_tiles, dtype=jnp.int32))
+    return run_w, run_i
+
+
+def _resolve_materialize_operands(index, method: str):
+    """(ctx-or-None, PackedIndex, packed_t, operands) for ``method``.
+
+    The pallas path consumes the dense incidence (the cooccur GEMM's right
+    operand); registry methods declare their ``needs``.  With a
+    QueryContext every artifact is the epoch-versioned cache; a bare index
+    builds them one-shot.
+    """
+    from repro.core.query_context import QueryContext
+    needs = (("x_dense",) if method == "pallas"
+             else get_count_method(method).needs)
+    if isinstance(index, QueryContext):
+        ctx = index
+        return (ctx, ctx.index, ctx.packed_t(),
+                {name: getattr(ctx, name)() for name in needs})
+    builders = {
+        "x_dense": lambda: incidence_dense(index, jnp.bfloat16),
+        "packed_t": lambda: index.packed.T,
+    }
+    return (None, index, index.packed.T,
+            {name: builders[name]() for name in needs})
+
+
+def materialize(index, *, k: int = 8, method: str = "gemm",
+                scope: Optional[str] = None,
+                scope_mask: Optional[jax.Array] = None,
+                row_tile: int = 128, col_tile: int = 512,
+                use_cache: bool = True) -> CoocNetwork:
+    """Materialize the corpus co-occurrence network, top-``k`` per term.
+
+    index: a PackedIndex, or a QueryContext (cached artifacts + result
+    caching).  method: ``"pallas"`` routes through the tiled Pallas
+    co-occurrence GEMM; any registered count method (``"gemm"``,
+    ``"popcount"``, ...) runs through the registry.  scope: a context
+    scope NAME (time bucket, source tag); scope_mask: an explicit (W,)
+    uint32 doc bitmap (mutually exclusive with ``scope``).  Either way the
+    result is exactly the network of an index holding only the scoped
+    documents.
+
+    Returns a :class:`CoocNetwork` with ``V * k`` edge slots — slot
+    ``i*k + j`` is term ``i``'s j-th heaviest neighbor (``src=i``), ties
+    broken toward the lower term id, self-pairs and zero counts invalid.
+    The (V, V) matrix is never allocated: beyond the cached incidence the
+    query path already holds and this O(V·k) result, the peak transient
+    is one (row_tile, col_tile) count tile under ``method="pallas"``, or
+    one row block's (row_tile, V) counts under a registry method.
+    """
+    from repro.core.query_context import QueryContext
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if method != "pallas":
+        get_count_method(method)           # unknown method -> ValueError
+    if scope is not None and scope_mask is not None:
+        raise ValueError("pass scope= (a context scope name) OR scope_mask= "
+                         "(an explicit bitmap), not both")
+    ctx = index if isinstance(index, QueryContext) else None
+    if scope is not None and ctx is None:
+        raise ValueError(
+            f"scope={scope!r} needs a QueryContext to resolve the scope "
+            "name to a document bitmap; got a bare index")
+
+    v = (ctx.index if ctx is not None else index).vocab_size
+    # shrink tiles toward the vocab so tiny indices don't pad to 128/512
+    # (tile minima match the fp32 (8, 128) TPU layout; ops.cooccur_counts
+    # re-adapts the kernel's own tiles to the operands it receives)
+    bm = min(row_tile, _round_up(v, 8))
+    bn = min(col_tile, _round_up(v, 128))
+
+    cache_key = None
+    cache_ver = 0
+    if ctx is not None and use_cache and (scope is not None or scope_mask is None):
+        # the entry is versioned by (epoch, scope_version): a dropped or
+        # redefined scope misses here and fails/rebuilds below (the new
+        # store OVERWRITES the superseded network — no leak), so a warm
+        # hit is a dict lookup — no operand resolution, no device work
+        cache_key = ("materialize", k, method, scope, bm, bn)
+        cache_ver = ctx.scope_version(scope) if scope is not None else 0
+        hit = ctx.cached_artifact(cache_key, cache_ver)
+        if hit is not None:
+            return hit
+
+    _, pidx, packed_t, operands = _resolve_materialize_operands(index, method)
+    if scope is not None:
+        scope_mask = ctx.scope(scope)
+    elif scope_mask is not None:
+        scope_mask = jnp.asarray(scope_mask)
+        if scope_mask.shape != (pidx.n_words,):
+            raise ValueError(f"scope_mask shape {scope_mask.shape} != "
+                             f"({pidx.n_words},) (one uint32 per 32 doc slots)")
+
+    if method == "pallas":
+        # pad the incidence columns ONCE so every column tile is full-width
+        x = operands["x_dense"]
+        v_pad = _round_up(v, bn)
+        if v_pad > v:
+            operands = dict(operands)
+            operands["x_dense"] = jnp.pad(x, ((0, 0), (0, v_pad - v)))
+
+    ws, ids = [], []
+    for r0 in range(0, _round_up(v, bm), bm):
+        w_b, i_b = _topk_row_block(pidx, packed_t, scope_mask, operands, r0,
+                                   k=k, row_tile=bm, col_tile=bn,
+                                   method=method)
+        ws.append(w_b)
+        ids.append(i_b)
+    run_w = jnp.concatenate(ws, axis=0)[:v]                     # (V, k)
+    run_i = jnp.concatenate(ids, axis=0)[:v]
+    valid = run_w > 0
+    net = CoocNetwork(
+        src=jnp.repeat(jnp.arange(v, dtype=jnp.int32), k),
+        dst=jnp.where(valid, run_i, -1).reshape(-1),
+        weight=jnp.where(valid, run_w, 0).reshape(-1),
+        valid=valid.reshape(-1),
+    )
+    if cache_key is not None:
+        ctx.store_artifact(cache_key, net, cache_ver)
+    return net

@@ -50,7 +50,7 @@ from repro.core.network import CoocNetwork, nodes_of, to_edge_dict, to_edge_inde
 
 #: context artifacts a count method may request via ``needs``.  Each name is
 #: a zero-arg method on QueryContext returning a cached, sharded operand.
-KNOWN_OPERANDS = ("x_dense",)
+KNOWN_OPERANDS = ("x_dense", "packed_t")
 
 #: fn(index, masks (B, W) uint32, operands dict) -> counts (B, V) int32,
 #: traceable under jit/vmap.

@@ -109,6 +109,17 @@ class QueryContext:
         self._x_dense: Optional[jax.Array] = None
         self._x_epoch = -1
         self.unpack_count = 0   # monitoring: dense rebuilds == ingest epochs
+        self._packed_t: Optional[jax.Array] = None
+        self._pt_epoch = -1
+        # generic epoch-versioned artifact cache (materialized networks):
+        # entries are (epoch, version, value); stale epochs are pruned on
+        # store, and a re-store under the same key overwrites — a key
+        # holds at most one live value
+        self._artifact_cache: Dict[Tuple, Tuple[int, int, object]] = {}
+        # per-scope redefinition counters: tag/define/drop mutate a scope
+        # WITHOUT an epoch bump, so artifacts derived from a scope key on
+        # (epoch, scope_version) to stay correct across redefinitions
+        self._scope_ver: Dict[str, int] = {}
         # streaming state: live ingest blocks (slot arrays, oldest first),
         # ring write head, named scope bitmaps + their device cache
         n0 = int(index.n_docs)
@@ -252,6 +263,7 @@ class QueryContext:
         self._scopes[name] = (self._scope_host(name)
                               | slots_bitmap(doc_slots, self._index.n_words))
         self._scope_dev.pop(name, None)
+        self._scope_ver[name] = self._scope_ver.get(name, 0) + 1
 
     def define_scope(self, name: str, doc_slots) -> None:
         """Set/replace the named scope to exactly ``doc_slots``.  A no-op
@@ -264,10 +276,19 @@ class QueryContext:
             return
         self._scopes[name] = new
         self._scope_dev.pop(name, None)
+        self._scope_ver[name] = self._scope_ver.get(name, 0) + 1
 
     def drop_scope(self, name: str) -> None:
         self._scopes.pop(name, None)
         self._scope_dev.pop(name, None)
+        if name in self._scope_ver:
+            self._scope_ver[name] += 1
+
+    def scope_version(self, name: str) -> int:
+        """Monotonic redefinition counter for ``name`` (0 if never touched).
+        Epoch bumps do NOT advance it: (epoch, scope_version) together
+        version any artifact derived from a scope's membership."""
+        return self._scope_ver.get(name, 0)
 
     def scope_names(self) -> Tuple[str, ...]:
         return tuple(sorted(self._scopes))
@@ -299,6 +320,40 @@ class QueryContext:
             self._x_epoch = self.epoch
             self.unpack_count += 1
         return self._x_dense
+
+    def packed_t(self) -> jax.Array:
+        """Transposed postings (V, W) uint32, cached per epoch and sharded
+        (terms, docs) at build time — the row-block mask gather of
+        full-network materialization reads term rows contiguously instead
+        of striding over ``packed``'s columns."""
+        if self._pt_epoch != self.epoch:
+            from repro.launch.sharding import constrain
+            self._packed_t = constrain(jnp.transpose(self._index.packed),
+                                       ("terms", "docs"))
+            self._pt_epoch = self.epoch
+        return self._packed_t
+
+    def cached_artifact(self, key: Tuple, version: int = 0):
+        """Epoch-checked lookup in the generic artifact cache (None on
+        miss, stale epoch, or stale ``version``).  Used by
+        :func:`repro.core.materialize` to reuse a warm full-network result
+        until ingest/evict/grow moves the epoch or a scope redefinition
+        moves the version — the version lives IN the entry, not the key,
+        so a superseded artifact is overwritten, never leaked."""
+        ent = self._artifact_cache.get(key)
+        if ent is not None and ent[0] == self.epoch and ent[1] == version:
+            return ent[2]
+        return None
+
+    def store_artifact(self, key: Tuple, value, version: int = 0) -> None:
+        """Store ``value`` under ``key`` at the current epoch, pruning
+        every stale-epoch entry so the cache holds only live artifacts
+        (one value per key — same-epoch re-stores overwrite)."""
+        if any(e[0] != self.epoch for e in self._artifact_cache.values()):
+            self._artifact_cache = {k: e for k, e in
+                                    self._artifact_cache.items()
+                                    if e[0] == self.epoch}
+        self._artifact_cache[key] = (self.epoch, version, value)
 
     def operands(self, method: str) -> dict:
         """Extra (traced-array) operands ``bfs_construct`` needs for
@@ -393,6 +448,27 @@ class QueryContext:
         if new is not self._index:
             self._index = new
             self.epoch += 1
+
+    def shrink_vocab(self, vocab_size: int) -> None:
+        """Roll back a :meth:`grow_vocab` whose batch never indexed: drop
+        trailing term columns down to ``vocab_size``.  Refuses when any
+        dropped column holds postings (its term exists — shrinking would
+        corrupt the index); the rollback path only ever drops the all-zero
+        columns a failed ingest's growth appended."""
+        v = int(vocab_size)
+        if v >= self._index.vocab_size:
+            return
+        if v < 1:
+            raise ValueError(f"vocab_size must be >= 1, got {v}")
+        tail_df = np.asarray(self._index.doc_freq[v:])
+        if tail_df.any():
+            raise ValueError(
+                f"cannot shrink vocab to {v}: "
+                f"{int((tail_df > 0).sum())} dropped column(s) hold postings")
+        self._index = PackedIndex(self._index.packed[:, :v],
+                                  self._index.doc_freq[:v],
+                                  self._index.n_docs)
+        self.epoch += 1
 
     def ingest_docs(self, doc_terms: Sequence[Sequence[int]], *,
                     max_len: int = 64, on_overflow: str = "raise",

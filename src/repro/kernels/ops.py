@@ -66,6 +66,41 @@ def cooccur_gemm(x_l: jax.Array, x_r: jax.Array, *, backend: Optional[str] = Non
     return out[:vl, :vr]
 
 
+def _fit_tile(n: int, tile: int, mult: int) -> int:
+    """Largest useful tile: ``tile``, shrunk to ``n`` rounded up to the
+    layout multiple, so sub-tile operands don't pay full-tile padding."""
+    return min(tile, ((n + mult - 1) // mult) * mult)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "bm", "bn", "bk"))
+def cooccur_counts(x_l: jax.Array, x_r: jax.Array, *,
+                   backend: Optional[str] = None, bm: int = 128,
+                   bn: int = 128, bk: int = 512) -> jax.Array:
+    """Integer co-occurrence counts ``C = x_l^T @ x_r`` as int32.
+
+    The materialization-path form of :func:`cooccur_gemm`: 0/1 incidence
+    operands (any float dtype), fp32 accumulation (exact for D < 2^24),
+    rounded to int32 counts.  Tile sizes adapt DOWN to the operands —
+    ``bk`` to the doc axis (16-row layout multiples), ``bm``/``bn`` to the
+    vocab tiles (8/128) — so the skinny row-block GEMMs that full-network
+    materialization issues per (row, column) tile don't pad tiny operands
+    to the full 128x128x512 MXU schedule.
+    """
+    b = _resolve(backend)
+    if b == "xla":
+        return jnp.round(ref.cooccur_gemm_ref(x_l, x_r)).astype(jnp.int32)
+    d, vl = x_l.shape
+    vr = x_r.shape[1]
+    bm = _fit_tile(vl, bm, 8)
+    bn = _fit_tile(vr, bn, 128)
+    bk = _fit_tile(d, bk, 16)
+    xl = _pad_to(_pad_to(x_l, 1, bm), 0, bk)
+    xr = _pad_to(_pad_to(x_r, 1, bn), 0, bk)
+    out = cooccur_gemm_pallas(xl, xr, bm=bm, bn=bn, bk=bk,
+                              interpret=(b == "interpret"))
+    return jnp.round(out[:vl, :vr]).astype(jnp.int32)
+
+
 # -- postings popcount -------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("backend", "bb", "bv", "bw"))

@@ -126,6 +126,7 @@ class EngineStats:
     batches: int = 0
     mean_occupancy: float = 0.0   # mean admitted queries per executed batch
     compiled_plans: int = 0       # distinct plan keys compiled so far
+    failed_total: int = 0         # requests resolved onto an error (cumulative)
 
 
 class CoocEngine:
@@ -155,6 +156,7 @@ class CoocEngine:
         self.batch_occupancy: Deque[int] = deque(maxlen=window)
         self.served_total = 0
         self.batches_total = 0
+        self.failed_total = 0
         self._next_rid = 0
         self._executors: Dict[PlanKey, callable] = {}
 
@@ -239,9 +241,15 @@ class CoocEngine:
                 self.queue = [r for r in self.queue
                               if r.spec.plan_key != key]
                 t_done = time.perf_counter()
+                # failures are resolved requests: they enter the finished
+                # log, the latency window, and the failure counter, so
+                # EngineStats never silently under-reports a poisoned plan
                 for r in poisoned:
                     r.error = e
                     r.t_done = t_done
+                    self.latencies_ms.append(r.latency_ms)
+                    self.finished.append(r)
+                self.failed_total += len(poisoned)
                 return len(poisoned)
         admitted: List[CoocRequest] = []
         rest: List[CoocRequest] = []
@@ -329,10 +337,12 @@ class CoocEngine:
         xs = np.fromiter(self.latencies_ms, dtype=np.float64)
         if xs.size == 0:
             return EngineStats(0, 0, 0, 0, 0,
-                               compiled_plans=self.compiled_plans)
+                               compiled_plans=self.compiled_plans,
+                               failed_total=self.failed_total)
         p50, p95, p99 = np.percentile(xs, [50.0, 95.0, 99.0])
         occ = self.batch_occupancy
         return EngineStats(int(xs.size), float(p50), float(p95), float(p99),
                            float(xs.max()), batches=len(occ),
                            mean_occupancy=float(np.mean(occ)) if occ else 0.0,
-                           compiled_plans=self.compiled_plans)
+                           compiled_plans=self.compiled_plans,
+                           failed_total=self.failed_total)

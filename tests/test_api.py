@@ -77,6 +77,99 @@ class TestIngest:
         assert idx.n_docs == len(CORPUS) + 80
 
 
+class TestFullNetwork:
+    def test_string_level_matches_manual_materialize(self):
+        from repro.core import global_statistics, materialize, to_edge_dict
+        idx = CoocIndex.from_texts(CORPUS)
+        got = idx.full_network(k=4)
+        net = materialize(idx.ctx, k=4, method=idx.engine.method)
+        ref = {(idx.lexicon.id_to_term[a], idx.lexicon.id_to_term[b]): w
+               for (a, b), w in to_edge_dict(net).items()}
+        assert got and got == ref
+        # every indexed (non-stopword) content term appears somewhere
+        assert ("inverted", "index") in got
+        st = idx.network_stats(k=4)
+        ref_st = global_statistics(net, idx.ctx.vocab_size)
+        assert st.n_edges == len(got) == ref_st.n_edges
+        assert st.n_nodes == ref_st.n_nodes > 0
+
+    def test_scoped_full_network(self):
+        idx = CoocIndex(window=64)
+        idx.add_documents(CORPUS[:3], source="a")
+        idx.add_documents(["quokka zyzzyva quokka"], source="b")
+        full = idx.full_network(k=8)
+        only_b = idx.full_network(k=8, scope="b")
+        assert only_b == {("quokka", "zyzzyva"): 1}
+        assert ("quokka", "zyzzyva") in full and len(full) > 1
+
+
+class TestIngestAtomicity:
+    def test_capacity_overflow_leaves_no_phantom_terms(self):
+        """Regression: a rejected batch used to intern its tokens and grow
+        the term axis BEFORE the ingest raised — the lexicon advertised
+        terms the index never held."""
+        from repro.core import CapacityError
+        idx = CoocIndex.from_texts(CORPUS, capacity=32, on_overflow="raise")
+        idx.add_documents(["filler document text"] * (32 - idx.n_docs))
+        n_terms, vocab, n_docs = idx.n_terms, idx.ctx.vocab_size, idx.n_docs
+        with pytest.raises(CapacityError, match="exceed capacity"):
+            idx.add_documents(["xylophone zeppelin phantasm"])
+        assert idx.n_terms == n_terms           # nothing interned
+        assert idx.ctx.vocab_size == vocab      # term axis did not grow
+        assert idx.n_docs == n_docs
+        assert "xylophone" not in idx
+        with pytest.raises(KeyError):
+            idx.term_id("xylophone")
+
+    def test_window_overflow_leaves_no_phantom_terms(self):
+        idx = CoocIndex(window=4)
+        idx.add_documents(["seed document"])
+        n_terms = idx.n_terms
+        with pytest.raises(ValueError, match="exceeds window"):
+            idx.add_documents(["brontosaurus text"] * 5)
+        assert idx.n_terms == n_terms
+        assert "brontosaurus" not in idx
+
+    def test_unforeseen_ingest_failure_rolls_back_lexicon_and_vocab(self):
+        """A raise the precheck can't foresee (simulated mid-scatter
+        failure) must also leave no trace: new terms un-interned AND the
+        grown term axis shrunk back — lexicon and index never disagree."""
+        idx = CoocIndex.from_texts(CORPUS[:2], vocab_capacity=4)
+        n_terms, vocab = idx.n_terms, idx.ctx.vocab_size
+        batch = " ".join(f"neologism{i}" for i in range(vocab - n_terms + 4))
+        orig = idx.ctx.ingest
+
+        def boom(*a, **k):
+            raise RuntimeError("device scatter failed")
+        idx.ctx.ingest = boom
+        try:
+            with pytest.raises(RuntimeError, match="scatter failed"):
+                idx.add_documents([batch])   # enough new terms to force grow
+        finally:
+            idx.ctx.ingest = orig
+        assert idx.n_terms == n_terms and idx.ctx.vocab_size == vocab
+        assert "neologism0" not in idx
+        # the index still works and can take the batch once healthy
+        assert idx.add_documents([batch]) == 1
+        net = idx.network(["neologism0"], depth=1)
+        assert net[("neologism0", "neologism1")] == 1
+
+
+class TestSourceTagScope:
+    def test_tag_defined_even_when_batch_indexes_nothing(self):
+        """Regression: a batch whose every doc tokenizes to empty (all
+        stopwords / empty texts) returned 0 without defining the source
+        scope — a later query(scope=tag) then raised KeyError."""
+        idx = CoocIndex.from_texts(CORPUS[:2])
+        idx.add_documents([], source="empty_batch")
+        idx.add_documents(["the and of", "a the"], source="stopwords_only")
+        assert {"empty_batch", "stopwords_only"} <= set(idx.ctx.scope_names())
+        # scoped queries against the (empty) tags answer, never KeyError
+        assert idx.network(["networks"], scope="empty_batch") == {}
+        assert idx.network(["networks"], scope="stopwords_only") == {}
+        assert idx.full_network(scope="empty_batch") == {}
+
+
 class TestErrors:
     def test_unknown_seed_term_raises(self):
         idx = CoocIndex.from_texts(CORPUS)

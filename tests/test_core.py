@@ -401,6 +401,26 @@ class TestChunkedTopK:
             for k in (1, 3, 8, 16):
                 self._assert_order_pinned(x, k, n_chunks=4)
 
+    def test_k_exceeds_vocab_clamps_and_pads(self):
+        """Regression: k > V used to fall through to lax.top_k(x, k),
+        which crashes — the public function must clamp and pad to the
+        documented (B, k) contract (weight -1 / index 0 in empty slots),
+        exactly as _expand_level does at its own call site."""
+        from repro.core.cooccurrence import chunked_top_k
+        x = jnp.asarray([[3, 1], [0, 2]], jnp.int32)       # V = 2
+        w, i = chunked_top_k(x, 5)
+        assert w.shape == i.shape == (2, 5)
+        np.testing.assert_array_equal(np.asarray(w),
+                                      [[3, 1, -1, -1, -1], [2, 0, -1, -1, -1]])
+        np.testing.assert_array_equal(np.asarray(i),
+                                      [[0, 1, 0, 0, 0], [1, 0, 0, 0, 0]])
+        # tiny vocab through the BFS spec path must not crash either
+        docs = [[0, 1], [1]]
+        net = bfs_construct(pack_docs(docs, 2),
+                            jnp.asarray([0, -1], jnp.int32),
+                            depth=1, topk=5, beam=2)
+        assert to_edge_dict(net) == {(0, 1): 1}
+
     @given(st.integers(1, 6), st.integers(0, 1 << 16))
     @settings(max_examples=15, deadline=None)
     def test_tie_break_property_two_valued(self, k, seed):
@@ -428,3 +448,67 @@ class TestNetworkOps:
             src=jnp.asarray([0, 1], jnp.int32), dst=jnp.asarray([1, 2], jnp.int32),
             weight=jnp.asarray([1, 1], jnp.int32), valid=jnp.asarray([True, True]))
         assert edge_jaccard(net, net) == 1.0
+
+
+class TestGlobalStatistics:
+    def test_known_triangle_plus_pendant(self):
+        """0-1-2 triangle (weights 3, 2, 1) plus pendant 2-4 (weight 5);
+        term 3 is isolated.  Directed duplicates must count once."""
+        from repro.core import degree_histogram, global_statistics
+        net = CoocNetwork(
+            src=jnp.asarray([0, 1, 0, 2, 2, 4, 1], jnp.int32),
+            dst=jnp.asarray([1, 0, 2, 1, 4, 2, 2], jnp.int32),
+            weight=jnp.asarray([3, 3, 2, 1, 5, 5, 1], jnp.int32),
+            valid=jnp.asarray([True] * 7))
+        st_ = global_statistics(net, 5)
+        assert st_.n_nodes == 4 and st_.n_edges == 4
+        assert st_.density == pytest.approx(2 * 4 / (4 * 3))
+        assert st_.mean_degree == pytest.approx(2.0)
+        assert st_.max_degree == 3                      # term 2: 0, 1, 4
+        assert st_.max_weight == 5 and st_.total_weight == 11
+        np.testing.assert_array_equal(st_.degree, [2, 2, 3, 0, 1])
+        np.testing.assert_array_equal(st_.weighted_degree, [5, 4, 8, 0, 5])
+        np.testing.assert_array_equal(degree_histogram(st_), [0, 1, 2, 1])
+
+    def test_empty_network(self):
+        from repro.core import global_statistics
+        net = CoocNetwork(
+            src=jnp.zeros((4,), jnp.int32), dst=jnp.zeros((4,), jnp.int32),
+            weight=jnp.zeros((4,), jnp.int32), valid=jnp.zeros((4,), bool))
+        st_ = global_statistics(net, 8)
+        assert st_.n_nodes == st_.n_edges == 0
+        assert st_.density == st_.mean_degree == 0.0
+
+
+class TestMaterializeContract:
+    def test_shape_contract_and_cache(self):
+        """V*k slots always (k > V pads invalid); the context caches the
+        result per epoch and invalidates on ingest."""
+        from repro.core import QueryContext, materialize
+        docs = _random_docs(30, 12, 4, seed=3)
+        ctx = QueryContext.from_docs(docs, 12, capacity=64)
+        net = materialize(ctx, k=20, method="popcount")   # k > V
+        assert net.max_edges == 12 * 20
+        assert int(net.num_edges()) <= 12 * 11            # no self edges
+        assert materialize(ctx, k=20, method="popcount") is net
+        ctx.ingest_docs([[0, 1, 2]], max_len=4)
+        net2 = materialize(ctx, k=20, method="popcount")
+        assert net2 is not net                            # epoch invalidated
+        d2 = to_edge_dict(net2)
+        assert d2[(0, 1)] == to_edge_dict(net).get((0, 1), 0) + 1
+
+    def test_scope_redefinition_overwrites_cached_network(self):
+        """Regression: a redefined scope bumps its version WITHOUT an
+        epoch bump — the superseded cached network must be overwritten
+        (one live entry per key), not leaked until the next ingest."""
+        from repro.core import QueryContext, materialize
+        docs = _random_docs(20, 8, 3, seed=7)
+        ctx = QueryContext.from_docs(docs, 8, capacity=64)
+        last = None
+        for i in range(5):
+            ctx.define_scope("s", list(range(i + 1)))
+            net = materialize(ctx, k=2, method="popcount", scope="s")
+            assert net is not last                        # version moved
+            assert net is materialize(ctx, k=2, method="popcount", scope="s")
+            last = net
+        assert len(ctx._artifact_cache) == 1              # no leak

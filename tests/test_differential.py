@@ -36,6 +36,7 @@ from repro.core import (
     bfs_construct_host_fast,
     build_host_index,
     construct,
+    materialize,
     pack_docs,
     to_edge_dict,
     traversal_construct_host,
@@ -170,3 +171,93 @@ class TestInterleavedMutations:
         fast = _edge_set(bfs_construct_host_fast(hidx, [s], depth=2, topk=4,
                                                  beam=8))
         assert nets["gemm"] == fast
+
+
+def _oracle_topk_rows(doc_terms, vocab, k):
+    """The traversal oracle's per-row top-k: for every term a, its k
+    heaviest neighbors by exact pair count, ties toward the lower id —
+    as a {(src, dst): weight} dict of DIRECTED rows."""
+    counts = traversal_construct_host(doc_terms, vocab)
+    m = np.zeros((vocab, vocab), np.int64)
+    for (a, b), w in counts.items():
+        m[a, b] = m[b, a] = w
+    out = {}
+    for a in range(vocab):
+        for b in np.argsort(-m[a], kind="stable")[:k]:
+            if m[a, b] > 0:
+                out[(a, int(b))] = int(m[a, b])
+    return out
+
+
+def _materialized_rows(net):
+    src, dst, w, ok = (np.asarray(x) for x in net)
+    return {(int(s), int(d)): int(wt)
+            for s, d, wt, o in zip(src, dst, w, ok) if o}
+
+
+class TestMaterializeMatchesOracle:
+    @given(st.integers(1, 40), st.integers(2, 24), st.integers(0, 10**6),
+           st.integers(0, 4), st.integers(1, 6))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_full_network_topk_per_row(self, n_docs, vocab, seed, flavor, k):
+        """materialize == the traversal oracle's top-k-per-row, bit-exact,
+        on all three count methods, warm and cold."""
+        docs = _adversarial_corpus(n_docs, vocab, seed, flavor)
+        oracle = _oracle_topk_rows(docs, vocab, k)
+        ctx = QueryContext.from_docs(docs, vocab)
+        for m in METHODS:
+            cold = materialize(ctx, k=k, method=m)
+            assert _materialized_rows(cold) == oracle, m
+            warm = materialize(ctx, k=k, method=m)       # cached, zero work
+            assert warm is cold
+        assert ctx.unpack_count <= 1                     # one dense build total
+        # a bare PackedIndex (no context, no caches) must agree too
+        bare = materialize(pack_docs(docs, vocab), k=k, method="popcount")
+        assert _materialized_rows(bare) == oracle
+
+    @given(st.integers(0, 10**6), st.integers(4, 20))
+    @settings(max_examples=max(MAX_EXAMPLES // 2, 4), deadline=None)
+    def test_scoped_and_post_eviction(self, seed, vocab):
+        """Windowed context with real evictions: the materialized network
+        (full AND scoped) equals the oracle rebuilt on exactly the live /
+        scoped docs, for every method; ingest invalidates the warm cache."""
+        rng = np.random.default_rng(seed)
+        window = int(rng.integers(8, 25))
+        k = int(rng.integers(1, 5))
+        ctx = QueryContext.from_docs([], vocab, window=window)
+        mirror = deque()                  # (tag, block) — host liveness mirror
+        for i in range(4):
+            n = int(rng.integers(1, min(window, 8) + 1))
+            blk = _adversarial_corpus(n, vocab, int(rng.integers(0, 10**6)),
+                                      int(rng.integers(0, 5)))
+            while mirror and sum(len(b) for _, b in mirror) + n > window:
+                mirror.popleft()
+            tag = f"tag{i % 2}"
+            ctx.ingest_docs(blk, max_len=8, scope=tag)
+            mirror.append((tag, blk))
+        live = [d for _, b in mirror for d in b]
+        tagged = [d for t, b in mirror if t == "tag0" for d in b]
+        warm = {}
+        for m in METHODS:
+            full = materialize(ctx, k=k, method=m)
+            assert _materialized_rows(full) == _oracle_topk_rows(live, vocab, k)
+            scoped = materialize(ctx, k=k, method=m, scope="tag0")
+            assert (_materialized_rows(scoped)
+                    == _oracle_topk_rows(tagged, vocab, k)), m
+            warm[m] = scoped
+            assert materialize(ctx, k=k, method=m, scope="tag0") is scoped
+        # ingest -> epoch bump -> every cached network rebuilds correctly
+        blk = _adversarial_corpus(2, vocab, int(rng.integers(0, 10**6)), 3)
+        while mirror and sum(len(b) for _, b in mirror) + 2 > window:
+            mirror.popleft()
+        ctx.ingest_docs(blk, max_len=8, scope="tag0")
+        mirror.append(("tag0", blk))
+        live = [d for _, b in mirror for d in b]
+        tagged = [d for t, b in mirror if t == "tag0" for d in b]
+        for m in METHODS:
+            scoped = materialize(ctx, k=k, method=m, scope="tag0")
+            assert scoped is not warm[m]
+            assert (_materialized_rows(scoped)
+                    == _oracle_topk_rows(tagged, vocab, k)), m
+            assert (_materialized_rows(materialize(ctx, k=k, method=m))
+                    == _oracle_topk_rows(live, vocab, k)), m

@@ -396,6 +396,28 @@ class TestEngineScopedServing:
         assert good.result().edges() == {(0, 1): 3}
         assert not eng.queue                   # nothing stranded
 
+    def test_failed_requests_are_accounted(self):
+        """Regression: poisoned-scope requests got their error set but
+        never entered `finished`, `latencies_ms`, or any counter —
+        EngineStats silently under-reported.  Failures must show up in the
+        finished log and in stats().failed_total."""
+        ctx = QueryContext.from_docs([], 4, capacity=64)
+        ctx.ingest_docs([[0, 1]] * 3, max_len=4, scope="temp")
+        eng = CoocEngine(ctx, depth=1, topk=2, beam=4, q_batch=2)
+        bad = [eng.submit(QuerySpec(seeds=(0,), depth=1, topk=2, beam=4,
+                                    scope="temp")) for _ in range(2)]
+        good = eng.submit([0])
+        ctx.drop_scope("temp")
+        finished = eng.run_until_drained()
+        assert good.result() is not None
+        st = eng.stats()
+        assert eng.failed_total == st.failed_total == 2
+        assert eng.served_total == 1
+        assert st.n == 3                       # latency window saw all three
+        failed_rids = {r.rid for r in finished if r.error is not None}
+        assert failed_rids == {f.rid for f in bad}
+        assert all(r.t_done > 0 for r in finished)
+
     def test_step_groups_by_scope(self):
         """Queries under different scopes never share a micro-batch (each
         batch executes against exactly one scope bitmap)."""
