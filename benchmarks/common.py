@@ -1,7 +1,8 @@
-"""Shared benchmark utilities: timing, memory tracking, CSV emission."""
+"""Shared benchmark utilities: timing, memory tracking, CSV/JSON emission."""
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
 import tracemalloc
@@ -40,6 +41,23 @@ def write_csv(name: str, rows: List[Dict]) -> str:
             w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
             w.writeheader()
             w.writerows(rows)
+    return os.path.normpath(path)
+
+
+def write_bench_json(name: str, records: List[Dict], *,
+                     quick: bool = False) -> str:
+    """Machine-readable per-bench record file ``BENCH_<name>.json`` under
+    results/bench/: the throughput rows the bench returned to the driver
+    (``[{"name": ..., "value": ...}, ...]``) plus run metadata — the
+    repo's perf trajectory is tracked from these artifacts (CI uploads
+    them per run), so the schema is versioned and append-only."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "bench": name, "quick": bool(quick),
+                   "generated_unix": time.time(),
+                   "records": records}, f, indent=2)
+        f.write("\n")
     return os.path.normpath(path)
 
 

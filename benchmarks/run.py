@@ -1,9 +1,12 @@
 """Benchmark driver: one bench per paper table/figure + the roofline table.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json]
 
 Emits ``name,value`` CSV lines at the end (and per-bench CSVs under
-results/bench/).
+results/bench/).  ``--json`` additionally writes one machine-readable
+``BENCH_<name>.json`` per executed bench (throughput records + run
+metadata) under results/bench/ — the artifacts CI archives so the perf
+trajectory is queryable across runs.
 """
 from __future__ import annotations
 
@@ -16,20 +19,24 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller corpora (CI-speed)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json records per bench")
     ap.add_argument("--only", default=None,
                     choices=("fig7", "fig5", "scaling", "engine", "streaming",
-                             "full_network", "roofline"))
+                             "full_network", "sharded", "roofline"))
     args = ap.parse_args()
 
     results = []
     failures = []
+    per_bench = {}
 
     def run_bench(name, fn):
         if args.only and args.only != name:
             return
         try:
-            out = fn()
-            results.extend(out or [])
+            out = fn() or []
+            results.extend(out)
+            per_bench[name] = out
         except Exception:
             traceback.print_exc()
             failures.append(name)
@@ -75,8 +82,19 @@ def main() -> int:
     run_bench("full_network",
               lambda: bench_full_network.main(full_net_argv))
 
+    from benchmarks import bench_sharded
+    sharded_argv = (["--n-docs", "1024", "--vocab", "256", "--n-queries",
+                     "16", "--k", "4"] if args.quick else [])
+    run_bench("sharded", lambda: bench_sharded.main(sharded_argv))
+
     from benchmarks import roofline
     run_bench("roofline", roofline.main)
+
+    if args.json:
+        from benchmarks.common import write_bench_json
+        for name, out in per_bench.items():
+            path = write_bench_json(name, out, quick=args.quick)
+            print(f"JSON -> {path}")
 
     print("\n== summary (name,value) ==")
     for r in results:

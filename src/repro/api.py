@@ -34,6 +34,13 @@ queries can be scoped to a trailing time bucket or a named source tag::
 A scope is one more ``(W,)`` bitmap ANDed into the seed filters on device
 — scoped queries are exactly as if the index held only the scoped docs,
 with no re-indexing.
+
+**Distributed serving.**  ``CoocIndex(devices=8)`` (or ``mesh=`` with a
+prebuilt ``repro.core.make_cooc_mesh``) serves every query and
+materialization term-sharded across a device mesh: postings split on the
+vocabulary axis, per-device partial counts, cross-device merge — results
+bit-identical to single-device execution (see README §Design,
+distributed execution).
 """
 from __future__ import annotations
 
@@ -91,18 +98,33 @@ class CoocIndex:
                  depth: int = 2, topk: int = 16, beam: int = 32,
                  dedup: bool = True, method: str = "gemm", q_batch: int = 8,
                  stopwords: Set[str] = DEFAULT_STOPWORDS,
-                 on_overflow: str = "grow", window: Optional[int] = None):
+                 on_overflow: str = "grow", window: Optional[int] = None,
+                 mesh=None, devices=None):
         if capacity is not None and window is not None:
             raise ValueError(
                 f"capacity={capacity} and window={window} are contradictory:"
                 " window mode pins the doc buffer at ceil(window/32)*32"
                 " slots and reuses them forever — pass only one")
+        if mesh is not None and devices is not None:
+            raise ValueError("pass mesh= (a prebuilt query mesh) OR "
+                             "devices= (a device count/list to build a "
+                             "term-sharded one over), not both")
+        if devices is not None:
+            # opt-in distributed serving: an int takes the first N local
+            # devices, a sequence is used as given; terms are the split
+            # axis (make_cooc_mesh(shard="docs") callers pass mesh=)
+            from repro.core.distributed import make_cooc_mesh
+            if isinstance(devices, int):
+                mesh = make_cooc_mesh(devices)
+            else:
+                mesh = make_cooc_mesh(devices=devices)
         self.lexicon = Lexicon()
         self.stopwords = stopwords
         # window mode: no pre-allocation — set_window owns the ring sizing
         cap = max(int(capacity or 1024), 32) if window is None else 32
         self.ctx = QueryContext.from_docs([], max(int(vocab_capacity), 1),
-                                          capacity=cap, window=window)
+                                          capacity=cap, window=window,
+                                          mesh=mesh)
         self.engine = CoocEngine(self.ctx, depth=depth, topk=topk, beam=beam,
                                  dedup=dedup, method=method, q_batch=q_batch,
                                  on_overflow=on_overflow)
@@ -360,6 +382,11 @@ class CoocIndex:
     @property
     def n_terms(self) -> int:
         return len(self.lexicon)
+
+    @property
+    def mesh(self):
+        """The query mesh this index serves on (None = single device)."""
+        return self.ctx.mesh
 
     def stats(self):
         return self.engine.stats()

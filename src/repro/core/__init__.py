@@ -59,3 +59,11 @@ from repro.core.network import (  # noqa: F401
     top_edges,
 )
 from repro.core.materialize import materialize  # noqa: F401
+from repro.core.distributed import (  # noqa: F401
+    make_cooc_mesh,
+    n_shards,
+    shard_kind,
+    sharded_block_topk,
+    sharded_counts,
+    validate_mesh,
+)

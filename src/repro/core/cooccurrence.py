@@ -302,7 +302,8 @@ def chunked_top_k(x: jax.Array, k: int, n_chunks: int = 16):
 
 
 def _frontier_counts(index: PackedIndex, masks: jax.Array, method: str,
-                     operands: Mapping[str, jax.Array]) -> jax.Array:
+                     operands: Mapping[str, jax.Array],
+                     mesh=None) -> jax.Array:
     """Frontier-expansion dispatch: masks (B, W) -> counts (B, V).
 
     Resolved through the single count-method registry in
@@ -313,16 +314,25 @@ def _frontier_counts(index: PackedIndex, masks: jax.Array, method: str,
     "pallas"   — the same popcount op through the tiled Pallas postings
                  kernel (compiled on TPU, interpret mode elsewhere;
                  padding to tile multiples handled by kernels.ops).
+
+    With a ``mesh`` the same method runs term- or doc-sharded: per-shard
+    partial counts merged cross-device (gather / psum), bit-exact vs the
+    single-device path (:mod:`repro.core.distributed`).
     """
+    if mesh is not None:
+        from repro.core.distributed import sharded_counts
+        return sharded_counts(index, masks, method, operands, mesh)
     from repro.core.query import get_count_method
     m = get_count_method(method)
     return m.fn(index, masks, operands)
 
 
 def _resolve_operands(index, method: str, x_dense: Optional[jax.Array],
-                      operands: Optional[Mapping[str, jax.Array]]
-                      ) -> Tuple[PackedIndex, Dict[str, jax.Array]]:
-    """Unwrap a QueryContext and assemble the method's operands mapping.
+                      operands: Optional[Mapping[str, jax.Array]],
+                      mesh=None
+                      ) -> Tuple[PackedIndex, Dict[str, jax.Array], object]:
+    """Unwrap a QueryContext and assemble the method's operands mapping
+    (plus the resolved mesh: the explicit argument, else the context's).
 
     Precedence per needed operand: explicit ``operands`` entry > legacy
     ``x_dense`` kwarg > the context's cached artifact (zero rebuilds on a
@@ -340,6 +350,8 @@ def _resolve_operands(index, method: str, x_dense: Optional[jax.Array],
     if isinstance(index, QueryContext):
         ctx = index
         index = ctx.index
+        if mesh is None:
+            mesh = ctx.mesh
         for name in needs:
             if name not in ops:
                 ops[name] = getattr(ctx, name)()
@@ -351,15 +363,16 @@ def _resolve_operands(index, method: str, x_dense: Optional[jax.Array],
         from repro.launch.sharding import constrain
         ops["x_dense"] = constrain(incidence_dense(index, jnp.bfloat16),
                                    ("docs", "terms"))
-    return index, ops
+    return index, ops, mesh
 
 
 def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
-                  method: str, operands: Mapping[str, jax.Array]):
+                  method: str, operands: Mapping[str, jax.Array], mesh=None):
     """One BFS level: batched frontier expansion + beam re-selection."""
     b = state.masks.shape[0]
 
-    counts = _frontier_counts(index, state.masks, method, operands)  # (B, V) int32
+    counts = _frontier_counts(index, state.masks, method, operands,
+                              mesh)  # (B, V) int32
     # mask self-pairs, invalid rows, and (optionally) visited terms
     counts = counts.at[jnp.arange(b), jnp.clip(state.terms, 0)].set(-1)
     if dedup:
@@ -420,7 +433,8 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
                   method: str = "gemm",
                   x_dense: Optional[jax.Array] = None,
                   operands: Optional[Mapping[str, jax.Array]] = None,
-                  scope_mask: Optional[jax.Array] = None
+                  scope_mask: Optional[jax.Array] = None,
+                  mesh=None
                   ) -> CoocNetwork:
     """Paper Algorithm 3, TPU-adapted (see README.md §Design).
 
@@ -457,8 +471,15 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
     every deeper filter is ``parent_mask & postings``, so the scope is
     inherited by the whole BFS for free, and results are exactly those of
     an index containing only the scoped documents.
+
+    mesh: an optional query mesh (``distributed.make_cooc_mesh``) — the
+    frontier expansion runs term- or doc-sharded across its devices with
+    a cross-device merge, bit-exact vs the single-device path.  Defaults
+    to the context's mesh when ``index`` is a mesh-bearing QueryContext;
+    ``None`` (no context mesh) is the unchanged single-device path.
     """
-    index, ops = _resolve_operands(index, method, x_dense, operands)
+    index, ops, mesh = _resolve_operands(index, method, x_dense, operands,
+                                         mesh)
     v = index.vocab_size
     b = beam
     s = seed_terms.shape[0]
@@ -479,7 +500,7 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
 
     def step(state, _):
         new_state, edges = _expand_level(index, state, topk, dedup, method,
-                                         ops)
+                                         ops, mesh)
         return new_state, edges
 
     from repro.launch.flags import unroll_scans
@@ -505,7 +526,8 @@ def bfs_construct_batch(index, seed_terms: jax.Array, *, depth: int,
                         method: str = "gemm",
                         x_dense: Optional[jax.Array] = None,
                         operands: Optional[Mapping[str, jax.Array]] = None,
-                        scope_mask: Optional[jax.Array] = None
+                        scope_mask: Optional[jax.Array] = None,
+                        mesh=None
                         ) -> CoocNetwork:
     """Batched queries (the web-service scenario): seed_terms (Q, S).
 
@@ -514,12 +536,15 @@ def bfs_construct_batch(index, seed_terms: jax.Array, *, depth: int,
     ``operands``/``x_dense``) is closed over — broadcast, i.e. sharded
     once, not replicated per query, under pjit.  ``scope_mask`` is shared
     by the whole batch (the engine groups queries by scope, so a batch is
-    scope-homogeneous).
+    scope-homogeneous).  ``mesh`` shards the frontier expansion exactly
+    as in :func:`bfs_construct` (vmap batches straight through the
+    shard_map'd counts).
     """
-    index, ops = _resolve_operands(index, method, x_dense, operands)
+    index, ops, mesh = _resolve_operands(index, method, x_dense, operands,
+                                         mesh)
     fn = functools.partial(bfs_construct, index, depth=depth, topk=topk,
                            beam=beam, dedup=dedup, method=method,
-                           operands=ops, scope_mask=scope_mask)
+                           operands=ops, scope_mask=scope_mask, mesh=mesh)
     nets = jax.vmap(fn)(seed_terms)
     return CoocNetwork(
         src=nets.src.reshape(-1), dst=nets.dst.reshape(-1),

@@ -1,0 +1,299 @@
+"""Device-mesh sharded query execution (the scale-out axis).
+
+Billerbeck et al. (PAPERS.md) show term-partitioned co-occurrence counting
+is the natural way to scale pair counting past one machine; on a JAX
+device mesh the same decomposition falls out of the bit-packed index
+directly.  This module makes the repo's dormant logical-axis sharding
+layer (``launch/sharding.py`` rules for ``docs``/``terms``) *execute*
+distributed instead of merely annotating placement:
+
+* **Term sharding** (the primary axis, ``shard="terms"``): the packed
+  postings ``(W, V)`` — and the dense incidence / transposed postings
+  artifacts — split on the vocabulary axis.  Every device evaluates the
+  frontier filters against ITS V/n postings columns (per-shard partial
+  counts; the Pallas kernels run on the local shard), and the shards
+  merge cross-device with an ``all_gather`` along the term axis
+  (:func:`sharded_counts`) or a per-shard partial top-k + candidate
+  gather + final top-k (:func:`sharded_block_topk`, the materialization
+  merge — only ``n * k`` candidates cross the interconnect per row
+  block, never the (bm, V) counts).
+* **Doc sharding** (``shard="docs"``): the packed word rows ``(W,)``
+  split across devices; each device popcounts its document slice and the
+  partial counts merge with an integer ``psum`` — exact, since int32
+  sums are associative.
+
+Every sharded path is **bit-exact** against the single-device execution
+— values AND tie order — which the forced-multi-device differential
+harness in ``tests/test_differential.py`` asserts for all count methods
+(gemm / popcount / pallas-interpret), bare ``bfs_construct``, batched
+engine submission, and ``materialize``:
+
+* counts are exact integers under every method (popcounts, or 0/1 GEMMs
+  with fp32 accumulation, exact for D < 2^24), so per-shard partials
+  merged by gather or psum reproduce the single-device counts bit for
+  bit;
+* the top-k merge preserves exact ``lax.top_k`` ORDER by the same
+  argument as :func:`~repro.core.cooccurrence.chunked_top_k`: shards are
+  contiguous id ranges laid out shard-major (= global-index-major) in
+  the candidate buffer, local top-k emits lower-id-first on ties, and
+  ``lax.top_k`` prefers earlier candidate slots.
+
+Mesh convention: 2-D ``("data", "model")`` like ``launch/mesh.py``, docs
+over "data", terms over "model" (exactly the DEFAULT_RULES binding), one
+axis of size > 1.  Build one with :func:`make_cooc_mesh`; pass it to
+``QueryContext(mesh=...)`` / ``CoocIndex(mesh=...)`` (or ``devices=``),
+or per-call via ``bfs_construct(..., mesh=...)`` /
+``materialize(..., mesh=...)``.  With no mesh every path falls back to
+the single-device implementation unchanged.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.inverted_index import PackedIndex, unpack_bitmap
+from repro.core.query import get_count_method
+from repro.launch.sharding import shard_map_compat as _smap
+
+#: physical mesh axes (launch/mesh.py convention; DEFAULT_RULES maps the
+#: logical "terms" axis onto "model" and "docs" onto "data")
+DOC_AXIS = "data"
+TERM_AXIS = "model"
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _pad_dim(x: jax.Array, axis: int, size: int) -> jax.Array:
+    if x.shape[axis] == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction / validation
+# ---------------------------------------------------------------------------
+
+
+def make_cooc_mesh(n_shards: Optional[int] = None, *,
+                   devices: Optional[Sequence] = None,
+                   shard: str = "terms") -> Mesh:
+    """A query-serving mesh over ``n_shards`` devices (default: all).
+
+    shard="terms" -> ("data"=1, "model"=n): postings columns split.
+    shard="docs"  -> ("data"=n, "model"=1): packed word rows split.
+    """
+    if shard not in ("terms", "docs"):
+        raise ValueError(f"shard must be 'terms' or 'docs', got {shard!r}")
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if n_shards is not None:
+        if n_shards < 1 or n_shards > len(devs):
+            raise ValueError(f"n_shards={n_shards} outside [1, {len(devs)}] "
+                             "available devices")
+        devs = devs[:n_shards]
+    n = len(devs)
+    shape = (1, n) if shard == "terms" else (n, 1)
+    return Mesh(np.asarray(devs).reshape(shape), (DOC_AXIS, TERM_AXIS))
+
+
+def validate_mesh(mesh: Mesh) -> None:
+    """Reject meshes the sharded paths can't serve (both axes > 1, or
+    missing the ("data", "model") axis names)."""
+    for ax in (DOC_AXIS, TERM_AXIS):
+        if ax not in mesh.shape:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.shape)} miss {ax!r}; build one with "
+                "make_cooc_mesh (axes ('data', 'model'))")
+    if mesh.shape[DOC_AXIS] > 1 and mesh.shape[TERM_AXIS] > 1:
+        raise ValueError(
+            f"mesh shards BOTH docs ({mesh.shape[DOC_AXIS]}) and terms "
+            f"({mesh.shape[TERM_AXIS]}); the query paths shard one axis "
+            "at a time — use make_cooc_mesh(shard='terms'|'docs')")
+
+
+def shard_kind(mesh: Mesh) -> str:
+    """'docs' when the data axis carries the split, else 'terms' (a 1x1
+    mesh degenerates to a single-shard 'terms' layout)."""
+    validate_mesh(mesh)
+    return "docs" if mesh.shape[DOC_AXIS] > 1 else "terms"
+
+
+def n_shards(mesh: Mesh) -> int:
+    return max(mesh.shape[DOC_AXIS], mesh.shape[TERM_AXIS])
+
+
+# term-sharded operand layout: (sharded dim, PartitionSpec) per known
+# QueryContext artifact; doc-sharded layout below.  x_dense rows are doc
+# slots (32 per packed word), packed_t is (V, W).
+_TERM_LAYOUT = {"x_dense": (1, P(None, TERM_AXIS)),
+                "packed_t": (0, P(TERM_AXIS, None))}
+_DOC_LAYOUT = {"x_dense": (0, P(DOC_AXIS, None)),
+               "packed_t": (1, P(None, DOC_AXIS))}
+
+
+def _local_counts(method: str, cooc_gemm: bool, index_l: PackedIndex,
+                  masks: jax.Array, ops_l: Mapping[str, jax.Array]
+                  ) -> jax.Array:
+    """One shard's (B, V_local) counts.  ``cooc_gemm`` routes method
+    "pallas" through the tiled Pallas co-occurrence GEMM
+    (``kernels.ops.cooccur_counts`` — the materialization path's kernel,
+    whose grid tiles the local shard) instead of the postings-popcount
+    kernel the frontier registry uses."""
+    if cooc_gemm and method == "pallas":
+        from repro.kernels import ops as kops
+        x = ops_l["x_dense"]
+        xl = unpack_bitmap(masks, x.dtype).T
+        return kops.cooccur_counts(xl, x, backend=kops.pallas_backend())
+    return get_count_method(method).fn(index_l, masks, ops_l)
+
+
+def _needs(method: str, cooc_gemm: bool) -> Tuple[str, ...]:
+    if cooc_gemm and method == "pallas":
+        return ("x_dense",)
+    return get_count_method(method).needs
+
+
+# ---------------------------------------------------------------------------
+# Sharded frontier counts (bfs_construct's expansion under a mesh)
+# ---------------------------------------------------------------------------
+
+
+def sharded_counts(index: PackedIndex, masks: jax.Array, method: str,
+                   operands: Mapping[str, jax.Array], mesh: Mesh, *,
+                   cooc_gemm: bool = False) -> jax.Array:
+    """(B, V) int32 frontier counts under ``mesh`` — replicated output,
+    bit-exact vs the single-device method.
+
+    Term mesh: each device counts against its V/n postings columns and
+    the partials concatenate with a tiled ``all_gather`` (the cross-
+    device merge).  Doc mesh: each device popcounts its word rows and
+    the int32 partials ``psum`` — exact, integer addition is associative.
+    """
+    kind = shard_kind(mesh)
+    n = n_shards(mesh)
+    needs = _needs(method, cooc_gemm)
+    v = index.vocab_size
+
+    if kind == "terms":
+        v_pad = _round_up(v, n)
+        packed = _pad_dim(index.packed, 1, v_pad)
+        df = _pad_dim(index.doc_freq, 0, v_pad)
+        extras = [_pad_dim(operands[name], _TERM_LAYOUT[name][0], v_pad)
+                  for name in needs]
+        specs = tuple(_TERM_LAYOUT[name][1] for name in needs)
+
+        def local(masks, packed_l, df_l, n_docs, *xs):
+            idx_l = PackedIndex(packed_l, df_l, n_docs)
+            c = _local_counts(method, cooc_gemm, idx_l, masks,
+                              dict(zip(needs, xs)))
+            return jax.lax.all_gather(c, TERM_AXIS, axis=1, tiled=True)
+
+        out = _smap(local, mesh,
+                    in_specs=(P(), P(None, TERM_AXIS), P(TERM_AXIS), P(),
+                              *specs),
+                    out_specs=P(None, None))(
+            masks, packed, df, index.n_docs, *extras)
+        return out[:, :v]
+
+    # doc sharding: split the packed word rows; masks split with them
+    w = index.n_words
+    w_pad = _round_up(w, n)
+    packed = _pad_dim(index.packed, 0, w_pad)
+    masks_p = _pad_dim(masks, 1, w_pad)
+    extras, specs = [], []
+    for name in needs:
+        dim, spec = _DOC_LAYOUT[name]
+        size = w_pad * 32 if name == "x_dense" else w_pad
+        extras.append(_pad_dim(operands[name], dim, size))
+        specs.append(spec)
+
+    def local(masks_l, packed_l, df, n_docs, *xs):
+        idx_l = PackedIndex(packed_l, df, n_docs)
+        c = _local_counts(method, cooc_gemm, idx_l, masks_l,
+                          dict(zip(needs, xs)))
+        return jax.lax.psum(c, DOC_AXIS)
+
+    return _smap(local, mesh,
+                 in_specs=(P(None, DOC_AXIS), P(DOC_AXIS, None), P(), P(),
+                           *specs),
+                 out_specs=P(None, None))(
+        masks_p, packed, index.doc_freq, index.n_docs, *extras)
+
+
+# ---------------------------------------------------------------------------
+# Sharded row-block top-k (materialize's merge under a mesh)
+# ---------------------------------------------------------------------------
+
+
+def sharded_block_topk(index: PackedIndex, masks: jax.Array, rows: jax.Array,
+                       operands: Mapping[str, jax.Array], *, k: int,
+                       method: str, mesh: Mesh
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Top-``k`` neighbors for one materialization row block under
+    ``mesh``: (weights, ids), weight -1 marking empty slots — the same
+    contract, values, and tie order as the single-device
+    ``materialize._topk_row_block``.
+
+    Term mesh (the showcase): per-shard partial top-k over the local
+    V/n columns, then only the ``n * k`` candidates are gathered and
+    reduced by a final ``lax.top_k`` — the (bm, V) count block never
+    crosses the interconnect.  Self-pairs and padding columns are forced
+    to -1 BEFORE the local top-k, exactly as the single-device block
+    masks them.  Doc mesh: psum-merged replicated counts through the
+    single-device ``chunked_top_k``.
+    """
+    from repro.core.cooccurrence import chunked_top_k
+    bm = masks.shape[0]
+    v = index.vocab_size
+
+    if shard_kind(mesh) == "docs":
+        counts = sharded_counts(index, masks, method, operands, mesh,
+                                cooc_gemm=True)
+        counts = counts.at[jnp.arange(bm),
+                           jnp.clip(rows, 0, v - 1)].set(-1)
+        return chunked_top_k(counts, k)
+
+    n = n_shards(mesh)
+    v_pad = _round_up(v, n)
+    v_loc = v_pad // n
+    k_loc = min(k, v_loc)
+    k_fin = min(k, n * k_loc)
+    needs = _needs(method, cooc_gemm=True)
+    packed = _pad_dim(index.packed, 1, v_pad)
+    df = _pad_dim(index.doc_freq, 0, v_pad)
+    extras = [_pad_dim(operands[name], _TERM_LAYOUT[name][0], v_pad)
+              for name in needs]
+    specs = tuple(_TERM_LAYOUT[name][1] for name in needs)
+
+    def local(masks, rows, packed_l, df_l, n_docs, *xs):
+        idx_l = PackedIndex(packed_l, df_l, n_docs)
+        c = _local_counts(method, True, idx_l, masks, dict(zip(needs, xs)))
+        off = jax.lax.axis_index(TERM_AXIS).astype(jnp.int32) * v_loc
+        cols = off + jnp.arange(v_loc, dtype=jnp.int32)
+        # self-pairs and padding columns can never be neighbors: force
+        # them BELOW every real count (including real zeros) so the
+        # merged order equals the single-device lax.top_k order
+        c = jnp.where((cols[None, :] == rows[:, None])
+                      | (cols >= v)[None, :], -1, c)
+        w_l, i_l = jax.lax.top_k(c, k_loc)
+        w_all = jax.lax.all_gather(w_l, TERM_AXIS, axis=1, tiled=True)
+        i_all = jax.lax.all_gather(off + i_l, TERM_AXIS, axis=1, tiled=True)
+        w2, sel = jax.lax.top_k(w_all, k_fin)
+        return w2, jnp.take_along_axis(i_all, sel, axis=1)
+
+    w2, i2 = _smap(local, mesh,
+                   in_specs=(P(), P(), P(None, TERM_AXIS), P(TERM_AXIS),
+                             P(), *specs),
+                   out_specs=(P(None, None), P(None, None)))(
+        masks, rows, packed, df, index.n_docs, *extras)
+    if k_fin < k:          # k > V (tiny vocab): pad like chunked_top_k
+        w2 = jnp.pad(w2, ((0, 0), (0, k - k_fin)), constant_values=-1)
+        i2 = jnp.pad(i2, ((0, 0), (0, k - k_fin)))
+    return w2, i2

@@ -65,12 +65,13 @@ def _round_up(n: int, mult: int) -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "row_tile", "col_tile", "method"))
+                   static_argnames=("k", "row_tile", "col_tile", "method",
+                                    "mesh"))
 def _topk_row_block(index: PackedIndex, packed_t: jax.Array,
                     scope_mask: Optional[jax.Array],
                     operands: Mapping[str, jax.Array], row_start, *,
-                    k: int, row_tile: int, col_tile: int, method: str
-                    ) -> Tuple[jax.Array, jax.Array]:
+                    k: int, row_tile: int, col_tile: int, method: str,
+                    mesh=None) -> Tuple[jax.Array, jax.Array]:
     """Top-k neighbors for one block of ``row_tile`` consecutive terms;
     returns (weights, neighbor ids), weight -1 marking empty slots.
 
@@ -89,6 +90,13 @@ def _topk_row_block(index: PackedIndex, packed_t: jax.Array,
     masks = jnp.where((rows < v)[:, None], masks, jnp.uint32(0))
     if scope_mask is not None:
         masks = masks & scope_mask[None, :]
+
+    if mesh is not None:
+        # sharded block: per-shard partial counts/top-k, cross-device
+        # candidate merge — same values, same tie order (distributed.py)
+        from repro.core.distributed import sharded_block_topk
+        return sharded_block_topk(index, masks, rows, operands, k=k,
+                                  method=method, mesh=mesh)
 
     if method != "pallas":
         # one registry call materializes the whole (row_tile, V) count
@@ -158,7 +166,7 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
                 scope: Optional[str] = None,
                 scope_mask: Optional[jax.Array] = None,
                 row_tile: int = 128, col_tile: int = 512,
-                use_cache: bool = True) -> CoocNetwork:
+                use_cache: bool = True, mesh=None) -> CoocNetwork:
     """Materialize the corpus co-occurrence network, top-``k`` per term.
 
     index: a PackedIndex, or a QueryContext (cached artifacts + result
@@ -177,6 +185,12 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
     query path already holds and this O(V·k) result, the peak transient
     is one (row_tile, col_tile) count tile under ``method="pallas"``, or
     one row block's (row_tile, V) counts under a registry method.
+
+    mesh: an optional query mesh (``distributed.make_cooc_mesh``;
+    defaults to the context's) — each row block's counts and top-k run
+    term- or doc-sharded across the mesh with a cross-device candidate
+    merge, bit-exact vs the single-device path (per-device transient is
+    the LOCAL shard's counts, V/n columns).
     """
     from repro.core.query_context import QueryContext
     if k < 1:
@@ -191,6 +205,8 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
         raise ValueError(
             f"scope={scope!r} needs a QueryContext to resolve the scope "
             "name to a document bitmap; got a bare index")
+    if mesh is None and ctx is not None:
+        mesh = ctx.mesh
 
     v = (ctx.index if ctx is not None else index).vocab_size
     # shrink tiles toward the vocab so tiny indices don't pad to 128/512
@@ -205,8 +221,15 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
         # the entry is versioned by (epoch, scope_version): a dropped or
         # redefined scope misses here and fails/rebuilds below (the new
         # store OVERWRITES the superseded network — no leak), so a warm
-        # hit is a dict lookup — no operand resolution, no device work
-        cache_key = ("materialize", k, method, scope, bm, bn)
+        # hit is a dict lookup — no operand resolution, no device work.
+        # The mesh joins the key: sharded and single-device results are
+        # bit-identical in VALUE, but their device placement differs —
+        # a cached network must not masquerade under a different
+        # placement (device IDENTITY matters, not just the axis shape:
+        # two same-shape meshes over disjoint devices are distinct)
+        mesh_key = (tuple(int(d.id) for d in mesh.devices.flat)
+                    if mesh is not None else None)
+        cache_key = ("materialize", k, method, scope, bm, bn, mesh_key)
         cache_ver = ctx.scope_version(scope) if scope is not None else 0
         hit = ctx.cached_artifact(cache_key, cache_ver)
         if hit is not None:
@@ -221,8 +244,9 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
             raise ValueError(f"scope_mask shape {scope_mask.shape} != "
                              f"({pidx.n_words},) (one uint32 per 32 doc slots)")
 
-    if method == "pallas":
+    if method == "pallas" and mesh is None:
         # pad the incidence columns ONCE so every column tile is full-width
+        # (the sharded path pads to the shard multiple internally instead)
         x = operands["x_dense"]
         v_pad = _round_up(v, bn)
         if v_pad > v:
@@ -233,7 +257,7 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
     for r0 in range(0, _round_up(v, bm), bm):
         w_b, i_b = _topk_row_block(pidx, packed_t, scope_mask, operands, r0,
                                    k=k, row_tile=bm, col_tile=bn,
-                                   method=method)
+                                   method=method, mesh=mesh)
         ws.append(w_b)
         ids.append(i_b)
     run_w = jnp.concatenate(ws, axis=0)[:v]                     # (V, k)

@@ -102,7 +102,11 @@ class QueryContext:
     """Packed index + epoch-versioned caches + method dispatch table."""
 
     def __init__(self, index: PackedIndex, *, dtype=jnp.bfloat16,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None, mesh=None):
+        if mesh is not None:
+            from repro.core.distributed import validate_mesh
+            validate_mesh(mesh)
+        self._mesh = mesh
         self._index = index
         self._dtype = dtype
         self.epoch = 0
@@ -151,13 +155,33 @@ class QueryContext:
     @classmethod
     def from_docs(cls, doc_terms: Sequence[Sequence[int]], vocab_size: int, *,
                   capacity: Optional[int] = None, dtype=jnp.bfloat16,
-                  window: Optional[int] = None) -> "QueryContext":
+                  window: Optional[int] = None, mesh=None) -> "QueryContext":
         return cls(pack_docs(doc_terms, vocab_size, capacity=capacity),
-                   dtype=dtype, window=window)
+                   dtype=dtype, window=window, mesh=mesh)
 
     @property
     def index(self) -> PackedIndex:
         return self._index
+
+    @property
+    def mesh(self):
+        """The context's query mesh (None = single-device execution).
+        When set, queries and materialization against this context run
+        sharded across the mesh's devices (``core.distributed``) and the
+        cached artifacts are CONSTRUCTED already placed on it."""
+        return self._mesh
+
+    def _place(self, x: jax.Array, axes) -> jax.Array:
+        """Shard an artifact at build time: under a mesh, device_put with
+        the logical-axis rules bound to this mesh (indivisible dims
+        degrade to replication — the shard_map'd execution paths re-pad
+        and re-shard as needed); without one, the legacy constrain (a
+        no-op outside an active axis_rules context)."""
+        from repro.launch.sharding import axis_rules, constrain, named_sharding
+        if self._mesh is None:
+            return constrain(x, axes)
+        with axis_rules(self._mesh):
+            return jax.device_put(x, named_sharding(axes, x.shape))
 
     @property
     def vocab_size(self) -> int:
@@ -314,8 +338,7 @@ class QueryContext:
         """Dense incidence X (capacity, V), unpacked once per epoch and
         sharded (docs, terms) at build time."""
         if self._x_epoch != self.epoch:
-            from repro.launch.sharding import constrain
-            self._x_dense = constrain(
+            self._x_dense = self._place(
                 incidence_dense(self._index, self._dtype), ("docs", "terms"))
             self._x_epoch = self.epoch
             self.unpack_count += 1
@@ -327,9 +350,8 @@ class QueryContext:
         full-network materialization reads term rows contiguously instead
         of striding over ``packed``'s columns."""
         if self._pt_epoch != self.epoch:
-            from repro.launch.sharding import constrain
-            self._packed_t = constrain(jnp.transpose(self._index.packed),
-                                       ("terms", "docs"))
+            self._packed_t = self._place(jnp.transpose(self._index.packed),
+                                         ("terms", "docs"))
             self._pt_epoch = self.epoch
         return self._packed_t
 

@@ -101,6 +101,57 @@ def cooccur_counts(x_l: jax.Array, x_r: jax.Array, *,
     return jnp.round(out[:vl, :vr]).astype(jnp.int32)
 
 
+def cooccur_counts_sharded(x_l: jax.Array, x_r: jax.Array, *, mesh,
+                           backend: Optional[str] = None, bm: int = 128,
+                           bn: int = 128, bk: int = 512) -> jax.Array:
+    """:func:`cooccur_counts` under a device mesh — per-shard tile
+    dispatch: the Pallas GEMM's grid runs on each device's LOCAL shard
+    and the partials merge cross-device, bit-exactly.
+
+    Term-sharded mesh ("model" axis > 1): ``x_r``'s columns split, each
+    device computes its (Vl, Vr/n) count block, merged with a tiled
+    ``all_gather``.  Doc-sharded mesh ("data" axis > 1): both operands'
+    contraction rows split, per-device partial products merged with an
+    integer ``psum`` (0/1 operands accumulate in fp32 exactly, and the
+    int32 partials sum associatively — no precision loss).  Columns/rows
+    pad to the shard multiple and slice back, as the single-device
+    wrapper pads to tile multiples.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import shard_map_compat
+    n_data = mesh.shape.get("data", 1)
+    n_model = mesh.shape.get("model", 1)
+    if n_data > 1 and n_model > 1:
+        raise ValueError("cooccur_counts_sharded shards one axis at a time; "
+                         f"got mesh shape {dict(mesh.shape)}")
+    vr = x_r.shape[1]
+
+    if n_model > 1:          # term-sharded columns + gather merge
+        xr = _pad_to(x_r, 1, n_model)
+
+        def local(x_l, x_r_l):
+            c = cooccur_counts(x_l, x_r_l, backend=backend, bm=bm, bn=bn,
+                               bk=bk)
+            return jax.lax.all_gather(c, "model", axis=1, tiled=True)
+
+        out = shard_map_compat(local, mesh,
+                               in_specs=(P(), P(None, "model")),
+                               out_specs=P(None, None))(x_l, xr)
+        return out[:, :vr]
+
+    # doc-sharded contraction rows + psum merge
+    xl = _pad_to(x_l, 0, n_data)
+    xr = _pad_to(x_r, 0, n_data)
+
+    def local(x_l_l, x_r_l):
+        c = cooccur_counts(x_l_l, x_r_l, backend=backend, bm=bm, bn=bn, bk=bk)
+        return jax.lax.psum(c, "data")
+
+    return shard_map_compat(local, mesh,
+                            in_specs=(P("data", None), P("data", None)),
+                            out_specs=P(None, None))(xl, xr)
+
+
 # -- postings popcount -------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("backend", "bb", "bv", "bw"))

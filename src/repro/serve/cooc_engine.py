@@ -172,13 +172,16 @@ class CoocEngine:
         """Jitted executable for ``key``.  The cache key collapses the
         scope NAME to scoped-or-not: the scope bitmap is a traced operand,
         so every scoped plan with equal shape fields shares one executable
-        — queries over "7d" and "30d" never compile twice."""
+        — queries over "7d" and "30d" never compile twice.  The context's
+        mesh (if any) is baked into every executable: a mesh-bearing
+        engine serves every plan sharded, bit-exactly."""
         exec_key = key._replace(scope=key.scope is not None)
         fn = self._executors.get(exec_key)
         if fn is None:
             fn = jax.jit(functools.partial(
                 bfs_construct_batch, depth=key.depth, topk=key.topk,
-                beam=key.beam, dedup=key.dedup, method=key.method))
+                beam=key.beam, dedup=key.dedup, method=key.method,
+                mesh=self.ctx.mesh))
             self._executors[exec_key] = fn
         return fn
 

@@ -22,8 +22,12 @@ Registered under the ``slow`` marker; the per-test example budget is
 every PR without blowing the time budget).
 """
 import os
+import subprocess
+import sys
+import textwrap
 from collections import deque
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -36,6 +40,7 @@ from repro.core import (
     bfs_construct_host_fast,
     build_host_index,
     construct,
+    make_cooc_mesh,
     materialize,
     pack_docs,
     to_edge_dict,
@@ -261,3 +266,168 @@ class TestMaterializeMatchesOracle:
                     == _oracle_topk_rows(tagged, vocab, k)), m
             assert (_materialized_rows(materialize(ctx, k=k, method=m))
                     == _oracle_topk_rows(live, vocab, k)), m
+
+
+# ---------------------------------------------------------------------------
+# Sharded vs single-device equivalence (the forced-multi-device harness)
+# ---------------------------------------------------------------------------
+
+_N_DEV = len(jax.devices())
+SHARDS = ("terms", "docs")
+
+
+def _assert_net_identical(a, b, msg=""):
+    """Networks must be BIT-identical: every array, values AND tie order."""
+    for f in ("src", "dst", "weight", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}/{f}")
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(
+    _N_DEV < 2,
+    reason="needs a forced multi-device host "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+class TestShardedEquivalence:
+    """Every distributed path must be bit-exact against the single-device
+    oracle: gather-merged term sharding AND psum-merged doc sharding, for
+    all three count methods, on bare construction, batched engine
+    serving, and materialization (warm + cold, scoped + windowed)."""
+
+    @given(st.integers(1, 50), st.integers(2, 32), st.integers(0, 10**6),
+           st.integers(0, 4))
+    @settings(max_examples=max(MAX_EXAMPLES // 2, 4), deadline=None)
+    def test_bfs_construct_bit_exact(self, n_docs, vocab, seed, flavor):
+        """Bare bfs_construct under both shard kinds == single device,
+        bit for bit, for every count method — context-carried mesh and
+        explicit mesh= on a bare PackedIndex."""
+        docs = _adversarial_corpus(n_docs, vocab, seed, flavor)
+        idx = pack_docs(docs, vocab)
+        ctx0 = QueryContext.from_docs(docs, vocab)
+        s = _seed_term(idx.doc_freq)
+        seeds = jnp.asarray([s, -1, -1, -1], jnp.int32)
+        for shard in SHARDS:
+            mesh = make_cooc_mesh(shard=shard)
+            ctxm = QueryContext.from_docs(docs, vocab, mesh=mesh)
+            for m in METHODS:
+                ref = bfs_construct(ctx0, seeds, depth=2, topk=4, beam=8,
+                                    method=m)
+                _assert_net_identical(
+                    ref, bfs_construct(ctxm, seeds, depth=2, topk=4, beam=8,
+                                       method=m), f"ctx/{shard}/{m}")
+                _assert_net_identical(
+                    ref, bfs_construct(idx, seeds, depth=2, topk=4, beam=8,
+                                       method=m, mesh=mesh),
+                    f"bare/{shard}/{m}")
+
+    @given(st.integers(0, 10**6), st.integers(4, 24))
+    @settings(max_examples=max(MAX_EXAMPLES // 3, 3), deadline=None)
+    def test_batched_engine_submission(self, seed, vocab):
+        """A mesh-bearing engine serves micro-batched, plan-grouped,
+        scoped queries bit-identically to a plain engine."""
+        from repro.serve.cooc_engine import CoocEngine
+        rng = np.random.default_rng(seed)
+        docs = _adversarial_corpus(int(rng.integers(8, 40)), vocab,
+                                   int(rng.integers(0, 10**6)),
+                                   int(rng.integers(0, 5)))
+        mesh = make_cooc_mesh()            # term-sharded over all devices
+        ctx0 = QueryContext.from_docs(docs, vocab)
+        ctxm = QueryContext.from_docs(docs, vocab, mesh=mesh)
+        tagged = [i for i in range(len(docs)) if i % 3 == 0]
+        for c in (ctx0, ctxm):
+            c.tag_scope("t0", tagged)
+        e0 = CoocEngine(ctx0, depth=2, topk=4, beam=8, q_batch=4)
+        em = CoocEngine(ctxm, depth=2, topk=4, beam=8, q_batch=4)
+        specs = []
+        for q in range(6):
+            s = int(rng.integers(0, vocab))
+            specs.append(QuerySpec(
+                seeds=(s,), depth=2, topk=4, beam=8,
+                method=METHODS[q % 3], scope="t0" if q % 2 else None))
+        f0 = [e0.submit(sp) for sp in specs]
+        fm = [em.submit(sp) for sp in specs]
+        for i, (a, b) in enumerate(zip(f0, fm)):
+            _assert_net_identical(a.result().network, b.result().network,
+                                  f"engine/{specs[i].method}")
+
+    @given(st.integers(0, 10**6), st.integers(4, 20))
+    @settings(max_examples=max(MAX_EXAMPLES // 3, 3), deadline=None)
+    def test_materialize_scoped_windowed(self, seed, vocab):
+        """materialize under both shard kinds == single device on a
+        windowed context with real evictions and scopes; the warm cache
+        serves the sharded artifact (identity), cold rebuilds agree."""
+        rng = np.random.default_rng(seed)
+        window = int(rng.integers(8, 25))
+        k = int(rng.integers(1, 5))
+        meshes = {shard: make_cooc_mesh(shard=shard) for shard in SHARDS}
+        ctxs = {None: QueryContext.from_docs([], vocab, window=window)}
+        for shard, mesh in meshes.items():
+            ctxs[shard] = QueryContext.from_docs([], vocab, window=window,
+                                                 mesh=mesh)
+        for i in range(4):
+            n = int(rng.integers(1, min(window, 8) + 1))
+            blk = _adversarial_corpus(n, vocab, int(rng.integers(0, 10**6)),
+                                      int(rng.integers(0, 5)))
+            for c in ctxs.values():
+                c.ingest_docs(blk, max_len=8, scope=f"tag{i % 2}")
+        for m in METHODS:
+            full0 = materialize(ctxs[None], k=k, method=m)
+            scoped0 = materialize(ctxs[None], k=k, method=m, scope="tag0")
+            for shard in SHARDS:
+                cold = materialize(ctxs[shard], k=k, method=m)
+                _assert_net_identical(full0, cold, f"mat/{shard}/{m}")
+                warm = materialize(ctxs[shard], k=k, method=m)
+                assert warm is cold, f"warm cache missed ({shard}/{m})"
+                _assert_net_identical(
+                    scoped0,
+                    materialize(ctxs[shard], k=k, method=m, scope="tag0"),
+                    f"mat-scoped/{shard}/{m}")
+
+
+SHARDED_SMOKE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import (QueryContext, bfs_construct, make_cooc_mesh,
+                            materialize)
+    assert len(jax.devices()) == 8
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 29, rng.integers(1, 8)).tolist()
+            for _ in range(40)]
+    ctx0 = QueryContext.from_docs(docs, 29)
+    seeds = jnp.asarray([3, -1, -1, -1], jnp.int32)
+    for shard in ("terms", "docs"):
+        ctxm = QueryContext.from_docs(docs, 29, mesh=make_cooc_mesh(shard=shard))
+        for m in ("gemm", "popcount", "pallas"):
+            a = bfs_construct(ctx0, seeds, depth=2, topk=4, beam=8, method=m)
+            b = bfs_construct(ctxm, seeds, depth=2, topk=4, beam=8, method=m)
+            for f in ("src", "dst", "weight", "valid"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a, f)), np.asarray(getattr(b, f)))
+            ma = materialize(ctx0, k=4, method=m)
+            mb = materialize(ctxm, k=4, method=m)
+            for f in ("src", "dst", "weight", "valid"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ma, f)), np.asarray(getattr(mb, f)))
+        print("SHARDED-SMOKE-OK", shard)
+""")
+
+
+def test_sharded_smoke_8_virtual_devices():
+    """Always-on guard (the in-process suite above skips on a 1-device
+    host): a subprocess forces 8 CPU devices and asserts sharded ==
+    single-device for all methods, construction and materialization."""
+    env = {**os.environ,
+           # the force flag only multiplies CPU host devices — pin the
+           # child to cpu so an accelerator host still sees 8 devices
+           "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": os.pathsep.join(
+               p for p in ("src", os.environ.get("PYTHONPATH")) if p)}
+    r = subprocess.run([sys.executable, "-c", SHARDED_SMOKE], env=env,
+                       capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.count("SHARDED-SMOKE-OK") == 2

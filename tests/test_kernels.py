@@ -38,6 +38,34 @@ def test_cooccur_gemm_counts_are_exact_integers():
     assert out.max() <= 640
 
 
+@pytest.mark.parametrize("shard", ["terms", "docs"])
+@pytest.mark.parametrize("d,vl,vr", [(70, 23, 37), (128, 64, 64)])
+def test_cooccur_counts_sharded_matches_single_device(shard, d, vl, vr):
+    """The mesh-aware wrapper (per-shard Pallas grid + gather/psum merge)
+    must equal the single-device counts bit for bit — on whatever devices
+    this host exposes (1 device degenerates to a 1-shard mesh; the
+    multidevice CI job runs it on a real 8-device split)."""
+    from repro.core.distributed import make_cooc_mesh
+    rng = np.random.default_rng(d + vl)
+    xl = jnp.asarray((rng.random((d, vl)) < 0.2), jnp.bfloat16)
+    xr = jnp.asarray((rng.random((d, vr)) < 0.2), jnp.bfloat16)
+    want = ops.cooccur_counts(xl, xr, backend="interpret")
+    mesh = make_cooc_mesh(shard=shard)
+    out = ops.cooccur_counts_sharded(xl, xr, mesh=mesh, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_cooccur_counts_sharded_rejects_two_axis_split():
+    from jax.sharding import Mesh
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices to build a 2x2 mesh")
+    mesh = Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2),
+                ("data", "model"))
+    x = jnp.ones((8, 8), jnp.bfloat16)
+    with pytest.raises(ValueError, match="one axis at a time"):
+        ops.cooccur_counts_sharded(x, x, mesh=mesh, backend="interpret")
+
+
 @given(st.integers(1, 200), st.integers(1, 50), st.integers(0, 1 << 16))
 @settings(max_examples=10, deadline=None)
 def test_cooccur_gemm_property(d, v, seed):

@@ -2,10 +2,13 @@
 eviction-equivalence guarantee (windowed index == from-scratch rebuild on
 the surviving docs, all count methods, warm and cold caches), and the
 string-level facade's time buckets / source tags."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.api import CoocIndex, parse_duration
 from repro.core import (
@@ -22,6 +25,10 @@ from repro.core import (
 from repro.serve import CoocEngine
 
 METHODS = ("gemm", "popcount", "pallas")
+
+#: example budget for the stateful ring differential (reduced in CI like
+#: the test_differential suites)
+RING_EXAMPLES = max(int(os.environ.get("COOC_DIFF_EXAMPLES", "12")) // 2, 4)
 
 
 def _random_docs(n_docs, vocab, seed, mean_len=5):
@@ -568,3 +575,280 @@ class TestFacadeStreaming:
         assert idx.live_docs == idx.n_docs == 2
         assert idx.network(["alpha"]) == {("alpha", "beta"): 1,
                                           ("alpha", "gamma"): 1}
+
+
+# ---------------------------------------------------------------------------
+# Stateful ring differential: random op interleavings vs a reference ring
+# ---------------------------------------------------------------------------
+
+
+class _RefRing:
+    """Independent pure-Python model of the windowed ring + scopes.
+
+    Mirrors the documented POLICY (oldest-first eviction by live count;
+    capacity pinned at ceil(window/32)*32, growing only; stranded blocks
+    — live before a capacity growth — evicted oldest-first when a fresh
+    target range would overlap them), not the implementation: the test
+    below diffs QueryContext against this model after every operation,
+    down to slot assignment, doc_freq, packed bits, and scope bitmaps.
+    """
+
+    def __init__(self, vocab):
+        self.vocab = vocab
+        self.window = None
+        self.cap = 0
+        self.tail = 0
+        self.blocks = []          # (slots, docs) pairs, oldest first
+        self.stranded = 0
+        self.scopes = {}
+        self.evicted = 0
+
+    @property
+    def live(self):
+        return sum(len(s) for s, _ in self.blocks)
+
+    def _pop_oldest(self):
+        slots, _ = self.blocks.pop(0)
+        self.stranded = max(0, self.stranded - 1)
+        for s in self.scopes.values():
+            s.difference_update(slots)
+        self.evicted += len(slots)
+
+    def _evict_for(self, n):
+        while self.blocks and self.live + n > self.window:
+            self._pop_oldest()
+
+    def set_window(self, w):
+        need = ((w + 31) // 32) * 32
+        if need > self.cap:
+            self.cap = need
+            if self.blocks:
+                self.stranded = len(self.blocks)
+        self.window = w
+        self._evict_for(0)
+
+    def retire_oldest(self):
+        if self.blocks:
+            self._pop_oldest()
+
+    def ingest(self, docs, scope=None):
+        n = len(docs)
+        self._evict_for(n)
+        slots = [(self.tail + i) % self.cap for i in range(n)]
+        while self.stranded and any(
+                set(s) & set(slots) for s, _ in self.blocks[:self.stranded]):
+            self._pop_oldest()
+        self.tail = (self.tail + n) % self.cap
+        if n:
+            self.blocks.append((slots, docs))
+            if scope is not None:
+                self.scopes.setdefault(scope, set()).update(slots)
+
+    def tag(self, name, slots):
+        self.scopes.setdefault(name, set()).update(slots)
+
+    def placed_docs(self):
+        """Live docs laid out at their slot positions (empty elsewhere)."""
+        placed = [[] for _ in range(self.cap)]
+        for slots, docs in self.blocks:
+            for s, d in zip(slots, docs):
+                placed[s] = d
+        return placed
+
+
+@pytest.mark.slow
+class TestRingStateMachine:
+    """Hypothesis-driven stateful differential for the windowed ring: the
+    `_stranded`-block sweep in QueryContext.ingest only sees its steady
+    state in the scenario tests above — here random interleavings of
+    ingest / set_window (grow AND shrink, across word boundaries) /
+    retire_oldest_block / scope tagging must track the reference ring
+    exactly: slot layout, packed bits, doc_freq, scope bitmaps, eviction
+    totals, and query results."""
+
+    def _check(self, ctx, ref):
+        assert ctx.window == ref.window
+        assert ctx.index.capacity == ref.cap
+        assert ctx.live_docs == ref.live
+        assert ctx.evicted_docs_total == ref.evicted
+        assert int(ctx._ring_tail) == ref.tail
+        want = (np.concatenate([np.asarray(s, np.int64)
+                                for s, _ in ref.blocks])
+                if ref.blocks else np.zeros(0, np.int64))
+        np.testing.assert_array_equal(ctx.live_slots(), want)
+        rebuilt = QueryContext.from_docs(ref.placed_docs(), ref.vocab,
+                                         capacity=ref.cap)
+        np.testing.assert_array_equal(np.asarray(ctx.index.packed),
+                                      np.asarray(rebuilt.index.packed))
+        np.testing.assert_array_equal(np.asarray(ctx.index.doc_freq),
+                                      np.asarray(rebuilt.index.doc_freq))
+        assert set(ctx.scope_names()) == set(ref.scopes)
+        for name, slots in ref.scopes.items():
+            np.testing.assert_array_equal(
+                np.asarray(ctx.scope(name)),
+                slots_bitmap(sorted(slots), ctx.index.n_words),
+                err_msg=f"scope {name}")
+        return rebuilt
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=RING_EXAMPLES, deadline=None)
+    def test_random_interleavings_track_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        vocab = int(rng.integers(4, 17))
+        w0 = int(rng.integers(8, 41))
+        ctx = QueryContext.from_docs([], vocab, window=w0)
+        ref = _RefRing(vocab)
+        ref.set_window(w0)
+        self._check(ctx, ref)
+        for step in range(8):
+            op = int(rng.integers(0, 6))
+            if op <= 1 or not ref.blocks:          # ingest (biased)
+                n = int(rng.integers(1, min(ref.window, 6) + 1))
+                docs = [rng.integers(0, vocab,
+                                     int(rng.integers(1, 5))).tolist()
+                        for _ in range(n)]
+                scope = [None, "a", "b"][int(rng.integers(0, 3))]
+                ctx.ingest_docs(docs, max_len=8, scope=scope)
+                ref.ingest(docs, scope=scope)
+            elif op == 2:                          # manual oldest eviction
+                ctx.retire_oldest_block()
+                ref.retire_oldest()
+            elif op == 3:                          # grow (may cross a word
+                w = ref.window + int(rng.integers(1, 65))   # boundary ->
+                ctx.set_window(w)                  # capacity pad + stranding
+                ref.set_window(w)
+            elif op == 4:                          # shrink (evicts to fit)
+                w = max(1, ref.window - int(rng.integers(1, 21)))
+                ctx.set_window(w)
+                ref.set_window(w)
+            else:                                  # tag live slots
+                live = [s for blk, _ in ref.blocks for s in blk]
+                if live:
+                    k = int(rng.integers(1, len(live) + 1))
+                    pick = sorted(rng.choice(live, size=k, replace=False)
+                                  .tolist())
+                    ctx.tag_scope("c", pick)
+                    ref.tag("c", pick)
+            rebuilt = self._check(ctx, ref)
+            seed_t = int(np.argmax(np.asarray(rebuilt.index.doc_freq)))
+            spec = QuerySpec(seeds=(seed_t,), depth=2, topk=4, beam=8,
+                             method="popcount")
+            assert (construct(ctx, spec).edges()
+                    == construct(rebuilt, spec).edges()), f"step {step}"
+        # final: every count method answers like the rebuild, bit-exact,
+        # and scoped queries see exactly the reference's scope membership
+        rebuilt = self._check(ctx, ref)
+        seed_t = int(np.argmax(np.asarray(rebuilt.index.doc_freq)))
+        for m in METHODS:
+            _assert_identical_networks(ctx, rebuilt, seed_t, method=m)
+        for name, slots in ref.scopes.items():
+            rebuilt.define_scope(name, sorted(slots))
+            spec = QuerySpec(seeds=(seed_t,), depth=2, topk=4, beam=8,
+                             method="popcount", scope=name)
+            assert (construct(ctx, spec).edges()
+                    == construct(rebuilt, spec).edges()), name
+
+
+# ---------------------------------------------------------------------------
+# shrink_vocab x window mode x live scopes
+# ---------------------------------------------------------------------------
+
+
+class TestShrinkVocabRegressions:
+    def test_grow_shrink_roundtrip_preserves_results_all_methods(self):
+        """grow_vocab -> shrink_vocab round-trip: queries and the
+        materialized network are BIT-identical to the original index for
+        every count method (the appended all-zero columns leave no
+        trace)."""
+        from repro.core import materialize
+        docs = _random_docs(30, 20, 11)
+        ctx = QueryContext.from_docs(docs, 20)
+        seed = int(np.argmax(np.asarray(ctx.index.doc_freq)))
+        before = {m: construct(ctx, QuerySpec(seeds=(seed,), depth=2, topk=4,
+                                              beam=8, method=m)).network
+                  for m in METHODS}
+        mat_before = {m: materialize(ctx, k=4, method=m, use_cache=False)
+                      for m in METHODS}
+        v0 = ctx.vocab_size
+        ctx.grow_vocab(33)
+        assert ctx.vocab_size == 40            # doubles from 20
+        ctx.shrink_vocab(v0)
+        assert ctx.vocab_size == v0
+        for m in METHODS:
+            after = construct(ctx, QuerySpec(seeds=(seed,), depth=2, topk=4,
+                                             beam=8, method=m)).network
+            mat_after = materialize(ctx, k=4, method=m, use_cache=False)
+            for f in ("src", "dst", "weight", "valid"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(before[m], f)),
+                    np.asarray(getattr(after, f)), err_msg=f"{m}/{f}")
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(mat_before[m], f)),
+                    np.asarray(getattr(mat_after, f)), err_msg=f"mat/{m}/{f}")
+
+    def test_shrink_refuses_columns_with_postings(self):
+        ctx = QueryContext.from_docs([[0, 1]], 4, window=8)
+        ctx.grow_vocab(6)                      # -> 8 columns
+        ctx.ingest_docs([[5]], max_len=2)      # postings in a grown column
+        with pytest.raises(ValueError, match="hold postings"):
+            ctx.shrink_vocab(4)
+        ctx.shrink_vocab(6)                    # columns 6..7 are clean
+
+    def test_grow_shrink_in_windowed_scoped_context(self):
+        """shrink_vocab on a live windowed context: scopes, the ring, and
+        subsequent eviction all keep working; queries match a rebuild."""
+        ctx = QueryContext.from_docs([], 12, window=16)
+        b1 = _random_docs(8, 12, 21)
+        b2 = _random_docs(8, 12, 22)
+        ctx.ingest_docs(b1, max_len=32, scope="a")
+        ctx.ingest_docs(b2, max_len=32, scope="a")
+        v0 = ctx.vocab_size
+        ctx.grow_vocab(20)                     # -> 24
+        assert ctx.vocab_size == 24
+        ctx.shrink_vocab(v0)
+        ref = QueryContext.from_docs(b1 + b2, 12)
+        seed = int(np.argmax(np.asarray(ref.index.doc_freq)))
+        for m in METHODS:
+            _assert_identical_networks(ctx, ref, seed, method=m)
+        # scope survived the round-trip and still gates queries
+        spec = QuerySpec(seeds=(seed,), depth=2, topk=4, beam=8,
+                         method="popcount", scope="a")
+        assert construct(ctx, spec).edges() == construct(ref, QuerySpec(
+            seeds=(seed,), depth=2, topk=4, beam=8,
+            method="popcount")).edges()
+        # the ring still evicts correctly after the shrink
+        b3 = _random_docs(8, 12, 23)
+        ctx.ingest_docs(b3, max_len=32, scope="a")
+        assert ctx.live_docs == 16             # b1 evicted
+        ref2 = QueryContext.from_docs(b2 + b3, 12)
+        np.testing.assert_array_equal(np.asarray(ctx.index.doc_freq),
+                                      np.asarray(ref2.index.doc_freq))
+
+    def test_rollback_after_failed_ingest_windowed_scoped(self, monkeypatch):
+        """Regression (untested path): a failed ingest into a WINDOWED,
+        SCOPED facade index must roll back the lexicon AND the grown term
+        axis — no phantom terms, no phantom columns, scopes and ring
+        intact, and the index keeps serving and evicting afterwards."""
+        idx = CoocIndex(window=10, depth=1, topk=8, beam=8,
+                        vocab_capacity=2)
+        idx.add_documents(["alpha beta", "beta gamma"], source="news")
+        before_net = idx.network(["beta"], scope="news")
+        n_terms0, v0 = idx.n_terms, idx.ctx.vocab_size
+        epoch0 = idx.ctx.epoch
+
+        def boom(self, *a, **k):
+            raise RuntimeError("injected ingest failure")
+        monkeypatch.setattr(QueryContext, "ingest", boom)
+        with pytest.raises(RuntimeError, match="injected"):
+            # delta/epsilon force a grow_vocab BEFORE the ingest explodes
+            idx.add_documents(["delta epsilon"], source="news")
+        monkeypatch.undo()
+        assert idx.n_terms == n_terms0
+        assert idx.ctx.vocab_size == v0        # grown columns rolled back
+        assert "delta" not in idx and "epsilon" not in idx
+        assert idx.ctx.epoch >= epoch0         # rollback may bump, never hides
+        assert idx.network(["beta"], scope="news") == before_net
+        # the ring still ingests, tags, and evicts after the rollback
+        idx.add_documents(["beta eta"] * 9, source="news")
+        assert idx.live_docs <= 10
+        assert idx.network(["beta"], scope="news")[("beta", "eta")] == 9
