@@ -5,7 +5,8 @@ jitted ``bfs_construct_batch`` (CoocEngine) beats one-query-at-a-time
 dispatch — the accelerator amortises the per-call overhead and the frontier
 expansion becomes one big batched pass (Billerbeck et al., PAPERS.md).
 
-For each method (gemm / popcount / pallas) and each Q in {1, 8, 32, 128}:
+For each method (gemm / popcount / pallas / fused) and each Q in
+{1, 8, 32, 128}:
 submit ``n_queries`` hot-term queries, drain through fixed (Q, beam) seed
 batches, and report end-to-end queries/sec (steady state — compile excluded
 by a warmup drain).  The shared QueryContext means the gemm incidence is
@@ -27,7 +28,7 @@ from repro.serve import CoocEngine
 from benchmarks.common import section, write_csv
 
 Q_SWEEP = (1, 8, 32, 128)
-METHODS = ("gemm", "popcount", "pallas")
+METHODS = ("gemm", "popcount", "pallas", "fused")
 
 
 def _bench_one(ctx: QueryContext, seeds: np.ndarray, *, method: str, q: int,
@@ -100,12 +101,24 @@ def main(argv: List[str] | None = None) -> List[Dict]:
     out = []
     for method in args.methods:
         by_q = {r["q_batch"]: r for r in rows if r["method"] == method}
+        if 32 in by_q:
+            out.append({"name": f"engine_qps_q32_{method}",
+                        "value": by_q[32]["qps"]})
         if 1 in by_q and 32 in by_q:
             gain = by_q[32]["qps"] / by_q[1]["qps"]
             verdict = "OK" if gain > 1.0 else "MISSED"
             print(f"{method}: Q=32 vs Q=1 throughput x{gain:.2f}  [{verdict}]")
             out.append({"name": f"engine_qps_gain_q32_{method}",
                         "value": gain})
+    # acceptance (fused tentpole): the fused level step must not lose to
+    # the unfused popcount chain it replaces
+    by_m = {m: r["qps"] for m in args.methods
+            for r in rows if r["method"] == m and r["q_batch"] == 32}
+    if "fused" in by_m and "popcount" in by_m:
+        ratio = by_m["fused"] / by_m["popcount"]
+        verdict = "OK" if ratio >= 1.0 else "MISSED"
+        print(f"fused vs popcount @ Q=32: x{ratio:.2f}  [{verdict}]")
+        out.append({"name": "engine_fused_vs_popcount_q32", "value": ratio})
     return out
 
 

@@ -41,7 +41,9 @@ def _parse(argv):
     ap.add_argument("--topk", type=int, default=8)
     ap.add_argument("--beam", type=int, default=16)
     ap.add_argument("--k", type=int, default=8)
-    ap.add_argument("--methods", default="gemm,popcount,pallas")
+    ap.add_argument("--methods", default="gemm,popcount,pallas,fused")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the (V, W) crossover sweep")
     ap.add_argument("--force-devices", type=int, default=8,
                     help="host device count to force when respawning on a "
                          "single-device machine")
@@ -154,6 +156,53 @@ def main(argv: List[str] | None = None) -> List[Dict]:
             out.append({"name": f"sharded_mat_rows_per_s_{method}_{label}",
                         "value": mat_rows[label]})
         print(f"{'':>9}  results bit-exact across layouts  [ok]")
+
+    # --- (V, W) crossover sweep: where does the mesh start winning? ---
+    # Materialization under the "rows" strategy folds the whole row sweep
+    # into ONE launch (per-device lax.map over contiguous row blocks); as
+    # V grows and W (packed doc words) shrinks, the single-device path's
+    # per-block dispatch loop dominates the roofline and the n-device
+    # layout overtakes one device even when all forced devices share a
+    # core.  row_tile=32 keeps the per-block (bm, V) transient small —
+    # the dispatch-dominated regime the strategy exists for.
+    if not args.no_sweep:
+        sweep = [(args.vocab, args.n_docs)]
+        for mult in (2, 4, 8):
+            sweep.append((args.vocab * mult,
+                          max(128, args.n_docs // (4 * mult))))
+        xover = None
+        for v_s, d_s in sweep:
+            docs_s = synthetic_csl(d_s, v_s, seed=1)
+            per = {}
+            for label, ctx in (
+                    ("1dev", QueryContext.from_docs(docs_s, v_s)),
+                    (f"{n_dev}dev",
+                     QueryContext.from_docs(docs_s, v_s, mesh=mesh))):
+                w_words = int(ctx.index.n_words)
+                best = 0.0
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    net = materialize(ctx, k=args.k, method="popcount",
+                                      use_cache=False, row_tile=32)
+                    jax.block_until_ready(net.weight)
+                    best = max(best, v_s / (time.perf_counter() - t0))
+                per[label] = best
+                out.append({"name": f"sharded_xover_mat_rows_per_s_V{v_s}"
+                                    f"_W{w_words}_{label}", "value": best})
+            won = per[f"{n_dev}dev"] > per["1dev"]
+            print(f"xover V={v_s:>5} W={w_words:>4}: "
+                  f"1dev {per['1dev']:9,.1f} rows/s   "
+                  f"{n_dev}dev {per[f'{n_dev}dev']:9,.1f} rows/s  "
+                  f"[{f'{n_dev}dev WINS' if won else '1dev wins'}]")
+            if won and xover is None:
+                xover = (v_s, w_words)
+        out.append({"name": "sharded_crossover_found",
+                    "value": 1 if xover else 0})
+        if xover:
+            out.append({"name": "sharded_crossover_vocab",
+                        "value": xover[0]})
+            out.append({"name": "sharded_crossover_words",
+                        "value": xover[1]})
 
     path = write_csv("sharded", rows)
     print(f"CSV -> {path}")

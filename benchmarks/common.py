@@ -61,5 +61,63 @@ def write_bench_json(name: str, records: List[Dict], *,
     return os.path.normpath(path)
 
 
+def load_bench_baselines(path: str) -> Dict[str, float]:
+    """``{record name: value}`` from a committed baseline — either one
+    ``BENCH_<name>.json`` file or a directory of them.  Load baselines
+    BEFORE running benches: a fresh ``--json`` run overwrites the very
+    files under results/bench/ it would be compared against."""
+    files = ([os.path.join(path, fn) for fn in sorted(os.listdir(path))
+              if fn.startswith("BENCH_") and fn.endswith(".json")]
+             if os.path.isdir(path) else [path])
+    base: Dict[str, float] = {}
+    for fn in files:
+        with open(fn) as f:
+            doc = json.load(f)
+        for r in doc.get("records", []):
+            base[r["name"]] = r["value"]
+    return base
+
+
+def metric_direction(name: str):
+    """"higher" / "lower" / None (not gateable) for a record name —
+    throughput-like metrics regress by dropping, latency-like by rising;
+    anything unrecognized is reported but never gates."""
+    n = name.lower()
+    if n.endswith("_ms") or "latency" in n or "_p50" in n or "_p99" in n \
+            or "wall_s" in n:
+        return "lower"
+    if any(t in n for t in ("qps", "per_s", "gain", "speedup", "throughput",
+                            "rows_per_s")):
+        return "higher"
+    return None
+
+
+def compare_records(baseline: Dict[str, float], records: List[Dict], *,
+                    threshold: float = 0.2) -> Tuple[List[str], List[str]]:
+    """(report lines, regressed metric names): each current record vs the
+    baseline, flagging directional moves worse than ``threshold``
+    (relative).  Metrics with no recognized direction, no baseline, or a
+    non-positive baseline are shown but never regress."""
+    lines, regressed = [], []
+    for r in records:
+        name, new = r["name"], r["value"]
+        old = baseline.get(name)
+        if old is None:
+            lines.append(f"  {name}: {new:.6g}  (no baseline)")
+            continue
+        direction = metric_direction(name)
+        if direction is None or not isinstance(old, (int, float)) or old <= 0:
+            lines.append(f"  {name}: {old:.6g} -> {new:.6g}  (not gated)")
+            continue
+        rel = (new - old) / old
+        worse = -rel if direction == "higher" else rel
+        flag = "REGRESSED" if worse > threshold else "ok"
+        lines.append(f"  {name}: {old:.6g} -> {new:.6g}  "
+                     f"({rel:+.1%}, {direction} is better)  [{flag}]")
+        if worse > threshold:
+            regressed.append(name)
+    return lines, regressed
+
+
 def section(title: str) -> None:
     print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")

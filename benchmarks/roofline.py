@@ -1,4 +1,4 @@
-"""Roofline table generator (deliverable (g)).
+"""Roofline table generator (deliverable (g)) + per-method ceiling model.
 
 Reads the dry-run JSONs under results/dryrun/ and prints/writes the per
 (arch x shape x mesh) roofline table: the three terms, the dominant
@@ -6,6 +6,21 @@ bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.  The
 single-pod *unroll*-mode artifacts are the costed table; the scan-mode
 artifacts carry the per-device memory figures (TPU-realistic buffer
 reuse) and the multi-pod pass/fail.
+
+The **ceiling model** (:func:`method_ceilings` / :func:`ceiling_table`)
+is the analytical side of the fused-kernel PR: for every count method it
+models the bytes a query must move and the ops it must execute on the
+benched corpus shape, then calibrates the machine's DEMONSTRATED rate on
+each axis (bytes/s; popcount words/s; MACs/s) from the best achieved
+``engine_qps_q32_*`` record in ``results/bench/
+BENCH_engine_throughput.json``.  Each method's *ceiling q/s* is the
+min-axis bound under those demonstrated rates, and
+``roofline_ceiling_frac_<method>`` = achieved / ceiling is the gateable
+fraction.  The model is why fusion wins on paper before it wins in the
+bench: the unfused popcount chain writes + re-reads the (B, V, W) AND
+intermediate, the Pallas/XLA postings kernels spill only (B, V) counts,
+and the fused level step spills only the (B, k) top-k — same op count,
+monotonically fewer bytes.
 """
 from __future__ import annotations
 
@@ -15,6 +30,112 @@ import os
 from typing import Dict, List, Optional
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+#: per-value byte widths of the operands the model moves
+_I32, _BF16 = 4, 2
+
+#: which machine op-rate axis a method's compute runs on — popcount word
+#: ops and bf16 MACs are different silicon paths and must not calibrate
+#: each other
+_OP_FAMILY = {"popcount": "pop", "pallas": "pop", "fused": "pop",
+              "gemm": "mac"}
+
+
+def method_ceilings(*, v: int, w: int, depth: int, beam: int,
+                    k: int) -> Dict[str, Dict[str, float]]:
+    """Per-method modeled work PER QUERY on a (V=v, W=w words) corpus:
+    ``{"ops": compute ops, "bytes": bytes moved}``.
+
+    A query expands ``depth`` levels of a ``beam``-row frontier, so it
+    computes ``rows = depth * beam`` count rows.  Every popcount-family
+    method executes the same ``rows * V * W`` word-ops (AND + popcount per
+    packed word); they differ ONLY in traffic:
+
+    * ``popcount`` — the unfused jnp chain materializes the (rows, V, W)
+      AND intermediate (written then re-read by the reduction) plus the
+      (rows, V) counts;
+    * ``pallas`` — the postings kernel keeps tiles resident and spills
+      just the (rows, V) counts (mask + top-k run outside);
+    * ``fused`` — the level-step kernel also folds masking + top-k, so
+      only the (rows, k) pair leaves the kernel;
+    * ``gemm`` — 2·rows·V·D bf16 MACs (D = 32·W doc slots) over the dense
+      incidence, the FLOP-heavy / traffic-light extreme.
+    """
+    d = 32 * w
+    rows = depth * beam
+    pop_ops = rows * v * w
+    operand_bytes = _I32 * (rows * w + v * w)       # masks + packed postings
+    return {
+        "popcount": {"ops": pop_ops,
+                     "bytes": operand_bytes
+                     + _I32 * (2 * rows * v * w + rows * v)},
+        "pallas": {"ops": pop_ops,
+                   "bytes": operand_bytes + _I32 * rows * v},
+        "fused": {"ops": pop_ops,
+                  "bytes": operand_bytes + 2 * _I32 * rows * k},
+        "gemm": {"ops": 2.0 * rows * v * d,
+                 "bytes": _BF16 * (rows * d + d * v) + _I32 * rows * v},
+    }
+
+
+def ceiling_table(bench_dir: str = BENCH_DIR):
+    """(table string or None, records) — the per-method ceiling model
+    against the committed/most recent BENCH_engine_throughput.json.
+
+    Machine rates are *demonstrated* ceilings: the best achieved
+    bytes/s (resp. op family ops/s) over the measured methods — so the
+    fractions gate the perf TRAJECTORY (did a change move a method away
+    from the best this machine has shown?) rather than vendor peaks.
+    """
+    path = os.path.join(bench_dir, "BENCH_engine_throughput.json")
+    if not os.path.exists(path):
+        return None, []
+    with open(path) as f:
+        bj = json.load(f)
+    recs = {r["name"]: r["value"] for r in bj.get("records", [])}
+    # shape the bench ran (benchmarks.bench_engine_throughput defaults;
+    # run.py --quick overrides n_docs, capacity adds 1024 slack slots)
+    n_docs = 1024 if bj.get("quick") else 4096
+    v, w, depth, beam, k = 512, (n_docs + 1024) // 32, 2, 8, 8
+    model = method_ceilings(v=v, w=w, depth=depth, beam=beam, k=k)
+    achieved = {m: recs[f"engine_qps_q32_{m}"] for m in model
+                if recs.get(f"engine_qps_q32_{m}")}
+    if not achieved:
+        return None, []
+    mach_bytes = max(q * model[m]["bytes"] for m, q in achieved.items())
+    mach_ops = {}
+    for m, q in achieved.items():
+        fam = _OP_FAMILY[m]
+        mach_ops[fam] = max(mach_ops.get(fam, 0.0), q * model[m]["ops"])
+    out = []
+    lines = [f"| method | Mops/q | MiB/q | bound | ceiling q/s | "
+             f"achieved q/s | frac |",
+             "|---|---|---|---|---|---|---|"]
+    for m, md in model.items():
+        fam = _OP_FAMILY[m]
+        if fam not in mach_ops:
+            continue
+        t_ops = md["ops"] / mach_ops[fam]
+        t_bytes = md["bytes"] / mach_bytes
+        ceil_qps = 1.0 / max(t_ops, t_bytes)
+        bound = "compute" if t_ops >= t_bytes else "memory"
+        out.append({"name": f"roofline_ceiling_qps_{m}", "value": ceil_qps})
+        got = achieved.get(m)
+        frac = got / ceil_qps if got else float("nan")
+        if got:
+            out.append({"name": f"roofline_ceiling_frac_{m}", "value": frac})
+        lines.append(f"| {m} | {md['ops']/1e6:8.1f} | "
+                     f"{md['bytes']/2**20:7.2f} | {bound} | "
+                     f"{ceil_qps:10.1f} | "
+                     f"{got:10.1f} | {frac:5.3f} |" if got else
+                     f"| {m} | {md['ops']/1e6:8.1f} | "
+                     f"{md['bytes']/2**20:7.2f} | {bound} | "
+                     f"{ceil_qps:10.1f} | {'—':>10} | {'—':>5} |")
+    hdr = (f"corpus V={v}, W={w} words (D={32*w} slots), depth={depth}, "
+           f"beam={beam}, k={k}"
+           f"{'  [quick profile]' if bj.get('quick') else ''}")
+    return hdr + "\n" + "\n".join(lines), out
 
 
 def load(results_dir: str = RESULTS_DIR) -> List[Dict]:
@@ -64,25 +185,36 @@ def pick_hillclimb_cells(recs: List[Dict]) -> List[Dict]:
 
 
 def main() -> List[Dict]:
+    out = []
     recs = load()
     if not recs:
         print("no dry-run artifacts under results/dryrun — run "
               "`python -m repro.launch.dryrun --all` first")
-        return []
-    n_ok = {}
-    for r in recs:
-        n_ok.setdefault((r["mesh"], r.get("mode")), 0)
-        n_ok[(r["mesh"], r.get("mode"))] += r["status"] == "ok"
-    print("dry-run artifacts:", {f"{m}/{md}": n for (m, md), n in
-                                 sorted(n_ok.items())})
-    print("\n== Roofline (single-pod 16x16, unroll-mode costs, "
-          "scan-mode memory) ==\n")
-    print(table(recs))
-    out = []
-    for r in recs:
-        if r["mesh"] == "16x16" and r.get("mode") == "unroll":
-            out.append({"name": f"roofline_{r['arch']}_{r['shape']}",
-                        "value": r["roofline"]["roofline_fraction"]})
+    else:
+        n_ok = {}
+        for r in recs:
+            n_ok.setdefault((r["mesh"], r.get("mode")), 0)
+            n_ok[(r["mesh"], r.get("mode"))] += r["status"] == "ok"
+        print("dry-run artifacts:", {f"{m}/{md}": n for (m, md), n in
+                                     sorted(n_ok.items())})
+        print("\n== Roofline (single-pod 16x16, unroll-mode costs, "
+              "scan-mode memory) ==\n")
+        print(table(recs))
+        for r in recs:
+            if r["mesh"] == "16x16" and r.get("mode") == "unroll":
+                out.append({"name": f"roofline_{r['arch']}_{r['shape']}",
+                            "value": r["roofline"]["roofline_fraction"]})
+
+    ceil_tbl, ceil_recs = ceiling_table()
+    if ceil_tbl is None:
+        print("\nno results/bench/BENCH_engine_throughput.json — run "
+              "`python -m benchmarks.run --json --only engine_throughput` "
+              "to feed the per-method ceiling model")
+    else:
+        print("\n== Per-method ceiling model (demonstrated-rate roofline, "
+              "from BENCH_engine_throughput.json) ==\n")
+        print(ceil_tbl)
+        out.extend(ceil_recs)
     return out
 
 

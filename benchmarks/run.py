@@ -7,6 +7,13 @@ results/bench/).  ``--json`` additionally writes one machine-readable
 ``BENCH_<name>.json`` per executed bench (throughput records + run
 metadata) under results/bench/ — the artifacts CI archives so the perf
 trajectory is queryable across runs.
+
+``--compare <baseline>`` (a committed ``BENCH_<name>.json`` file or a
+directory of them) diffs every produced record against the baseline and
+exits nonzero when a throughput-like metric drops (or a latency-like
+metric rises) by more than 20% — the CI perf gate.  Baselines are loaded
+BEFORE any bench runs, since ``--json`` overwrites results/bench/ in
+place.
 """
 from __future__ import annotations
 
@@ -22,9 +29,20 @@ def main() -> int:
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<name>.json records per bench")
     ap.add_argument("--only", default=None,
-                    choices=("fig7", "fig5", "scaling", "engine", "streaming",
-                             "full_network", "sharded", "roofline"))
+                    choices=("fig7", "fig5", "scaling", "engine_throughput",
+                             "streaming", "full_network", "sharded",
+                             "roofline"))
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="BENCH_<name>.json file or directory of them; "
+                         "exit 1 on any >20%% metric regression")
     args = ap.parse_args()
+
+    baseline = None
+    if args.compare:
+        from benchmarks.common import load_bench_baselines
+        # load the committed numbers FIRST — --json rewrites results/bench/
+        baseline = load_bench_baselines(args.compare)
+        print(f"loaded {len(baseline)} baseline metrics from {args.compare}")
 
     results = []
     failures = []
@@ -68,7 +86,8 @@ def main() -> int:
     from benchmarks import bench_engine_throughput
     engine_argv = (["--n-docs", "1024", "--n-queries", "64"]
                    if args.quick else [])
-    run_bench("engine", lambda: bench_engine_throughput.main(engine_argv))
+    run_bench("engine_throughput",
+              lambda: bench_engine_throughput.main(engine_argv))
 
     from benchmarks import bench_streaming_window
     streaming_argv = (["--window", "512", "--block", "64", "--rounds", "12"]
@@ -101,10 +120,21 @@ def main() -> int:
         v = r["value"]
         print(f"{r['name']},{v:.6g}" if isinstance(v, float) else
               f"{r['name']},{v}")
+
+    regressed = []
+    if baseline is not None:
+        from benchmarks.common import compare_records
+        lines, regressed = compare_records(baseline, results)
+        print("\n== compare vs baseline (gate: >20% directional move) ==")
+        for ln in lines:
+            print(ln)
+        print(f"{len(regressed)} regressed metric(s)"
+              + (f": {regressed}" if regressed else ""))
+
     if failures:
         print("FAILED benches:", failures)
         return 1
-    return 0
+    return 1 if regressed else 0
 
 
 if __name__ == "__main__":

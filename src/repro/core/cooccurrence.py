@@ -282,10 +282,18 @@ def chunked_top_k(x: jax.Array, k: int, n_chunks: int = 16):
     slot convention.  The former behavior — falling through to
     ``jax.lax.top_k(x, k)``, which REQUIRES k <= V — crashed every caller
     that didn't replicate ``_expand_level``'s private guard.
+
+    Single-pass threshold: the chunked form only pays off when stage 2's
+    candidate set is SMALLER than the input — ``n_chunks * k < V``.  At
+    small V (or large k) the merge degenerates to a full extra
+    ``lax.top_k`` pass over >= V candidates, pure overhead on top of the
+    n_chunks stage-1 passes; those cases take the direct single-pass path
+    (identical values and tie order — both are exact lax.top_k order).
     """
     b, v = x.shape
     k_eff = min(k, v)
-    if v % n_chunks != 0 or v // n_chunks < k_eff:
+    if (v % n_chunks != 0 or v // n_chunks < k_eff
+            or n_chunks * k_eff >= v):
         w, gi = jax.lax.top_k(x, k_eff)
     else:
         c = v // n_chunks
@@ -355,35 +363,71 @@ def _resolve_operands(index, method: str, x_dense: Optional[jax.Array],
         for name in needs:
             if name not in ops:
                 ops[name] = getattr(ctx, name)()
-    if "x_dense" in needs and "x_dense" not in ops:
-        # Legacy one-shot path (no context): unpack ONCE (outside the level
-        # loop); padding rows beyond n_docs are all-zero bits so they can
-        # never contribute to counts.  Serving goes through QueryContext,
-        # which unpacks once per ingest EPOCH and shards at build time.
+    # Legacy one-shot builders (no context): each needed artifact is built
+    # ONCE (outside the level loop).  x_dense padding rows beyond n_docs
+    # are all-zero bits so they can never contribute to counts;
+    # packed_t_pad matches QueryContext.packed_t_pad's (V->8, W->128)
+    # layout.  Serving goes through QueryContext, which builds once per
+    # ingest EPOCH and shards at build time.
+    def _x_dense_oneshot():
         from repro.launch.sharding import constrain
-        ops["x_dense"] = constrain(incidence_dense(index, jnp.bfloat16),
-                                   ("docs", "terms"))
+        return constrain(incidence_dense(index, jnp.bfloat16),
+                         ("docs", "terms"))
+
+    def _packed_t_pad_oneshot():
+        p = jnp.transpose(index.packed)
+        return jnp.pad(p, ((0, (-p.shape[0]) % 8), (0, (-p.shape[1]) % 128)))
+
+    builders = {"x_dense": _x_dense_oneshot,
+                "packed_t": lambda: jnp.transpose(index.packed),
+                "packed_t_pad": _packed_t_pad_oneshot}
+    for name in needs:
+        if name not in ops:
+            ops[name] = builders[name]()
     return index, ops, mesh
 
 
 def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
                   method: str, operands: Mapping[str, jax.Array], mesh=None):
-    """One BFS level: batched frontier expansion + beam re-selection."""
+    """One BFS level: batched frontier expansion + beam re-selection.
+
+    The expansion-to-top-k segment dispatches three ways, all bit-exact
+    (values AND tie order) against each other:
+
+    * mesh          — :func:`distributed.sharded_level_topk`: per-shard
+      counts + per-shard masking + LOCAL top-k, merged by a candidate-only
+      gather (n·k candidates cross the interconnect, never (B, V) counts);
+    * ``level_fn``  — the method's fused level step (one kernel launch:
+      method "fused");
+    * default       — the unfused chain: registry counts, the three masks,
+      ``chunked_top_k``.
+
+    k can exceed V (tiny vocab, generous spec): every path clamps to V
+    and pads the missing slots back as invalid (weight -1 / index 0) —
+    the (depth, B, topk) edge-record shape contract is independent of the
+    vocabulary.
+    """
+    from repro.core.query import get_count_method
     b = state.masks.shape[0]
 
-    counts = _frontier_counts(index, state.masks, method, operands,
-                              mesh)  # (B, V) int32
-    # mask self-pairs, invalid rows, and (optionally) visited terms
-    counts = counts.at[jnp.arange(b), jnp.clip(state.terms, 0)].set(-1)
-    if dedup:
-        counts = jnp.where(state.visited[None, :], -1, counts)
-    counts = jnp.where(state.valid[:, None], counts, -1)
-
-    # k can exceed V (tiny vocab, generous spec): chunked_top_k clamps to
-    # V and pads the missing slots back as invalid (weight -1 / index 0)
-    # — the (depth, B, topk) edge-record shape contract is independent of
-    # the vocabulary
-    w_top, idx_top = chunked_top_k(counts, topk)                # (B, topk)
+    m = get_count_method(method)
+    if mesh is not None:
+        from repro.core.distributed import sharded_level_topk
+        w_top, idx_top = sharded_level_topk(
+            index, state.masks, state.terms, state.valid, state.visited,
+            method, operands, mesh, k=topk, dedup=dedup)
+    elif m.level_fn is not None:
+        w_top, idx_top = m.level_fn(index, state.masks, state.terms,
+                                    state.valid, state.visited, operands,
+                                    k=topk, dedup=dedup)
+    else:
+        counts = m.fn(index, state.masks, operands)             # (B, V) int32
+        # mask self-pairs, invalid rows, and (optionally) visited terms
+        counts = counts.at[jnp.arange(b), jnp.clip(state.terms, 0)].set(-1)
+        if dedup:
+            counts = jnp.where(state.visited[None, :], -1, counts)
+        counts = jnp.where(state.valid[:, None], counts, -1)
+        w_top, idx_top = chunked_top_k(counts, topk)            # (B, topk)
     edge_valid = w_top > 0
     edges = (
         jnp.broadcast_to(state.terms[:, None], (b, topk)),      # src
@@ -457,7 +501,11 @@ def bfs_construct(index, seed_terms: jax.Array, *, depth: int,
       "popcount" — bit-packed AND + popcount streamed through the VPU
                    (the paper-faithful-baseline TPU adaptation);
       "pallas"   — popcount via the tiled ``kernels.postings`` Pallas
-                   kernel (compiled on TPU, interpret mode on CPU).
+                   kernel (compiled on TPU, interpret mode on CPU);
+      "fused"    — the whole level step (popcount + masking + top-k) as
+                   ONE launch over the pre-padded transposed postings
+                   (``kernels.level_step``; compiled Pallas on TPU, the
+                   fused XLA form elsewhere) — zero per-query padding.
     All are exact (0/1 operands, fp32/int32 accumulation) and tested
     equal.
 

@@ -157,7 +157,31 @@ def _local_counts(method: str, cooc_gemm: bool, index_l: PackedIndex,
 def _needs(method: str, cooc_gemm: bool) -> Tuple[str, ...]:
     if cooc_gemm and method == "pallas":
         return ("x_dense",)
+    if method == "fused":
+        # under a mesh the fused method counts straight off the LOCAL
+        # packed shard (its fn's no-artifact fallback): the pre-padded
+        # (V->8) artifact's layout need not divide the shard count, and
+        # per-shard top-k replaces the fused kernel's merge anyway
+        return ()
     return get_count_method(method).needs
+
+
+def _tiled_all_gather(x: jax.Array, axis_name: str, *, axis: int,
+                      tile_axis: int, n_tiles: int = 2) -> jax.Array:
+    """``all_gather(axis, tiled=True)`` issued as ``n_tiles`` independent
+    collectives over slices of ``tile_axis`` (an axis OTHER than the
+    gather axis, so the concatenated result is laid out identically to
+    the monolithic gather — bit-exact).  Independent collectives give
+    XLA's scheduler the freedom to overlap transfer with the surrounding
+    compute (the pipelining hook); falls back to one gather when the tile
+    axis doesn't split."""
+    if n_tiles <= 1 or x.shape[tile_axis] % n_tiles != 0 \
+            or x.shape[tile_axis] < n_tiles:
+        return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+    parts = jnp.split(x, n_tiles, axis=tile_axis)
+    return jnp.concatenate(
+        [jax.lax.all_gather(p, axis_name, axis=axis, tiled=True)
+         for p in parts], axis=tile_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -193,7 +217,7 @@ def sharded_counts(index: PackedIndex, masks: jax.Array, method: str,
             idx_l = PackedIndex(packed_l, df_l, n_docs)
             c = _local_counts(method, cooc_gemm, idx_l, masks,
                               dict(zip(needs, xs)))
-            return jax.lax.all_gather(c, TERM_AXIS, axis=1, tiled=True)
+            return _tiled_all_gather(c, TERM_AXIS, axis=1, tile_axis=0)
 
         out = _smap(local, mesh,
                     in_specs=(P(), P(None, TERM_AXIS), P(TERM_AXIS), P(),
@@ -283,8 +307,8 @@ def sharded_block_topk(index: PackedIndex, masks: jax.Array, rows: jax.Array,
         c = jnp.where((cols[None, :] == rows[:, None])
                       | (cols >= v)[None, :], -1, c)
         w_l, i_l = jax.lax.top_k(c, k_loc)
-        w_all = jax.lax.all_gather(w_l, TERM_AXIS, axis=1, tiled=True)
-        i_all = jax.lax.all_gather(off + i_l, TERM_AXIS, axis=1, tiled=True)
+        w_all = _tiled_all_gather(w_l, TERM_AXIS, axis=1, tile_axis=0)
+        i_all = _tiled_all_gather(off + i_l, TERM_AXIS, axis=1, tile_axis=0)
         w2, sel = jax.lax.top_k(w_all, k_fin)
         return w2, jnp.take_along_axis(i_all, sel, axis=1)
 
@@ -297,3 +321,159 @@ def sharded_block_topk(index: PackedIndex, masks: jax.Array, rows: jax.Array,
         w2 = jnp.pad(w2, ((0, 0), (0, k - k_fin)), constant_values=-1)
         i2 = jnp.pad(i2, ((0, 0), (0, k - k_fin)))
     return w2, i2
+
+
+# ---------------------------------------------------------------------------
+# Sharded fused level step (bfs_construct's expansion-to-top-k under a mesh)
+# ---------------------------------------------------------------------------
+
+
+def sharded_level_topk(index: PackedIndex, masks: jax.Array,
+                       terms: jax.Array, valid: jax.Array,
+                       visited: jax.Array, method: str,
+                       operands: Mapping[str, jax.Array], mesh: Mesh, *,
+                       k: int, dedup: bool) -> Tuple[jax.Array, jax.Array]:
+    """One BFS level's (weights, ids) — both (B, k) int32 — under ``mesh``,
+    bit-identical (values AND tie order) to the single-device
+    counts -> masks -> ``chunked_top_k`` chain.
+
+    Term mesh (the overlap showcase): each device counts against its V/n
+    postings columns, applies ALL the level masks locally (self-pair,
+    visited, invalid rows — plus padding columns forced to -2, strictly
+    below every real masked count), and reduces to a LOCAL top-k.  Only
+    the ``n * k`` (weight, id) candidates cross the interconnect (tiled
+    gathers the scheduler can overlap) — the former path gathered the
+    full (B, V) count block per level and masked it replicated.  The
+    merged order is exact ``lax.top_k`` order: shards are contiguous id
+    ranges laid out shard-major in the candidate buffer, local top-k
+    emits lower-id-first on ties, and the -2 padding sentinels can never
+    displace a real candidate (>= k real columns always survive, since
+    k is clamped to V).
+
+    Doc mesh: per-shard partial counts ``psum`` to replicated exact
+    counts (this merge is irreducible — every document word contributes
+    to every count), then the single-device masked ``chunked_top_k``.
+    """
+    from repro.core.cooccurrence import chunked_top_k
+    v = index.vocab_size
+    k_eff = min(k, v)
+    tclip = jnp.clip(terms, 0).astype(jnp.int32)
+    vis = (visited if dedup else jnp.zeros_like(visited)).astype(jnp.int32)
+
+    if shard_kind(mesh) == "terms":
+        n = n_shards(mesh)
+        v_pad = _round_up(v, n)
+        v_loc = v_pad // n
+        k_loc = min(k_eff, v_loc)
+        needs = _needs(method, cooc_gemm=False)
+        packed = _pad_dim(index.packed, 1, v_pad)
+        df = _pad_dim(index.doc_freq, 0, v_pad)
+        vis_p = _pad_dim(vis, 0, v_pad)
+        extras = [_pad_dim(operands[name], _TERM_LAYOUT[name][0], v_pad)
+                  for name in needs]
+        specs = tuple(_TERM_LAYOUT[name][1] for name in needs)
+
+        def local(masks, tclip, valid, vis_l, packed_l, df_l, n_docs, *xs):
+            idx_l = PackedIndex(packed_l, df_l, n_docs)
+            c = _local_counts(method, False, idx_l, masks,
+                              dict(zip(needs, xs)))
+            off = jax.lax.axis_index(TERM_AXIS).astype(jnp.int32) * v_loc
+            cols = off + jnp.arange(v_loc, dtype=jnp.int32)
+            c = jnp.where(cols[None, :] == tclip[:, None], -1, c)
+            c = jnp.where(vis_l[None, :] > 0, -1, c)
+            c = jnp.where(valid[:, None], c, -1)
+            c = jnp.where((cols >= v)[None, :], jnp.int32(-2), c)
+            w_l, i_l = jax.lax.top_k(c, k_loc)
+            w_all = _tiled_all_gather(w_l, TERM_AXIS, axis=1, tile_axis=0)
+            i_all = _tiled_all_gather(off + i_l, TERM_AXIS, axis=1,
+                                      tile_axis=0)
+            w2, sel = jax.lax.top_k(w_all, k_eff)
+            return w2, jnp.take_along_axis(i_all, sel, axis=1)
+
+        w2, i2 = _smap(local, mesh,
+                       in_specs=(P(), P(), P(), P(TERM_AXIS),
+                                 P(None, TERM_AXIS), P(TERM_AXIS), P(),
+                                 *specs),
+                       out_specs=(P(None, None), P(None, None)))(
+            masks, tclip, valid, vis_p, packed, df, index.n_docs, *extras)
+    else:
+        counts = sharded_counts(index, masks, method, operands, mesh)
+        b = masks.shape[0]
+        counts = counts.at[jnp.arange(b), tclip].set(-1)
+        counts = jnp.where(vis[None, :] > 0, -1, counts)
+        counts = jnp.where(valid[:, None], counts, -1)
+        w2, i2 = chunked_top_k(counts, k_eff)
+
+    if k_eff < k:          # k > V (tiny vocab): pad like chunked_top_k
+        w2 = jnp.pad(w2, ((0, 0), (0, k - k_eff)), constant_values=-1)
+        i2 = jnp.pad(i2, ((0, 0), (0, k - k_eff)))
+    return w2, i2
+
+
+# ---------------------------------------------------------------------------
+# Row-sharded materialization (n row blocks per launch, one per device)
+# ---------------------------------------------------------------------------
+
+
+def sharded_row_block_topk(index: PackedIndex, packed_t: jax.Array,
+                           scope_mask: Optional[jax.Array],
+                           operands: Mapping[str, jax.Array], *, k: int,
+                           bm: int, method: str,
+                           mesh: Mesh) -> Tuple[jax.Array, jax.Array]:
+    """Materialization strategy "rows": the ENTIRE row sweep in one
+    launch — every device walks a contiguous range of row blocks against
+    the full (replicated) index and only the (rows, k) results are
+    gathered.  Returns (weights, ids), both (n_blocks * bm, k) covering
+    at least ``ceil(V / bm)`` blocks (trailing rows >= V are garbage the
+    caller slices off).
+
+    Where the column-split strategy (:func:`sharded_block_topk`) divides
+    ONE row block's columns across devices and merges candidates per
+    block — one host dispatch per row block, V/n columns per device —
+    this one turns the whole materialization into a single dispatch: the
+    host's Python loop over ``ceil(V/bm)`` blocks (and its per-call
+    dispatch overhead, the dominant term for small-W corpora — see
+    ``benchmarks.roofline``) collapses into a per-device ``lax.map``
+    over ``n_blocks/n`` blocks, peak transient still one (bm, V) count
+    block per device.  Per-block computation is the single-device
+    ``materialize._topk_row_block`` registry path verbatim (same masks,
+    same ``chunked_top_k`` tie order — bit-exact trivially), there is no
+    cross-device reduction at all, and the gather is over contiguous
+    block ranges, so the concatenation IS global row order.
+    """
+    from repro.core.cooccurrence import chunked_top_k
+    n = n_shards(mesh)
+    ax = TERM_AXIS if shard_kind(mesh) == "terms" else DOC_AXIS
+    v = index.vocab_size
+    needs = _needs(method, cooc_gemm=True)
+    n_blocks = _round_up(-(-v // bm), n)
+    starts = bm * jnp.arange(n_blocks, dtype=jnp.int32)     # (n_blocks,)
+    scope = (scope_mask if scope_mask is not None
+             else jnp.full((index.n_words,), 0xFFFFFFFF, jnp.uint32))
+    extras = [operands[name] for name in needs]
+
+    def local(starts_l, packed, df, n_docs, packed_t, scope, *xs):
+        idx = PackedIndex(packed, df, n_docs)
+
+        def block(start):
+            rows = start + jnp.arange(bm, dtype=jnp.int32)
+            masks = packed_t[jnp.clip(rows, 0, v - 1)]
+            masks = jnp.where((rows < v)[:, None], masks, jnp.uint32(0))
+            masks = masks & scope[None, :]
+            c = _local_counts(method, True, idx, masks,
+                              dict(zip(needs, xs)))
+            c = c.at[jnp.arange(bm), jnp.clip(rows, 0, v - 1)].set(-1)
+            return chunked_top_k(c, k)
+
+        w, i = jax.lax.map(block, starts_l)    # (n_blocks/n, bm, k) each
+        w = w.reshape(-1, k)
+        i = i.reshape(-1, k)
+        return (jax.lax.all_gather(w, ax, axis=0, tiled=True),
+                jax.lax.all_gather(i, ax, axis=0, tiled=True))
+
+    return _smap(local, mesh,
+                 in_specs=(P(ax), P(), P(), P(), P(), P(),
+                           *(P() for _ in needs)),
+                 out_specs=(P(None, None), P(None, None)))(
+        starts, index.packed, index.doc_freq, index.n_docs, packed_t,
+        scope, *extras)

@@ -139,6 +139,24 @@ def _topk_row_block(index: PackedIndex, packed_t: jax.Array,
     return run_w, run_i
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("k", "row_tile", "method", "mesh"))
+def _topk_row_blocks_rows(index: PackedIndex, packed_t: jax.Array,
+                          scope_mask: Optional[jax.Array],
+                          operands: Mapping[str, jax.Array], *,
+                          k: int, row_tile: int, method: str, mesh
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Row-sharded materialization: the WHOLE row sweep in one launch —
+    each device ``lax.map``s a contiguous range of row blocks against
+    the replicated index, so the host-side per-block dispatch loop (the
+    dominant term for small-W corpora; see ``benchmarks.roofline``)
+    disappears entirely.  Returns (n_blocks * row_tile, k)."""
+    from repro.core.distributed import sharded_row_block_topk
+    return sharded_row_block_topk(index, packed_t, scope_mask, operands,
+                                  k=k, bm=row_tile, method=method,
+                                  mesh=mesh)
+
+
 def _resolve_materialize_operands(index, method: str):
     """(ctx-or-None, PackedIndex, packed_t, operands) for ``method``.
 
@@ -154,9 +172,14 @@ def _resolve_materialize_operands(index, method: str):
         ctx = index
         return (ctx, ctx.index, ctx.packed_t(),
                 {name: getattr(ctx, name)() for name in needs})
+    def _packed_t_pad():
+        p = jnp.transpose(index.packed)
+        return jnp.pad(p, ((0, (-p.shape[0]) % 8), (0, (-p.shape[1]) % 128)))
+
     builders = {
         "x_dense": lambda: incidence_dense(index, jnp.bfloat16),
         "packed_t": lambda: index.packed.T,
+        "packed_t_pad": _packed_t_pad,
     }
     return (None, index, index.packed.T,
             {name: builders[name]() for name in needs})
@@ -166,7 +189,8 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
                 scope: Optional[str] = None,
                 scope_mask: Optional[jax.Array] = None,
                 row_tile: int = 128, col_tile: int = 512,
-                use_cache: bool = True, mesh=None) -> CoocNetwork:
+                use_cache: bool = True, mesh=None,
+                shard_strategy: str = "auto") -> CoocNetwork:
     """Materialize the corpus co-occurrence network, top-``k`` per term.
 
     index: a PackedIndex, or a QueryContext (cached artifacts + result
@@ -187,10 +211,16 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
     one row block's (row_tile, V) counts under a registry method.
 
     mesh: an optional query mesh (``distributed.make_cooc_mesh``;
-    defaults to the context's) — each row block's counts and top-k run
-    term- or doc-sharded across the mesh with a cross-device candidate
-    merge, bit-exact vs the single-device path (per-device transient is
-    the LOCAL shard's counts, V/n columns).
+    defaults to the context's).  shard_strategy picks how the mesh
+    divides the work, both bit-exact vs the single-device path:
+
+    * ``"rows"`` — n different row blocks per launch, one per device
+      against the replicated index; no cross-device reduction, n× fewer
+      host dispatches (the term that dominates small-W corpora);
+    * ``"cols"`` — one row block's columns split V/n per device with a
+      candidate-only top-k merge (per-device transient is the LOCAL
+      shard's counts — the memory-bound regime's strategy);
+    * ``"auto"`` (default) — ``"rows"``.
     """
     from repro.core.query_context import QueryContext
     if k < 1:
@@ -207,6 +237,11 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
             "name to a document bitmap; got a bare index")
     if mesh is None and ctx is not None:
         mesh = ctx.mesh
+    if shard_strategy not in ("auto", "rows", "cols"):
+        raise ValueError(f"shard_strategy must be 'auto', 'rows' or 'cols', "
+                         f"got {shard_strategy!r}")
+    strategy = None if mesh is None else (
+        "rows" if shard_strategy == "auto" else shard_strategy)
 
     v = (ctx.index if ctx is not None else index).vocab_size
     # shrink tiles toward the vocab so tiny indices don't pad to 128/512
@@ -229,7 +264,8 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
         # two same-shape meshes over disjoint devices are distinct)
         mesh_key = (tuple(int(d.id) for d in mesh.devices.flat)
                     if mesh is not None else None)
-        cache_key = ("materialize", k, method, scope, bm, bn, mesh_key)
+        cache_key = ("materialize", k, method, scope, bm, bn, mesh_key,
+                     strategy)
         cache_ver = ctx.scope_version(scope) if scope is not None else 0
         hit = ctx.cached_artifact(cache_key, cache_ver)
         if hit is not None:
@@ -244,7 +280,7 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
             raise ValueError(f"scope_mask shape {scope_mask.shape} != "
                              f"({pidx.n_words},) (one uint32 per 32 doc slots)")
 
-    if method == "pallas" and mesh is None:
+    if method == "pallas" and (mesh is None or strategy == "rows"):
         # pad the incidence columns ONCE so every column tile is full-width
         # (the sharded path pads to the shard multiple internally instead)
         x = operands["x_dense"]
@@ -253,15 +289,21 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
             operands = dict(operands)
             operands["x_dense"] = jnp.pad(x, ((0, 0), (0, v_pad - v)))
 
-    ws, ids = [], []
-    for r0 in range(0, _round_up(v, bm), bm):
-        w_b, i_b = _topk_row_block(pidx, packed_t, scope_mask, operands, r0,
-                                   k=k, row_tile=bm, col_tile=bn,
-                                   method=method, mesh=mesh)
-        ws.append(w_b)
-        ids.append(i_b)
-    run_w = jnp.concatenate(ws, axis=0)[:v]                     # (V, k)
-    run_i = jnp.concatenate(ids, axis=0)[:v]
+    if strategy == "rows":
+        run_w, run_i = _topk_row_blocks_rows(pidx, packed_t, scope_mask,
+                                             operands, k=k, row_tile=bm,
+                                             method=method, mesh=mesh)
+        run_w, run_i = run_w[:v], run_i[:v]
+    else:
+        ws, ids = [], []
+        for r0 in range(0, _round_up(v, bm), bm):
+            w_b, i_b = _topk_row_block(pidx, packed_t, scope_mask, operands,
+                                       r0, k=k, row_tile=bm, col_tile=bn,
+                                       method=method, mesh=mesh)
+            ws.append(w_b)
+            ids.append(i_b)
+        run_w = jnp.concatenate(ws, axis=0)[:v]                 # (V, k)
+        run_i = jnp.concatenate(ids, axis=0)[:v]
     valid = run_w > 0
     net = CoocNetwork(
         src=jnp.repeat(jnp.arange(v, dtype=jnp.int32), k),

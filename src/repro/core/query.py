@@ -34,6 +34,7 @@ import dataclasses
 from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.inverted_index import (
@@ -50,31 +51,43 @@ from repro.core.network import CoocNetwork, nodes_of, to_edge_dict, to_edge_inde
 
 #: context artifacts a count method may request via ``needs``.  Each name is
 #: a zero-arg method on QueryContext returning a cached, sharded operand.
-KNOWN_OPERANDS = ("x_dense", "packed_t")
+KNOWN_OPERANDS = ("x_dense", "packed_t", "packed_t_pad")
 
 #: fn(index, masks (B, W) uint32, operands dict) -> counts (B, V) int32,
 #: traceable under jit/vmap.
 CountFn = Callable[[PackedIndex, jax.Array, Mapping[str, jax.Array]], jax.Array]
+
+#: level_fn(index, masks, terms, valid, visited, operands, *, k, dedup)
+#: -> (weights (B, k), ids (B, k)) int32 — the whole BFS level step
+#: (counts + self/visited/valid masking + top-k) as ONE fused call,
+#: bit-identical to the unfused chain.  Optional: methods without one run
+#: counts through ``fn`` and reduce via ``chunked_top_k``.
+LevelFn = Callable[..., Tuple[jax.Array, jax.Array]]
 
 
 class CountMethod(NamedTuple):
     name: str
     needs: Tuple[str, ...]
     fn: CountFn
+    level_fn: Optional[LevelFn] = None
 
 
 _REGISTRY: Dict[str, CountMethod] = {}
 
 
 def register_count_method(name: str, needs: Sequence[str], fn: CountFn, *,
+                          level_fn: Optional[LevelFn] = None,
                           overwrite: bool = False) -> CountMethod:
     """Register a frontier-count method under ``name``.
 
     ``needs`` lists the QueryContext artifacts the method consumes (subset
     of :data:`KNOWN_OPERANDS`); they are delivered to ``fn`` in the
-    operands mapping.  Registration makes the method valid everywhere a
-    ``method=`` is accepted: QuerySpec, bfs_construct, CoocEngine,
-    CoocIndex.
+    operands mapping.  ``level_fn`` optionally fuses the whole level step
+    (counts + masks + top-k) into one call — ``bfs_construct`` prefers it
+    over the ``fn``-then-``chunked_top_k`` chain when present (it must be
+    bit-identical, values and tie order).  Registration makes the method
+    valid everywhere a ``method=`` is accepted: QuerySpec, bfs_construct,
+    CoocEngine, CoocIndex.
     """
     needs = tuple(needs)
     unknown = [n for n in needs if n not in KNOWN_OPERANDS]
@@ -84,14 +97,14 @@ def register_count_method(name: str, needs: Sequence[str], fn: CountFn, *,
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"count method {name!r} already registered; "
                          "pass overwrite=True to replace it")
-    m = CountMethod(name, needs, fn)
+    m = CountMethod(name, needs, fn, level_fn)
     _REGISTRY[name] = m
     return m
 
 
 def unregister_count_method(name: str) -> None:
     """Remove a registered method (primarily for test hygiene)."""
-    if name in ("gemm", "popcount", "pallas"):
+    if name in ("gemm", "popcount", "pallas", "fused"):
         raise ValueError(f"refusing to unregister built-in method {name!r}")
     _REGISTRY.pop(name, None)
 
@@ -127,9 +140,41 @@ def _pallas_counts(index: PackedIndex, masks: jax.Array,
                                backend=ops.pallas_backend())
 
 
+def _fused_counts(index: PackedIndex, masks: jax.Array,
+                  operands: Mapping[str, jax.Array]) -> jax.Array:
+    """Counts-only form of the fused method (the materialize/registry
+    path, and the per-shard local counts under a mesh): the same popcount
+    as "popcount", read from the pre-padded transposed postings when the
+    artifact is present (padding words AND to zero; padding columns slice
+    off), else straight off the packed index."""
+    pt = operands.get("packed_t_pad")
+    if pt is None:
+        return doc_freq_under_batch(index, masks)
+    wp = pt.shape[1]
+    m = jnp.pad(masks, ((0, 0), (0, wp - masks.shape[1])))
+    anded = m[:, None, :] & pt[None, :, :]
+    c = jnp.sum(jax.lax.population_count(anded).astype(jnp.int32), axis=2)
+    return c[:, :index.vocab_size]
+
+
+def _fused_level(index: PackedIndex, masks: jax.Array, terms: jax.Array,
+                 valid: jax.Array, visited: jax.Array,
+                 operands: Mapping[str, jax.Array], *, k: int, dedup: bool
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """The fused level step: one ``kernels.ops.level_step`` launch over
+    the pre-padded transposed postings (compiled Pallas on TPU, the fused
+    XLA fallback elsewhere) — counts, masking, and top-k never round-trip
+    the (B, V) block."""
+    from repro.kernels import ops
+    return ops.level_step(masks, operands["packed_t_pad"], terms, valid,
+                          visited, v=index.vocab_size, k=k, dedup=dedup)
+
+
 register_count_method("gemm", ("x_dense",), _gemm_counts)
 register_count_method("popcount", (), _popcount_counts)
 register_count_method("pallas", (), _pallas_counts)
+register_count_method("fused", ("packed_t_pad",), _fused_counts,
+                      level_fn=_fused_level)
 
 
 # ---------------------------------------------------------------------------

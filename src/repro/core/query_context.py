@@ -115,6 +115,8 @@ class QueryContext:
         self.unpack_count = 0   # monitoring: dense rebuilds == ingest epochs
         self._packed_t: Optional[jax.Array] = None
         self._pt_epoch = -1
+        self._packed_t_pad: Optional[jax.Array] = None
+        self._ptp_epoch = -1
         # generic epoch-versioned artifact cache (materialized networks):
         # entries are (epoch, version, value); stale epochs are pruned on
         # store, and a re-store under the same key overwrites — a key
@@ -354,6 +356,30 @@ class QueryContext:
                                          ("terms", "docs"))
             self._pt_epoch = self.epoch
         return self._packed_t
+
+    def packed_t_pad(self) -> jax.Array:
+        """Transposed postings pre-padded to the fused level-step kernel's
+        tile layout — (V_pad, W_pad) uint32 with V rounded up to 8 and W
+        to 128 (the int32 TPU tile) — cached per epoch and sharded
+        (terms, docs) at build time.
+
+        This is the padding-at-ingest invariant: the pad happens ONCE per
+        ingest epoch, here, so steady-state ``method="fused"`` queries
+        launch with zero ``jnp.pad`` of the postings
+        (``kernels.ops.level_step`` refuses to pad its big operand).
+        Padding columns/words are all-zero bits: they contribute nothing
+        to counts and the kernel forces their columns below every real
+        candidate.
+        """
+        if self._ptp_epoch != self.epoch:
+            p = jnp.transpose(self._index.packed)
+            v_pad = (-p.shape[0]) % 8
+            w_pad = (-p.shape[1]) % 128
+            if v_pad or w_pad:
+                p = jnp.pad(p, ((0, v_pad), (0, w_pad)))
+            self._packed_t_pad = self._place(p, ("terms", "docs"))
+            self._ptp_epoch = self.epoch
+        return self._packed_t_pad
 
     def cached_artifact(self, key: Tuple, version: int = 0):
         """Epoch-checked lookup in the generic artifact cache (None on

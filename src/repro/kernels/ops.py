@@ -21,6 +21,7 @@ from repro.kernels import ref
 from repro.kernels.cooccur import cooccur_gemm_pallas
 from repro.kernels.dot_interaction import dot_interaction_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.level_step import level_step_pallas, level_step_topk_xla
 from repro.kernels.postings import postings_counts_pallas
 
 
@@ -167,6 +168,72 @@ def postings_counts(masks: jax.Array, packed: jax.Array, *,
     out = postings_counts_pallas(m, p, bb=bb, bv=bv, bw=bw,
                                  interpret=(b == "interpret"))
     return out[:nb, :v]
+
+
+# -- fused BFS level step ----------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("v", "k", "dedup", "backend",
+                                             "bv", "bw"))
+def level_step(masks: jax.Array, packed_t_pad: jax.Array, terms: jax.Array,
+               valid: jax.Array, visited: jax.Array, *, v: int, k: int,
+               dedup: bool = True, backend: Optional[str] = None,
+               bv: int = 256, bw: int = 128):
+    """One fused BFS level step: popcount counts + self/visited/valid
+    masking + exact top-k, one launch (``kernels.level_step``).
+
+    masks (B, W) uint32; packed_t_pad (V_pad, W_pad) uint32 — the
+    PRE-PADDED transposed postings (``QueryContext.packed_t_pad``: V to a
+    multiple of 8, W to a multiple of 128, padded once per ingest epoch);
+    terms (B,) int32 (-1 = invalid); valid (B,) bool; visited (V,) bool.
+    Returns (weights, ids) both (B, k) int32 — bit-identical (values AND
+    tie order) to masked counts through ``chunked_top_k``: ``k > v``
+    clamps internally and pads the missing slots with weight -1 / id 0.
+
+    Unlike the other wrappers this one REFUSES to pad its big operand:
+    steady-state queries must launch with zero ``jnp.pad`` of the
+    postings (the per-call prepad this kernel exists to kill).  The
+    per-query frontier state (masks rows/words, the visited vector) may
+    still pad — O(B·W + V) per call, never O(V·W).
+    """
+    b = _resolve(backend)
+    vp, wp = packed_t_pad.shape
+    if vp % 8 or wp % 128 or vp < v:
+        raise ValueError(
+            f"packed_t_pad {packed_t_pad.shape} is not the pre-padded "
+            f"(V->8, W->128) artifact for v={v}; pass "
+            "QueryContext.packed_t_pad() — level_step never pads it")
+    nb = masks.shape[0]
+    k_eff = min(k, v)
+    tclip = jnp.clip(terms, 0).astype(jnp.int32)
+    vis = (visited.astype(jnp.int32) if dedup
+           else jnp.zeros(visited.shape, jnp.int32))
+    vld = valid.astype(jnp.int32)
+    if b == "xla":
+        # the compiled-XLA fallback has no tile-shape constraint: slice
+        # the artifact back to the true (v, W) so the popcount touches
+        # zero padding work (a static slice of the cached artifact, not a
+        # per-call pad — shapes stay fixed across submits within an epoch)
+        pt = packed_t_pad[:v, :masks.shape[1]]
+        w, i = level_step_topk_xla(masks, pt, tclip[:, None],
+                                   vld[:, None], vis[None, :],
+                                   v=v, k=k_eff)
+    else:
+        m2 = _pad_to(_pad_to(masks, 1, wp), 0, 8)
+        t2 = _pad_to(tclip[:, None], 0, 8)
+        v2 = _pad_to(vld[:, None], 0, 8)      # pad rows invalid -> all -1
+        vis_p = _pad_to(vis, 0, vp)
+        bv_eff = min(bv, vp)
+        while vp % bv_eff:                    # vp is a multiple of 8, so
+            bv_eff -= 8                       # this terminates at >= 8
+        bw_eff = min(bw, wp)                  # wp % 128 == 0: always fits
+        w, i = level_step_pallas(m2, packed_t_pad, t2, v2, vis_p[None, :],
+                                 v=v, k=k_eff, bv=bv_eff, bw=bw_eff,
+                                 interpret=(b == "interpret"))
+        w, i = w[:nb], i[:nb]
+    if k_eff < k:
+        w = jnp.pad(w, ((0, 0), (0, k - k_eff)), constant_values=-1)
+        i = jnp.pad(i, ((0, 0), (0, k - k_eff)))
+    return w, i
 
 
 # -- flash decode attention --------------------------------------------------

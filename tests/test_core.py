@@ -401,6 +401,30 @@ class TestChunkedTopK:
             for k in (1, 3, 8, 16):
                 self._assert_order_pinned(x, k, n_chunks=4)
 
+    def test_single_pass_when_chunking_cannot_shrink(self):
+        """Regression (perf): when n_chunks * k >= V the two-stage merge
+        sorts MORE candidates than a direct top-k — chunked_top_k must
+        take the single-pass path there (one top_k in the jaxpr) and
+        still chunk when chunking genuinely shrinks the merge, with
+        identical values and tie order on both sides of the threshold."""
+        from repro.core.cooccurrence import chunked_top_k
+
+        def n_topk_ops(v, k, n_chunks):
+            x = jnp.zeros((2, v), jnp.int32)
+            jaxpr = jax.make_jaxpr(
+                lambda a: chunked_top_k(a, k, n_chunks=n_chunks))(x)
+            return str(jaxpr).count("top_k")
+
+        # 4 * 16 >= 64: chunking would merge every element -> single pass
+        assert n_topk_ops(64, 16, n_chunks=4) == 1
+        # 4 * 4 < 64: the two-stage path (chunk top-k + merge top-k)
+        assert n_topk_ops(64, 4, n_chunks=4) >= 2
+        # order identical straddling the threshold, ties included
+        rng = np.random.default_rng(11)
+        x = rng.integers(0, 5, (3, 64)).astype(np.int32)
+        for k in (15, 16, 17, 64):
+            self._assert_order_pinned(x, k, n_chunks=4)
+
     def test_k_exceeds_vocab_clamps_and_pads(self):
         """Regression: k > V used to fall through to lax.top_k(x, k),
         which crashes — the public function must clamp and pad to the

@@ -50,7 +50,7 @@ from repro.core import (
 pytestmark = pytest.mark.slow
 
 MAX_EXAMPLES = int(os.environ.get("COOC_DIFF_EXAMPLES", "12"))
-METHODS = ("gemm", "popcount", "pallas")
+METHODS = ("gemm", "popcount", "pallas", "fused")
 
 
 def _adversarial_corpus(n_docs, vocab, seed, flavor):
@@ -101,7 +101,8 @@ class TestDeviceHostOracleAgreement:
         nets = {m: to_edge_dict(bfs_construct(idx, seeds, depth=2, topk=4,
                                               beam=8, method=m))
                 for m in METHODS}
-        assert nets["gemm"] == nets["popcount"] == nets["pallas"]
+        assert (nets["gemm"] == nets["popcount"] == nets["pallas"]
+                == nets["fused"])
         hidx = build_host_index(docs, vocab)
         fast = _edge_set(bfs_construct_host_fast(hidx, [s], depth=2, topk=4,
                                                  beam=8))
@@ -171,7 +172,8 @@ class TestInterleavedMutations:
         nets = {m: to_edge_dict(bfs_construct(ctx, seeds, depth=2, topk=4,
                                               beam=8, method=m))
                 for m in METHODS}
-        assert nets["gemm"] == nets["popcount"] == nets["pallas"]
+        assert (nets["gemm"] == nets["popcount"] == nets["pallas"]
+                == nets["fused"])
         hidx = build_host_index(final, ctx.vocab_size)
         fast = _edge_set(bfs_construct_host_fast(hidx, [s], depth=2, topk=4,
                                                  beam=8))
@@ -344,7 +346,8 @@ class TestShardedEquivalence:
             s = int(rng.integers(0, vocab))
             specs.append(QuerySpec(
                 seeds=(s,), depth=2, topk=4, beam=8,
-                method=METHODS[q % 3], scope="t0" if q % 2 else None))
+                method=METHODS[q % len(METHODS)],
+                scope="t0" if q % 2 else None))
         f0 = [e0.submit(sp) for sp in specs]
         fm = [em.submit(sp) for sp in specs]
         for i, (a, b) in enumerate(zip(f0, fm)):
@@ -400,7 +403,7 @@ SHARDED_SMOKE = textwrap.dedent("""
     seeds = jnp.asarray([3, -1, -1, -1], jnp.int32)
     for shard in ("terms", "docs"):
         ctxm = QueryContext.from_docs(docs, 29, mesh=make_cooc_mesh(shard=shard))
-        for m in ("gemm", "popcount", "pallas"):
+        for m in ("gemm", "popcount", "pallas", "fused"):
             a = bfs_construct(ctx0, seeds, depth=2, topk=4, beam=8, method=m)
             b = bfs_construct(ctxm, seeds, depth=2, topk=4, beam=8, method=m)
             for f in ("src", "dst", "weight", "valid"):

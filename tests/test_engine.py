@@ -154,7 +154,7 @@ class TestCoocEngine:
         with pytest.raises(ValueError, match="empty"):
             eng.submit([])
 
-    @pytest.mark.parametrize("method", ["popcount", "pallas"])
+    @pytest.mark.parametrize("method", ["popcount", "pallas", "fused"])
     def test_method_parity_with_gemm(self, method):
         ctx, eng_g = self._setup(q_batch=2)
         eng_m = CoocEngine(ctx, depth=2, topk=6, beam=8, q_batch=2,
@@ -166,6 +166,27 @@ class TestCoocEngine:
         eng_m.run_until_drained()
         for rg, rm in zip(eng_g.finished, eng_m.finished):
             assert rg.edges == rm.edges
+
+    def test_fused_padding_at_ingest_no_per_query_repad(self):
+        """The fused method's big operand is padded ONCE per ingest epoch
+        (identity-stable across submits, tile-aligned), so repeated fused
+        queries reuse one compiled plan — no per-call operand reshapes,
+        no recompiles.  Ingest bumps the epoch and rebuilds it exactly
+        once."""
+        docs = synthetic_csl(300, 64, seed=1)
+        ctx = QueryContext.from_docs(docs, 64, capacity=400)
+        eng = CoocEngine(ctx, depth=2, topk=6, beam=8, q_batch=2,
+                         method="fused")
+        art = ctx.packed_t_pad()
+        assert art.shape[0] % 8 == 0 and art.shape[1] % 128 == 0
+        for s in (3, 5, 7, 9, 11, 13):
+            eng.submit([s])
+        eng.run_until_drained()
+        assert eng.compiled_plans == 1       # one plan, zero reshapes
+        assert ctx.packed_t_pad() is art     # same buffer all epoch long
+        eng.ingest_docs([[1, 2]] * 3)
+        assert ctx.packed_t_pad() is not art  # epoch bump -> one rebuild
+        assert eng.query([1]) == _single(ctx, 1, method="gemm")
 
     def test_unknown_method_rejected(self):
         ctx = QueryContext.from_docs([[0, 1]], 4)

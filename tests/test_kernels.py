@@ -157,6 +157,79 @@ def test_postings_counts_sparse_bitmaps():
 
 
 # ---------------------------------------------------------------------------
+# fused BFS level step
+# ---------------------------------------------------------------------------
+
+
+def _level_inputs(b, v, w, seed):
+    rng = np.random.default_rng(seed)
+    packed = jnp.asarray(rng.integers(0, 1 << 32, (w, v), dtype=np.uint32))
+    masks = jnp.asarray(rng.integers(0, 1 << 32, (b, w), dtype=np.uint32))
+    terms = jnp.asarray(rng.integers(-1, v, (b,)), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, (b,)), bool)
+    visited = jnp.asarray(rng.integers(0, 2, (v,)), bool)
+    pt = jnp.pad(packed.T, ((0, (-v) % 8), (0, (-w) % 128)))
+    return packed, masks, terms, valid, visited, pt
+
+
+def _level_oracle(packed, masks, terms, valid, visited, *, k, dedup):
+    """The unfused reference chain the kernel must reproduce bit for bit:
+    popcount counts -> self-mask -> visited -> valid -> chunked_top_k."""
+    from repro.core.cooccurrence import chunked_top_k
+    b, v = masks.shape[0], packed.shape[1]
+    c = jnp.sum(jax.lax.population_count(
+        masks[:, :, None] & packed[None, :, :]).astype(jnp.int32), axis=1)
+    c = c.at[jnp.arange(b), jnp.clip(terms, 0)].set(-1)
+    if dedup:
+        c = jnp.where(visited[None, :], -1, c)
+    c = jnp.where(valid[:, None], c, -1)
+    return chunked_top_k(c, k)
+
+
+@pytest.mark.parametrize("b,v,w,k,dedup", [
+    (5, 97, 7, 6, True),       # ragged everything
+    (3, 40, 3, 50, False),     # k > V (clamp + pad), dedup off
+    (8, 256, 4, 8, True),      # tile-friendly B/V
+    (1, 9, 1, 9, True),        # single row, k == V
+])
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_level_step_matches_oracle_chain(b, v, w, k, dedup, backend):
+    """Fused level step == counts -> masking -> chunked_top_k, exact in
+    values AND tie order, on both the compiled-XLA fallback and the
+    Pallas kernel (interpret mode)."""
+    packed, masks, terms, valid, visited, pt = _level_inputs(b, v, w, b * v)
+    want_w, want_i = _level_oracle(packed, masks, terms, valid, visited,
+                                   k=k, dedup=dedup)
+    got_w, got_i = ops.level_step(masks, pt, terms, valid, visited,
+                                  v=v, k=k, dedup=dedup, backend=backend)
+    np.testing.assert_array_equal(np.asarray(want_w), np.asarray(got_w))
+    np.testing.assert_array_equal(np.asarray(want_i), np.asarray(got_i))
+
+
+def test_level_step_refuses_unpadded_artifact():
+    """level_step never pads its big operand — handing it a raw (V, W)
+    transpose instead of the pre-padded epoch artifact is an error, not a
+    silent per-call repad."""
+    packed, masks, terms, valid, visited, _ = _level_inputs(4, 33, 3, 0)
+    with pytest.raises(ValueError, match="pre-padded"):
+        ops.level_step(masks, packed.T, terms, valid, visited, v=33, k=4)
+
+
+def test_level_step_pad_columns_stay_below_real_candidates():
+    """V padded 97 -> 104: the 7 pad columns must never be returned even
+    when every real column is masked to -1 (they sit at -2, strictly
+    below)."""
+    packed, masks, terms, _, _, pt = _level_inputs(2, 97, 7, 5)
+    valid = jnp.ones((2,), bool)
+    visited = jnp.ones((97,), bool)          # every real column -> -1
+    for backend in ("xla", "interpret"):
+        w, i = ops.level_step(masks, pt, terms, valid, visited,
+                              v=97, k=6, dedup=True, backend=backend)
+        assert int(jnp.max(i)) < 97
+        assert (np.asarray(w) == -1).all()
+
+
+# ---------------------------------------------------------------------------
 # flash decode
 # ---------------------------------------------------------------------------
 
