@@ -1,0 +1,237 @@
+"""Serving under load: open-loop trace replay against the CoocServer.
+
+The serving tentpole's acceptance bench: a deterministic mixed-plan /
+mixed-tenant trace — steady Poisson arrivals, one saturating burst, a
+handful of hostile never-seen plans (compile pressure against the LRU
+budget), and ingest interleaved mid-trace — replayed OPEN-LOOP (arrivals
+fire on the trace clock whether or not the server has caught up, unlike
+the closed-loop engine bench) against a `CoocServer` with admission
+control enabled.
+
+Reports end-to-end p50/p95/p99/p999, served throughput, shed rate,
+deadline-miss rate, peak queue depth, and the executor-cache gauges into
+``BENCH_serving.json`` via the driver.  Asserts the subsystem's
+acceptance criteria: the burst is SHED (bounded queue depth), the
+compile cache stays within budget under > budget distinct plans, and the
+deadline-miss rate stays < 1% at the offered load.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--quick args]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import QueryContext
+from repro.data import synthetic_csl
+from repro.serve import (
+    AdmissionPolicy,
+    CoocServer,
+    ServeResponse,
+    ServerConfig,
+    TenantConfig,
+)
+from repro.serve.metrics import percentile_ms
+from benchmarks.common import section, write_csv
+
+HOT_PLANS = (dict(depth=2, topk=8, beam=16),
+             dict(depth=1, topk=12, beam=16))
+
+
+def _build_trace(args, rng) -> List[Dict]:
+    """Deterministic arrival schedule: (t, tenant, request, deadline_ms).
+
+    Steady arrivals at ``--rate`` req/s alternating tenants/plans, a
+    zero-spacing burst of ``--burst`` requests at the midpoint, and
+    ``--hostile`` one-off plans (distinct beam/topk shapes, generous
+    deadlines — their cost is the compile they force, not a miss).
+    """
+    events, t = [], 0.0
+    hot = [int(s) for s in rng.integers(1, args.vocab // 4,
+                                        size=args.n_requests)]
+    for i in range(args.n_requests):
+        t += float(rng.exponential(1.0 / args.rate))
+        events.append(dict(
+            t=t, tenant="alpha" if i % 3 == 0 else "beta",
+            request=dict(seeds=[hot[i]], **HOT_PLANS[i % len(HOT_PLANS)]),
+            deadline_ms=args.deadline_ms))
+    t_mid = events[len(events) // 2]["t"]
+    for i in range(args.burst):
+        events.append(dict(
+            t=t_mid, tenant="beta",
+            request=dict(seeds=[hot[i % len(hot)]], **HOT_PLANS[0]),
+            deadline_ms=args.deadline_ms))
+    for i in range(args.hostile):
+        # each hostile plan is a distinct executable shape the server has
+        # never compiled; spread through the steady phase
+        events.append(dict(
+            t=events[-args.burst]["t"] * (i + 1) / (args.hostile + 1),
+            tenant="beta",
+            request=dict(seeds=[hot[i]], depth=1, topk=2 + i,
+                         beam=8 * (i + 2)),
+            deadline_ms=300000.0))
+    t_end = max(e["t"] for e in events)
+    for i in range(args.ingests):
+        events.append(dict(t=t_end * (i + 0.5) / args.ingests,
+                           tenant="alpha", ingest=True))
+    events.sort(key=lambda e: e["t"])
+    return events
+
+
+async def _replay(server: CoocServer, events: List[Dict],
+                  rng) -> List[ServeResponse]:
+    t0 = time.monotonic()
+    tasks = []
+
+    async def fire(ev):
+        delay = ev["t"] - (time.monotonic() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        if ev.get("ingest"):
+            docs = [[int(x) for x in rng.integers(1, 64, size=6)]
+                    for _ in range(8)]
+            await server.ingest(ev["tenant"], docs, max_len=8)
+            return None
+        return await server.submit(ev["tenant"], ev["request"],
+                                   deadline_ms=ev["deadline_ms"])
+
+    tasks = [asyncio.create_task(fire(ev)) for ev in events]
+    out = await asyncio.gather(*tasks)
+    return [r for r in out if r is not None]
+
+
+async def _run(args) -> Dict:
+    rng = np.random.default_rng(args.seed)
+    docs = synthetic_csl(args.n_docs, args.vocab, seed=args.seed)
+    ctx = QueryContext.from_docs(docs, args.vocab,
+                                 capacity=args.n_docs + 2048)
+    server = CoocServer(
+        ctx,
+        tenants=[TenantConfig("alpha", scope="alpha-docs"),
+                 TenantConfig("beta")],
+        config=ServerConfig(
+            depth=2, topk=8, beam=16, q_batch=args.q_batch,
+            compile_budget=args.compile_budget,
+            policy=AdmissionPolicy(max_queue_depth=args.max_queue_depth,
+                                   max_wait_ms=args.max_wait_ms),
+            default_deadline_ms=args.deadline_ms,
+            linger_ms=args.linger_ms,
+            # CPU-interpret compiles run ~10 s+: the cold prior must make
+            # estimated wait blow the budget so traffic behind a compile
+            # sheds instead of missing deadlines
+            cold_ms=args.cold_ms))
+    await server.start()
+    await server.ingest("alpha", [[1, 2, 3, 4]] * 4, max_len=8)
+
+    # compile-pressure preamble: fill the LRU with `budget` one-off plans
+    # (sequential, so admission never sheds them), THEN warm the two hot
+    # executables — which must evict preamble entries, proving the cache
+    # holds its bound under > budget distinct plans before the trace even
+    # starts.  All outside the timed replay: the trace measures serving,
+    # not first-compile.
+    for i in range(args.compile_budget):
+        r = await server.submit("beta", dict(seeds=[3], depth=1,
+                                             topk=2 + i, beam=8),
+                                deadline_ms=600000.0)
+        assert r.result is not None, r
+    for plan in HOT_PLANS:
+        r = await server.submit("beta", dict(seeds=[3], **plan),
+                                deadline_ms=600000.0)
+        assert r.ok, r
+    events = _build_trace(args, rng)
+
+    t0 = time.perf_counter()
+    responses = await _replay(server, events, rng)
+    wall_s = time.perf_counter() - t0
+    snap = server.snapshot()
+    await server.stop()
+
+    served = [r for r in responses if r.result is not None]
+    lat = [r.latency_ms for r in served]
+    p50, p95, p99, p999 = percentile_ms(lat)
+    return dict(
+        offered=len(responses), served=len(served), wall_s=wall_s,
+        qps=len(served) / wall_s,
+        p50_ms=p50, p95_ms=p95, p99_ms=p99, p999_ms=p999,
+        shed=sum(1 for r in responses if r.status == "shed"),
+        misses=sum(1 for r in responses if r.status == "deadline_miss"),
+        errors=sum(1 for r in responses if r.status == "error"),
+        shed_rate=snap.shed_rate, miss_rate=snap.deadline_miss_rate,
+        peak_queue_depth=snap.peak_queue_depth,
+        compiled_plans=snap.compiled_plans,
+        plan_evictions=snap.plan_evictions,
+    )
+
+
+def main(argv: List[str] | None = None) -> List[Dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-docs", type=int, default=4000)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--n-requests", type=int, default=240)
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="steady open-loop arrival rate, req/s")
+    ap.add_argument("--burst", type=int, default=64,
+                    help="zero-spacing burst size at the trace midpoint")
+    ap.add_argument("--hostile", type=int, default=4,
+                    help="one-off never-compiled plans (compile pressure)")
+    ap.add_argument("--ingests", type=int, default=6)
+    ap.add_argument("--q-batch", type=int, default=8)
+    ap.add_argument("--compile-budget", type=int, default=4)
+    ap.add_argument("--max-queue-depth", type=int, default=24)
+    ap.add_argument("--max-wait-ms", type=float, default=15000.0)
+    ap.add_argument("--deadline-ms", type=float, default=30000.0)
+    ap.add_argument("--linger-ms", type=float, default=25.0)
+    ap.add_argument("--cold-ms", type=float, default=20000.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    section(f"Serving under load — {args.n_requests} steady + {args.burst} "
+            f"burst + {args.hostile} hostile @ {args.rate:.0f} req/s, "
+            f"queue<=#{args.max_queue_depth}, compile budget "
+            f"{args.compile_budget}")
+    r = asyncio.run(_run(args))
+
+    print(f"offered {r['offered']}  served {r['served']}  "
+          f"shed {r['shed']}  misses {r['misses']}  errors {r['errors']}  "
+          f"in {r['wall_s']:.1f} s ({r['qps']:.1f} served/s)")
+    print(f"latency p50 {r['p50_ms']:.0f} ms  p95 {r['p95_ms']:.0f} ms  "
+          f"p99 {r['p99_ms']:.0f} ms  p999 {r['p999_ms']:.0f} ms")
+    print(f"peak queue depth {r['peak_queue_depth']}  "
+          f"compiled plans {r['compiled_plans']}  "
+          f"evictions {r['plan_evictions']}")
+    write_csv("serving", [r])
+
+    # acceptance: the burst sheds (bounded queue), the compile cache holds
+    # its budget under > budget distinct plans, and the miss rate is < 1%
+    assert r["shed"] > 0, "burst did not trip admission control"
+    assert r["peak_queue_depth"] <= args.max_queue_depth, \
+        f"queue depth {r['peak_queue_depth']} exceeded the admission bound"
+    assert r["compiled_plans"] <= args.compile_budget, \
+        f"compile cache {r['compiled_plans']} exceeded budget"
+    assert r["plan_evictions"] > 0, "hostile plans never pressured the LRU"
+    assert r["miss_rate"] < 0.01, \
+        f"deadline-miss rate {r['miss_rate']:.2%} >= 1%"
+    assert r["errors"] == 0, f"{r['errors']} requests errored"
+    print("acceptance: shed under burst, bounded depth, bounded compiles, "
+          "miss rate < 1%  [ok]")
+
+    return [
+        {"name": "serving_qps", "value": r["qps"]},
+        {"name": "serving_p50_ms", "value": r["p50_ms"]},
+        {"name": "serving_p99_ms", "value": r["p99_ms"]},
+        {"name": "serving_p999_ms", "value": r["p999_ms"]},
+        {"name": "serving_shed_rate", "value": r["shed_rate"]},
+        {"name": "serving_deadline_miss_rate", "value": r["miss_rate"]},
+        {"name": "serving_peak_queue_depth",
+         "value": float(r["peak_queue_depth"])},
+        {"name": "serving_compiled_plans", "value": float(r["compiled_plans"])},
+        {"name": "serving_plan_evictions", "value": float(r["plan_evictions"])},
+    ]
+
+
+if __name__ == "__main__":
+    main()

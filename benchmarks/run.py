@@ -31,7 +31,7 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     choices=("fig7", "fig5", "scaling", "engine_throughput",
                              "streaming", "full_network", "sharded",
-                             "roofline"))
+                             "serving", "roofline"))
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="BENCH_<name>.json file or directory of them; "
                          "exit 1 on any >20%% metric regression")
@@ -105,6 +105,12 @@ def main() -> int:
     sharded_argv = (["--n-docs", "1024", "--vocab", "256", "--n-queries",
                      "16", "--k", "4"] if args.quick else [])
     run_bench("sharded", lambda: bench_sharded.main(sharded_argv))
+
+    from benchmarks import bench_serving
+    serving_argv = (["--n-docs", "1024", "--vocab", "256", "--n-requests",
+                     "120", "--rate", "30", "--burst", "48", "--hostile", "3",
+                     "--max-queue-depth", "24"] if args.quick else [])
+    run_bench("serving", lambda: bench_serving.main(serving_argv))
 
     from benchmarks import roofline
     run_bench("roofline", roofline.main)

@@ -1,68 +1,113 @@
-"""The paper's target scenario: a real-time co-occurrence query service.
+"""The paper's target scenario, at service grade: an async multi-tenant
+co-occurrence serving front end under real-time load.
 
     PYTHONPATH=src python examples/serve_realtime.py
 
-Stands up the plan-aware CoocEngine over a CSL-scale-shaped corpus and
-serves a HETEROGENEOUS burst — mixed QuerySpecs (different depth/topk/
-beam/method) through one engine, results via futures — showing that the
-per-plan executor cache compiles once per distinct plan, not per query.
-Then ingests fresh documents and shows the next query reflecting them
-immediately (the "real-time and dynamic characteristics" the paper
-motivates), and finishes with the string-level CoocIndex facade.
+Stands up a CoocServer over a CSL-scale-shaped corpus with two tenants —
+"alpha" pinned to its own named scope of the shared index, "beta"
+unscoped — and drives three phases:
+
+1. a mixed-plan workload across both tenants (one engine, one compile per
+   distinct executable — the bounded LRU compile cache underneath);
+2. a burst far past the admission budget, showing explicit load shedding
+   (typed "shed" responses, bounded queue depth) instead of unbounded
+   queueing;
+3. live ingest for the scoped tenant, visible to its very next query
+   (the paper's "real-time and dynamic characteristics"), and invisible
+   to the other tenant's scope.
+
+Ends with the full metrics dump (per-tenant counters, p50/p99/p999,
+shed/deadline-miss/eviction totals) and the string-level facade.
 """
+import asyncio
+
 import numpy as np
 
 from repro.api import CoocIndex
-from repro.core import QueryContext, QuerySpec
+from repro.core import QueryContext
 from repro.data import synthetic_csl
-from repro.serve import CoocEngine
+from repro.serve import (
+    AdmissionPolicy,
+    CoocServer,
+    ServerConfig,
+    TenantConfig,
+)
 
 
-def main():
-    vocab, n_docs = 2048, 10000
+async def serve_demo():
+    vocab, n_docs = 1024, 4000
     docs = synthetic_csl(n_docs, vocab, seed=0)
-    ctx = QueryContext.from_docs(docs, vocab, capacity=n_docs + 4096)
-    eng = CoocEngine(ctx, q_batch=8, on_overflow="grow")
+    ctx = QueryContext.from_docs(docs, vocab, capacity=n_docs + 2048)
+    # "alpha" owns a scope over a slice of fresh docs; "beta" sees it all
+    server = CoocServer(
+        ctx,
+        tenants=[TenantConfig("alpha", scope="alpha-docs"),
+                 TenantConfig("beta")],
+        config=ServerConfig(
+            depth=2, topk=8, beam=16, q_batch=8, compile_budget=4,
+            policy=AdmissionPolicy(max_queue_depth=32, max_wait_ms=30000.0),
+            default_deadline_ms=60000.0, linger_ms=50.0))
+    await server.start()
+    await server.ingest("alpha", [[1, 2, 3, 4]] * 6, max_len=8)
 
     df = np.bincount(np.concatenate([np.unique(d) for d in docs]),
                      minlength=vocab)
-    hot = np.argsort(-df)[:32]
+    hot = [int(t) for t in np.argsort(-df)[:24]]
 
-    # a mixed workload: three query plans interleaved, one engine
-    plans = [dict(depth=2, topk=12, beam=16),
-             dict(depth=1, topk=24, beam=8),
-             dict(depth=3, topk=6, beam=16, method="popcount")]
-    futures = [eng.submit(QuerySpec(seeds=(int(t),), **plans[i % 3]))
-               for i, t in enumerate(hot)]
-    results = [f.result() for f in futures]
-    st = eng.stats()
-    print(f"{st.n} mixed-plan queries in {st.batches} batches "
-          f"(mean occupancy {st.mean_occupancy:.1f}): "
-          f"p50 {st.p50_ms:.1f} ms  p95 {st.p95_ms:.1f} ms  "
-          f"p99 {st.p99_ms:.1f} ms")
-    print(f"compiled executables: {eng.compiled_plans} "
-          f"(= {len(plans)} distinct plans, NOT {st.n} queries)")
-    assert eng.compiled_plans == len(plans)
-    bar = 160.0
-    print(f"paper's web-real-time bar (<{bar:.0f} ms): "
-          f"{'MET' if st.p99_ms < bar else 'missed'}")
+    # phase 1: mixed plans, both tenants, one engine underneath
+    plans = [dict(depth=2, topk=8, beam=16),
+             dict(depth=1, topk=12, beam=16)]
+    reqs = [server.submit("alpha" if i % 3 == 0 else "beta",
+                          dict(seeds=[t], **plans[i % 2]))
+            for i, t in enumerate(hot)]
+    responses = await asyncio.gather(*reqs)
+    ok = sum(r.ok for r in responses)
+    snap = server.snapshot()
+    print(f"phase 1: {ok}/{len(responses)} mixed-plan queries served  "
+          f"p50 {snap.latency.p50_ms:.0f} ms  p99 {snap.latency.p99_ms:.0f} ms"
+          f"  compiled executables: {snap.compiled_plans}")
+    assert ok == len(responses)
+    assert snap.compiled_plans <= 4              # bounded by compile_budget
 
-    # live ingest: inject a burst of docs pairing two mid-frequency terms,
-    # and watch the network change on the very next query (the burst makes
-    # (a, b) the anchor's heaviest co-occurrence, so it must enter the net)
-    ranks = np.argsort(-df)
-    a, b = int(ranks[300]), int(ranks[900])
-    spec = QuerySpec(seeds=(a,), depth=2, topk=12, beam=16)
+    # phase 2: a burst past the admission budget -> explicit shedding.
+    # 120 concurrent submits against max_queue_depth=32: the policy sheds
+    # the excess with typed responses; nothing queues unboundedly.
+    burst = [server.submit("beta", [t]) for t in (hot * 5)]
+    burst_resp = await asyncio.gather(*burst)
+    shed = [r for r in burst_resp if r.status == "shed"]
+    served = [r for r in burst_resp if r.ok]
+    snap = server.snapshot()
+    print(f"phase 2: burst of {len(burst_resp)} -> {len(served)} served, "
+          f"{len(shed)} shed ({shed[0].reason if shed else '-'}), "
+          f"peak queue depth {snap.peak_queue_depth}")
+    assert shed, "burst should trip admission control"
+    assert snap.peak_queue_depth <= 32           # bounded by construction
+    assert all(r.ok or r.status == "shed" for r in burst_resp)
+
+    # phase 3: real-time scoped ingest — alpha sees its fresh docs on the
+    # next query; beta's unscoped view is the whole index either way
+    a, b = 7, 11
+    before = await server.submit("alpha", [a])
+    await server.ingest("alpha", [[a, b]] * 40, max_len=8)
+    after = await server.submit("alpha", [a])
     key = (min(a, b), max(a, b))
-    before = eng.submit(spec).result()
-    eng.ingest_docs([[a, b]] * 80)
-    after = eng.submit(spec).result()
-    w0, w1 = before.edges().get(key, 0), after.edges().get(key, 0)
-    print(f"edge ({a},{b}) weight: {w0} -> {w1} after ingesting 80 fresh "
-          f"docs (epoch {before.epoch} -> {after.epoch})")
-    assert w1 >= w0 + 80
-    assert eng.compiled_plans == len(plans)      # ingest didn't add a plan
-    print("real-time ingest visible to the next query  [ok]")
+    w0 = before.result.edges().get(key, 0) if before.ok else 0
+    w1 = after.result.edges().get(key, 0)
+    print(f"phase 3: alpha edge ({a},{b}) weight {w0} -> {w1} after "
+          f"ingesting 40 scoped docs")
+    assert after.ok and w1 >= w0 + 40
+
+    print("\nmetrics dump:")
+    print(server.render_metrics())
+    final = server.snapshot()
+    assert final.deadline_miss_total == 0
+    assert final.tenants["alpha"].counters.ingested_docs == 46
+    await server.stop()
+    print("server drained and stopped  [ok]")
+
+
+def main():
+    asyncio.run(serve_demo())
 
     # the string-level facade: same engine machinery behind text in/out
     idx = CoocIndex.from_texts(

@@ -3,7 +3,8 @@ JAX/Pallas reproduction + production serving engine.
 
 Entry points: :mod:`repro.api` (string-level :class:`~repro.api.CoocIndex`
 facade), :mod:`repro.core` (packed index, BFS construction, QuerySpec /
-QueryResult), :mod:`repro.serve` (CoocEngine, futures, CoocService shim).
+QueryResult), :mod:`repro.serve` (CoocEngine, futures, and the async
+multi-tenant CoocServer front end).
 """
 
 __version__ = "0.1.0"

@@ -24,6 +24,8 @@ from repro.core.query import (  # noqa: F401
     PlanKey,
     QueryResult,
     QuerySpec,
+    canonical_exec_key,
+    canonicalize_request,
     count_method_names,
     get_count_method,
     register_count_method,

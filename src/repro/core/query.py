@@ -31,7 +31,17 @@ single source of truth:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
+from typing import (
+    Callable,
+    Dict,
+    List,
+    Mapping,
+    NamedTuple,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import jax
 import jax.numpy as jnp
@@ -199,6 +209,66 @@ class PlanKey(NamedTuple):
     dedup: bool
     method: str
     scope: Optional[str] = None
+
+
+def canonical_exec_key(key: PlanKey) -> PlanKey:
+    """Collapse a plan key to its EXECUTABLE identity.
+
+    The scope is an operand choice, never a compiled shape: the engine
+    feeds every batch a ``(W,)`` scope bitmap (the named scope's, or the
+    all-ones :meth:`~repro.core.query_context.QueryContext.full_mask` for
+    unscoped plans), so scoped and unscoped plans with equal shape fields
+    share ONE jitted executable.  This is the compile-bomb canonicalization
+    layer: traffic that varies only scope names — or toggles scope on and
+    off — can never grow the executor cache past one entry per distinct
+    (depth, topk, beam, dedup, method) shape.
+    """
+    return key._replace(scope=None)
+
+
+#: field names a wire-format query request may carry (== QuerySpec fields).
+SPEC_FIELDS: Tuple[str, ...] = ("seeds", "depth", "topk", "beam", "dedup",
+                                "method", "scope")
+
+
+def canonicalize_request(
+        request: Union["QuerySpec", Mapping, Sequence[int]], *,
+        defaults: Optional[Mapping] = None) -> "QuerySpec":
+    """Normalise a wire-format query request into a validated QuerySpec.
+
+    Serving front ends receive queries as loosely-shaped payloads; this is
+    the single place they collapse onto the canonical form, so two requests
+    that differ only in key order, or in spelling defaults out explicitly
+    vs omitting them, produce EQUAL specs — hence equal plan keys, hence
+    (with :func:`canonical_exec_key`) one compiled executable.
+
+    ``request`` is one of:
+
+    * a :class:`QuerySpec` — already canonical, returned as-is;
+    * a mapping — arbitrary key order; omitted fields fall back to
+      ``defaults`` then to the QuerySpec defaults; UNKNOWN keys raise
+      (a typo'd field name must never silently become a default);
+    * a bare seed-term sequence — completed from ``defaults``.
+
+    ``defaults`` entries outside :data:`SPEC_FIELDS` are ignored, so an
+    engine/server can pass its whole config mapping.
+    """
+    if isinstance(request, QuerySpec):
+        return request
+    base = {k: v for k, v in dict(defaults or {}).items() if k in SPEC_FIELDS}
+    if isinstance(request, Mapping):
+        unknown = sorted(set(request) - set(SPEC_FIELDS))
+        if unknown:
+            raise ValueError(
+                f"unknown QuerySpec field(s) {unknown} in request; "
+                f"valid fields: {sorted(SPEC_FIELDS)}")
+        base.update(request)
+        if "seeds" not in base:
+            raise ValueError("request names no seeds")
+    else:
+        base["seeds"] = request
+    base["seeds"] = tuple(int(s) for s in base["seeds"])
+    return QuerySpec(**base)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -141,6 +141,7 @@ class QueryContext:
         self._stranded = 0
         self._scopes: Dict[str, np.ndarray] = {}
         self._scope_dev: Dict[str, Tuple[int, jax.Array]] = {}
+        self._full_mask: Optional[jax.Array] = None
         self.evicted_docs_total = 0    # monitoring: docs retired by the ring
         if window is not None:
             if n0 > int(window):
@@ -318,6 +319,18 @@ class QueryContext:
 
     def scope_names(self) -> Tuple[str, ...]:
         return tuple(sorted(self._scopes))
+
+    def full_mask(self) -> jax.Array:
+        """All-ones ``(W,)`` doc bitmap — the canonical "unscoped" scope
+        operand.  ``masks & full == masks`` bit-exactly (slots past the
+        live docs hold no postings bits), so the engine can feed EVERY
+        batch a scope bitmap and serve scoped and unscoped plans of equal
+        shape through one executable (:func:`repro.core.query.canonical_exec_key`).
+        Cached per word count (only capacity growth changes W)."""
+        w = self._index.n_words
+        if self._full_mask is None or self._full_mask.shape[0] != w:
+            self._full_mask = jnp.full((w,), 0xFFFFFFFF, jnp.uint32)
+        return self._full_mask
 
     def scope(self, name: str) -> jax.Array:
         """Device bitmap of the named scope — the ``scope_mask`` operand of

@@ -104,7 +104,7 @@ def train(arch: str, *, steps: int = 20, batch: int = 8, seq: int = 64,
     cfg = get_config(arch)
     if isinstance(cfg, CoocConfig):
         raise ValueError("cooccur-csl is a query workload; see examples/ and "
-                         "repro.serve.CoocService")
+                         "repro.serve.CoocEngine / CoocServer")
     if reduce:
         cfg = reduced_config(cfg)
 

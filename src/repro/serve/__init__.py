@@ -1,12 +1,34 @@
 """Serving substrate: LM decode engine (continuous batching), the
 plan-aware micro-batched co-occurrence query engine (QuerySpec in,
-CoocFuture out), and the deprecated CoocService shim
-(the paper's real-time query + ingest scenario)."""
+CoocFuture out), and the asyncio multi-tenant serving front end
+(admission control, deadline-aware micro-batching, metrics) — the
+paper's real-time query + ingest scenario at service grade."""
+from repro.serve.admission import (  # noqa: F401
+    AdmissionController,
+    AdmissionDecision,
+    AdmissionPolicy,
+    StepTimeModel,
+    estimate_wait_ms,
+)
 from repro.serve.cooc_engine import (  # noqa: F401
     CoocEngine,
     CoocFuture,
     CoocRequest,
+    EngineClosedError,
     EngineStats,
 )
-from repro.serve.cooccur_service import CoocService, LatencyStats  # noqa: F401
 from repro.serve.engine import DecodeServer, Request  # noqa: F401
+from repro.serve.metrics import (  # noqa: F401
+    LatencyHistogram,
+    MetricsSnapshot,
+    QuantileSummary,
+    ServerMetrics,
+    TenantCounters,
+    percentile_ms,
+)
+from repro.serve.server import (  # noqa: F401
+    CoocServer,
+    ServeResponse,
+    ServerConfig,
+    TenantConfig,
+)

@@ -34,8 +34,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
+from collections import OrderedDict, deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +47,19 @@ from repro.core import (
     QueryContext,
     bfs_construct_batch,
 )
-from repro.core.query import PlanKey, QueryResult, QuerySpec, get_count_method
+from repro.core.query import (
+    PlanKey,
+    QueryResult,
+    QuerySpec,
+    canonical_exec_key,
+    get_count_method,
+)
+from repro.serve.metrics import percentile_ms
+
+
+class EngineClosedError(RuntimeError):
+    """Raised by :meth:`CoocEngine.submit` after :meth:`CoocEngine.shutdown`,
+    and set as the error on any request flushed by a non-draining shutdown."""
 
 
 @dataclasses.dataclass
@@ -125,8 +137,11 @@ class EngineStats:
     max_ms: float
     batches: int = 0
     mean_occupancy: float = 0.0   # mean admitted queries per executed batch
-    compiled_plans: int = 0       # distinct plan keys compiled so far
+    compiled_plans: int = 0       # distinct executables currently cached
     failed_total: int = 0         # requests resolved onto an error (cumulative)
+    p999_ms: float = 0.0          # tail quantile (shares percentile_ms with serve.metrics)
+    window: int = 0               # ring-buffer capacity the quantiles cover
+    plan_evictions: int = 0       # executables dropped by the compile budget (cumulative)
 
 
 class CoocEngine:
@@ -136,12 +151,19 @@ class CoocEngine:
     DEFAULT spec applied when :meth:`submit` receives a bare seed list —
     any mix of QuerySpecs flows through the same engine, grouped by plan.
     ``window`` bounds the stats ring buffers (and the ``finished`` log).
+    ``compile_budget`` bounds the per-plan executor cache (LRU): diverse or
+    hostile plan traffic evicts-and-recompiles instead of growing compiled
+    state without bound.  ``None`` leaves the cache unbounded.
     """
 
     def __init__(self, ctx, *, depth: int = 3, topk: int = 16, beam: int = 32,
                  q_batch: int = 8, method: str = "gemm", dedup: bool = True,
-                 on_overflow: str = "raise", window: int = 2048):
+                 on_overflow: str = "raise", window: int = 2048,
+                 compile_budget: Optional[int] = None):
         get_count_method(method)        # unknown method -> ValueError
+        if compile_budget is not None and compile_budget < 1:
+            raise ValueError(
+                f"compile_budget must be >= 1 or None, got {compile_budget}")
         if isinstance(ctx, PackedIndex):
             ctx = QueryContext(ctx)
         self.ctx: QueryContext = ctx
@@ -150,6 +172,7 @@ class CoocEngine:
         self.q_batch = q_batch
         self.on_overflow = on_overflow
         self.window = window
+        self.compile_budget = compile_budget
         self.queue: List[CoocRequest] = []
         self.finished: Deque[CoocRequest] = deque(maxlen=window)
         self.latencies_ms: Deque[float] = deque(maxlen=window)
@@ -157,32 +180,62 @@ class CoocEngine:
         self.served_total = 0
         self.batches_total = 0
         self.failed_total = 0
+        self.plan_evictions_total = 0
         self._next_rid = 0
-        self._executors: Dict[PlanKey, callable] = {}
+        self._closed = False
+        self._executors: "OrderedDict[PlanKey, callable]" = OrderedDict()
+        #: optional hook fired with each LRU-evicted exec key (the server
+        #: uses it to drop the key's step-time history, which would
+        #: otherwise predict warm times for a plan that must recompile)
+        self.on_plan_evict: Optional[Callable[[PlanKey], None]] = None
 
     # -- plan cache ---------------------------------------------------------
 
     @property
     def compiled_plans(self) -> int:
-        """Size of the per-plan executor cache: grows with DISTINCT plan
-        keys served, never with query count (acceptance metric)."""
+        """Size of the per-plan executor cache: grows with DISTINCT
+        executable identities served — never with query count, and never
+        past ``compile_budget`` (acceptance metric)."""
         return len(self._executors)
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def _executor(self, key: PlanKey):
-        """Jitted executable for ``key``.  The cache key collapses the
-        scope NAME to scoped-or-not: the scope bitmap is a traced operand,
-        so every scoped plan with equal shape fields shares one executable
-        — queries over "7d" and "30d" never compile twice.  The context's
-        mesh (if any) is baked into every executable: a mesh-bearing
-        engine serves every plan sharded, bit-exactly."""
-        exec_key = key._replace(scope=key.scope is not None)
+        """Jitted executable for ``key``, from the LRU-bounded cache.
+
+        The cache key is :func:`canonical_exec_key` — the scope NAME is
+        erased entirely, because :meth:`step` always passes a scope bitmap
+        operand (the named scope's, or the context's cached all-ones mask
+        for unscoped plans, which is the identity under AND).  Scoped and
+        unscoped plans with equal shape fields therefore share ONE
+        executable: queries over "7d", "30d" and no scope at all never
+        compile thrice.  The context's mesh (if any) is baked into every
+        executable: a mesh-bearing engine serves every plan sharded,
+        bit-exactly.
+
+        Dropping an evicted entry drops its ``jax.jit`` wrapper object,
+        which owns the compiled-executable cache — eviction genuinely
+        frees the compilation, and the next request for that plan pays a
+        fresh compile (bit-exact round trip; see tests).
+        """
+        exec_key = canonical_exec_key(key)
         fn = self._executors.get(exec_key)
-        if fn is None:
-            fn = jax.jit(functools.partial(
-                bfs_construct_batch, depth=key.depth, topk=key.topk,
-                beam=key.beam, dedup=key.dedup, method=key.method,
-                mesh=self.ctx.mesh))
-            self._executors[exec_key] = fn
+        if fn is not None:
+            self._executors.move_to_end(exec_key)
+            return fn
+        fn = jax.jit(functools.partial(
+            bfs_construct_batch, depth=key.depth, topk=key.topk,
+            beam=key.beam, dedup=key.dedup, method=key.method,
+            mesh=self.ctx.mesh))
+        self._executors[exec_key] = fn
+        if self.compile_budget is not None:
+            while len(self._executors) > self.compile_budget:
+                evicted, _ = self._executors.popitem(last=False)
+                self.plan_evictions_total += 1
+                if self.on_plan_evict is not None:
+                    self.on_plan_evict(evicted)
         return fn
 
     # -- query path ---------------------------------------------------------
@@ -203,6 +256,10 @@ class CoocEngine:
         (empty seeds, seeds exceeding the beam, unknown method) happens
         here, in QuerySpec — invalid queries never reach the device.
         """
+        if self._closed:
+            raise EngineClosedError(
+                "engine is shut down; create a new CoocEngine over the "
+                "context to serve further queries")
         if isinstance(query, QuerySpec):
             if overrides:
                 query = dataclasses.replace(query, **overrides)
@@ -243,17 +300,12 @@ class CoocEngine:
                 poisoned = [r for r in self.queue if r.spec.plan_key == key]
                 self.queue = [r for r in self.queue
                               if r.spec.plan_key != key]
-                t_done = time.perf_counter()
-                # failures are resolved requests: they enter the finished
-                # log, the latency window, and the failure counter, so
-                # EngineStats never silently under-reports a poisoned plan
-                for r in poisoned:
-                    r.error = e
-                    r.t_done = t_done
-                    self.latencies_ms.append(r.latency_ms)
-                    self.finished.append(r)
-                self.failed_total += len(poisoned)
-                return len(poisoned)
+                return self._fail_requests(poisoned, e)
+        else:
+            # unscoped plans pass the context's cached all-ones bitmap —
+            # the identity under AND — so they trace with the same operand
+            # signature as scoped plans and share their executable
+            kwargs["scope_mask"] = self.ctx.full_mask()
         admitted: List[CoocRequest] = []
         rest: List[CoocRequest] = []
         for req in self.queue:
@@ -290,6 +342,20 @@ class CoocEngine:
             self.served_total += 1
         return occ
 
+    def _fail_requests(self, reqs: List[CoocRequest], error: Exception) -> int:
+        """Resolve ``reqs`` onto their futures with ``error``.  Failures
+        are resolved requests: they enter the finished log, the latency
+        window, and the failure counter, so EngineStats never silently
+        under-reports a poisoned plan or a flushed shutdown."""
+        t_done = time.perf_counter()
+        for r in reqs:
+            r.error = error
+            r.t_done = t_done
+            self.latencies_ms.append(r.latency_ms)
+            self.finished.append(r)
+        self.failed_total += len(reqs)
+        return len(reqs)
+
     def run_until_drained(self, max_steps: int = 100000) -> List[CoocRequest]:
         """Step until the queue is empty; returns the (window-bounded)
         finished log as a list snapshot."""
@@ -297,6 +363,27 @@ class CoocEngine:
             if not self.queue:
                 break
             self.step()
+        return list(self.finished)
+
+    def shutdown(self, *, drain: bool = True) -> List[CoocRequest]:
+        """Close the engine: subsequent :meth:`submit` calls raise
+        :class:`EngineClosedError`.
+
+        With ``drain=True`` (default) every queued request is SERVED
+        before the engine closes — graceful shutdown.  With
+        ``drain=False`` queued requests are flushed: each pending future
+        resolves to an :class:`EngineClosedError` instead of hanging a
+        caller blocked in ``result()`` forever.  Idempotent; returns the
+        finished-log snapshot either way.
+        """
+        self._closed = True
+        if drain:
+            return self.run_until_drained()
+        flushed, self.queue = self.queue, []
+        if flushed:
+            self._fail_requests(flushed, EngineClosedError(
+                "engine shut down (drain=False) before this request was "
+                "served"))
         return list(self.finished)
 
     def query(self, seed_terms: Union[QuerySpec, Sequence[int]],
@@ -329,23 +416,29 @@ class CoocEngine:
 
     def stats(self) -> EngineStats:
         """Latency/occupancy percentiles over the ring-buffer window (the
-        last ``window`` queries/batches); cumulative totals live on
-        ``served_total`` / ``batches_total``.
+        last ``window`` queries/batches, the capacity surfaced on
+        ``EngineStats.window``); cumulative totals live on
+        ``served_total`` / ``batches_total`` / ``plan_evictions_total``.
 
-        Quantiles are ``np.percentile`` (linear interpolation) over a
-        snapshot of the window — the former hand-rolled ``xs[int(n * p)]``
-        index was off by one at exact rank multiples (e.g. p50 of 4
-        samples read the 3rd-smallest, not the midpoint).
+        Quantiles come from :func:`repro.serve.metrics.percentile_ms` —
+        the ONE quantile implementation shared with the server metrics
+        and the serving bench, so p50/p99/p999 can never disagree across
+        layers.  (The former hand-rolled ``xs[int(n * p)]`` index was off
+        by one at exact rank multiples.)
         """
         xs = np.fromiter(self.latencies_ms, dtype=np.float64)
         if xs.size == 0:
             return EngineStats(0, 0, 0, 0, 0,
                                compiled_plans=self.compiled_plans,
-                               failed_total=self.failed_total)
-        p50, p95, p99 = np.percentile(xs, [50.0, 95.0, 99.0])
+                               failed_total=self.failed_total,
+                               window=self.window,
+                               plan_evictions=self.plan_evictions_total)
+        p50, p95, p99, p999 = percentile_ms(xs)
         occ = self.batch_occupancy
-        return EngineStats(int(xs.size), float(p50), float(p95), float(p99),
+        return EngineStats(int(xs.size), p50, p95, p99,
                            float(xs.max()), batches=len(occ),
                            mean_occupancy=float(np.mean(occ)) if occ else 0.0,
                            compiled_plans=self.compiled_plans,
-                           failed_total=self.failed_total)
+                           failed_total=self.failed_total,
+                           p999_ms=p999, window=self.window,
+                           plan_evictions=self.plan_evictions_total)

@@ -21,7 +21,7 @@ from repro.core import (
 from repro.core import cooccurrence as C
 from repro.core.inverted_index import doc_freq_under_batch
 from repro.data import synthetic_csl
-from repro.serve import CoocEngine, CoocService
+from repro.serve import CoocEngine, EngineClosedError
 
 
 def _single(ctx, seed, *, depth=2, topk=6, beam=8, method="gemm"):
@@ -215,18 +215,19 @@ class TestCoocEngine:
         assert grow.query([2])[(2, 3)] == 3
 
 
-class TestServiceShim:
+class TestEngineValidation:
     def test_device_seed_overflow_raises(self):
         docs = synthetic_csl(100, 32, seed=2)
-        svc = CoocService(docs, 32, depth=1, topk=4, beam=4)
+        eng = CoocEngine(QueryContext.from_docs(docs, 32),
+                         depth=1, topk=4, beam=4)
         with pytest.raises(ValueError, match="exceed beam"):
-            svc.query([1, 2, 3, 4, 5])
+            eng.query([1, 2, 3, 4, 5])
 
     def test_ingest_overflow_raises(self):
-        svc = CoocService([[0, 1]] * 30, 4, capacity=32, depth=1, topk=3,
-                          beam=4)
+        eng = CoocEngine(QueryContext.from_docs([[0, 1]] * 30, 4, capacity=32),
+                         depth=1, topk=3, beam=4)
         with pytest.raises(CapacityError):
-            svc.ingest_docs([[2, 3]] * 3)
+            eng.ingest_docs([[2, 3]] * 3)
 
 
 class TestQuerySpec:
@@ -489,15 +490,12 @@ class TestIngestLongDocs:
         df = np.asarray(ctx.index.doc_freq)
         assert df[5] == 1 and df[6] == 0         # id 6 explicitly dropped
 
-    def test_engine_and_service_pass_through(self):
+    def test_engine_pass_through(self):
         docs = [[0, 1]] * 4
         eng = CoocEngine(QueryContext.from_docs(docs, 8, capacity=64),
                          depth=1, topk=3, beam=4, q_batch=1)
         with pytest.raises(ValueError, match="exceed max_len"):
             eng.ingest_docs([[0, 1, 2]], max_len=2)
-        svc = CoocService(docs, 8, capacity=64, depth=1, topk=3, beam=4)
-        with pytest.raises(ValueError, match="exceed max_len"):
-            svc.ingest_docs([[0, 1, 2]], max_len=2)
 
 
 class TestGrowVocab:
@@ -529,3 +527,124 @@ class TestBatchedConstructContext:
                                                    topk=4, beam=8))
         assert via_ctx == via_idx
         assert ctx.unpack_count == 1         # batch pulled the cached X
+
+
+class TestPlanCanonicalization:
+    """Satellite: specs differing only in non-semantic presentation
+    (request field order, filled defaults, scope naming) collapse to one
+    executable; the LRU compile budget evicts and recompiles bit-exactly."""
+
+    def _ctx(self):
+        docs = synthetic_csl(150, 32, seed=11)
+        ctx = QueryContext.from_docs(docs, 32, capacity=512)
+        ctx.ingest_docs([[1, 2, 3]] * 4, max_len=8, scope="hot")
+        return ctx
+
+    def test_request_field_order_and_defaults_collapse(self):
+        from repro.core import canonicalize_request
+        defaults = dict(depth=2, topk=4, beam=8, dedup=True, method="gemm")
+        a = canonicalize_request({"seeds": [3], "depth": 2, "topk": 4},
+                                 defaults=defaults)
+        b = canonicalize_request({"topk": 4, "depth": 2, "seeds": (3,)},
+                                 defaults=defaults)
+        c = canonicalize_request([3], defaults=defaults)
+        d = canonicalize_request(QuerySpec(seeds=(3,), depth=2, topk=4,
+                                           beam=8), defaults=defaults)
+        assert a == b == c == d
+        assert a.plan_key == d.plan_key
+        with pytest.raises(ValueError, match="unknown QuerySpec field"):
+            canonicalize_request({"seeds": [1], "depht": 2},
+                                 defaults=defaults)
+        with pytest.raises(ValueError, match="seeds"):
+            canonicalize_request({"depth": 2}, defaults=defaults)
+
+    def test_scoped_and_unscoped_share_one_executable(self):
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, depth=2, topk=4, beam=8, q_batch=2)
+        unscoped = eng.query([3])
+        scoped = eng.query(QuerySpec(seeds=(3,), depth=2, topk=4, beam=8,
+                                     scope="hot"))
+        assert eng.compiled_plans == 1           # one executable for both
+        # and both are still bit-exact vs the unbatched reference
+        assert unscoped == construct(
+            ctx, QuerySpec(seeds=(3,), depth=2, topk=4, beam=8)).edges()
+        assert scoped == construct(
+            ctx, QuerySpec(seeds=(3,), depth=2, topk=4, beam=8,
+                           scope="hot")).edges()
+
+    def test_lru_eviction_recompile_round_trip_bit_exact(self):
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, depth=2, topk=4, beam=8, q_batch=2,
+                         compile_budget=2)
+        first = eng.query([3])                   # plan A compiled
+        eng.query([3], depth=1)                  # plan B
+        assert eng.compiled_plans == 2
+        assert eng.plan_evictions_total == 0
+        eng.query([3], topk=2)                   # plan C -> evicts A (LRU)
+        assert eng.compiled_plans == 2           # bounded under 3 plans
+        assert eng.plan_evictions_total == 1
+        again = eng.query([3])                   # plan A recompiles
+        assert again == first                    # bit-exact round trip
+        assert eng.plan_evictions_total == 2     # B was LRU by then
+        assert eng.stats().plan_evictions == 2
+
+    def test_lru_recency_order(self):
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, depth=2, topk=4, beam=8, q_batch=2,
+                         compile_budget=2)
+        eng.query([3])                           # A
+        eng.query([3], depth=1)                  # B
+        eng.query([3])                           # touch A -> B is LRU
+        eng.query([3], topk=2)                   # C evicts B, not A
+        eng.query([3])                           # A still cached: no evict
+        assert eng.plan_evictions_total == 1
+
+    def test_eviction_hook_fires_with_exec_key(self):
+        from repro.core import canonical_exec_key
+        ctx = self._ctx()
+        eng = CoocEngine(ctx, depth=2, topk=4, beam=8, q_batch=2,
+                         compile_budget=1)
+        evicted = []
+        eng.on_plan_evict = evicted.append
+        eng.query([3])
+        eng.query([3], depth=1)
+        want = canonical_exec_key(eng.make_spec([3]).plan_key)
+        assert evicted == [want]
+
+
+class TestEngineLifecycle:
+    """Satellite: a shut-down engine rejects new work with a clear error
+    and never hangs in-flight futures."""
+
+    def _eng(self, **kw):
+        docs = synthetic_csl(80, 16, seed=5)
+        return CoocEngine(QueryContext.from_docs(docs, 16),
+                          depth=1, topk=3, beam=4, q_batch=2, **kw)
+
+    def test_submit_after_drain_shutdown_rejects(self):
+        eng = self._eng()
+        fut = eng.submit([3])
+        eng.shutdown(drain=True)
+        assert fut.done() and fut.result() is not None   # served on drain
+        with pytest.raises(EngineClosedError, match="shut down"):
+            eng.submit([3])
+        assert eng.closed
+
+    def test_nondrain_shutdown_flushes_futures(self):
+        eng = self._eng()
+        futs = [eng.submit([s]) for s in (1, 2, 3)]
+        eng.shutdown(drain=False)
+        for fut in futs:
+            assert fut.done()
+            with pytest.raises(EngineClosedError, match="before this"):
+                fut.result()
+        assert eng.failed_total == 3
+        assert eng.stats().failed_total == 3     # flushed, not lost
+        assert not eng.queue                     # queue really empty
+
+    def test_shutdown_idempotent(self):
+        eng = self._eng()
+        eng.shutdown()
+        eng.shutdown(drain=False)                # second call: no-op, no raise
+        with pytest.raises(EngineClosedError):
+            eng.submit([1])

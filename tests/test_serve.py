@@ -1,24 +1,26 @@
-"""Serving layers: the co-occurrence query service (the paper's target
-scenario — query + real-time ingest) and the LM decode engine."""
+"""Serving layers: the co-occurrence query engine (the paper's target
+scenario — query + real-time ingest; the deprecated CoocService shim is
+gone, these run on CoocEngine directly) and the LM decode engine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config, replace
-from repro.core import bfs_construct_host, incidence_dense, pack_docs
+from repro.core import QueryContext, bfs_construct_host, incidence_dense, pack_docs
 from repro.data import synthetic_csl
 from repro.launch.train import reduced_config
 from repro.models import transformer as T
-from repro.serve import CoocService, DecodeServer
+from repro.serve import CoocEngine, DecodeServer
 
 
-class TestCoocService:
+class TestCoocEngineServing:
     def test_query_matches_reference(self):
         docs = synthetic_csl(300, 64, seed=0)
-        svc = CoocService(docs, 64, depth=2, topk=6, beam=8)
-        got = svc.query([3])
-        x = np.asarray(incidence_dense(svc.index))[:300].astype(bool)
+        eng = CoocEngine(QueryContext.from_docs(docs, 64),
+                         depth=2, topk=6, beam=8)
+        got = eng.query([3])
+        x = np.asarray(incidence_dense(eng.ctx.index))[:300].astype(bool)
         ref = {}
         for s, d, w in bfs_construct_host(x, 3, 2, 6, beam=8):
             k = (min(s, d), max(s, d))
@@ -29,22 +31,26 @@ class TestCoocService:
         """The paper's 'real-time' property: newly ingested docs are visible
         to the very next query, no rebuild."""
         docs = [[0, 1]] * 5 + [[0, 2]] * 3
-        svc = CoocService(docs, 8, depth=1, topk=3, beam=4, capacity=64)
-        before = svc.query([0])
+        eng = CoocEngine(QueryContext.from_docs(docs, 8, capacity=64),
+                         depth=1, topk=3, beam=4)
+        before = eng.query([0])
         assert before[(0, 1)] == 5
-        svc.ingest_docs([[0, 2]] * 4)            # now (0,2) outweighs (0,1)
-        after = svc.query([0])
+        eng.ingest_docs([[0, 2]] * 4)            # now (0,2) outweighs (0,1)
+        after = eng.query([0])
         assert after[(0, 2)] == 7
         assert after[(0, 1)] == 5
 
     def test_latency_stats_recorded(self):
         docs = synthetic_csl(100, 32, seed=1)
-        svc = CoocService(docs, 32, depth=1, topk=4, beam=4)
+        eng = CoocEngine(QueryContext.from_docs(docs, 32),
+                         depth=1, topk=4, beam=4)
         for s in range(5):
-            svc.query([s])
-        st = svc.stats()
+            eng.query([s])
+        st = eng.stats()
         assert st.n == 5
         assert st.p50_ms > 0
+        assert st.p999_ms >= st.p99_ms >= st.p50_ms
+        assert st.window == eng.window
 
 
 class TestDecodeServer:

@@ -1,0 +1,332 @@
+"""The async serving subsystem: admission control, the step-time model,
+deadline-aware micro-batching, tenancy isolation, and the metrics layer.
+
+Async paths run through ``asyncio.run`` inside sync test functions (the
+container has no pytest-asyncio).  Server tests use tiny corpora: the
+first jit of the BFS path dominates wall time, and every test shares one
+plan shape where possible so the compile is paid once per test, not per
+request.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import QueryContext, QuerySpec, construct
+from repro.data import synthetic_csl
+from repro.serve import (
+    AdmissionController,
+    AdmissionPolicy,
+    CoocServer,
+    ServerConfig,
+    ServerMetrics,
+    StepTimeModel,
+    TenantConfig,
+    estimate_wait_ms,
+    percentile_ms,
+)
+from repro.serve.metrics import LatencyHistogram, QuantileSummary
+
+
+class TestAdmission:
+    def test_queue_depth_bound(self):
+        ctl = AdmissionController(AdmissionPolicy(max_queue_depth=2))
+        assert ctl.decide(queue_depth=0)
+        assert ctl.decide(queue_depth=1)
+        d = ctl.decide(queue_depth=2)
+        assert not d and d.reason == "queue_full"
+        assert ctl.counters() == (2, 1, 1, 0)
+
+    def test_est_wait_bound(self):
+        ctl = AdmissionController(
+            AdmissionPolicy(max_queue_depth=10, max_wait_ms=100.0))
+        assert ctl.decide(queue_depth=1, est_wait_ms=99.0)
+        d = ctl.decide(queue_depth=1, est_wait_ms=101.0)
+        assert not d and d.reason == "est_wait" and d.est_wait_ms == 101.0
+        assert ctl.shed_est_wait == 1
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError, match="max_queue_depth"):
+            AdmissionPolicy(max_queue_depth=0)
+        with pytest.raises(ValueError, match="max_wait_ms"):
+            AdmissionPolicy(max_wait_ms=-1.0)
+
+    def test_step_time_model_cold_prior_and_forget(self):
+        m = StepTimeModel(window=3, cold_ms=5000.0)
+        assert m.predict("k") == 5000.0          # unseen => compile prior
+        for ms in (10.0, 20.0, 30.0, 40.0):
+            m.observe("k", ms)
+        assert m.predict("k") == pytest.approx(30.0)   # window of last 3
+        m.forget("k")                             # eviction => cold again
+        assert m.predict("k") == 5000.0
+
+    def test_estimate_wait_groups_by_executable(self):
+        m = StepTimeModel(cold_ms=1000.0)
+        m.observe("a", 100.0)
+        # 5 of plan a through q_batch=4 -> 2 steps; 1 cold plan b -> prior
+        est = estimate_wait_ms(["a"] * 5 + ["b"], m, q_batch=4)
+        assert est == pytest.approx(2 * 100.0 + 1000.0)
+
+    def test_estimate_wait_inflight_cold_pins_full_prediction(self):
+        m = StepTimeModel(cold_ms=1000.0)
+        # a cold in-flight step's remainder never shrinks with elapsed
+        # time — its true (compile) cost is unknown
+        est = estimate_wait_ms([], m, q_batch=4, inflight_key="c",
+                               inflight_elapsed_ms=900.0)
+        assert est == pytest.approx(1000.0)
+        m.observe("c", 100.0)
+        est = estimate_wait_ms([], m, q_batch=4, inflight_key="c",
+                               inflight_elapsed_ms=40.0)
+        assert est == pytest.approx(60.0)        # warm: remainder shrinks
+
+
+class TestMetrics:
+    def test_percentile_ms_is_shared_and_empty_safe(self):
+        assert percentile_ms([]) == (0.0, 0.0, 0.0, 0.0)
+        xs = list(range(1, 1001))
+        p50, p95, p99, p999 = percentile_ms(xs)
+        assert (p50, p99) == (np.percentile(xs, 50), np.percentile(xs, 99))
+        assert p999 == pytest.approx(np.percentile(xs, 99.9))
+
+    def test_histogram_is_ring_bounded(self):
+        h = LatencyHistogram(window=4)
+        for v in (1, 2, 3, 4, 100):
+            h.observe(v)
+        s = h.summary()
+        assert len(h) == 4 and s.window == 4
+        assert s.max_ms == 100.0 and s.n == 4    # the 1 fell out
+
+    def test_quantile_summary_ordering(self):
+        s = QuantileSummary.of([5.0, 1.0, 9.0, 3.0], window=16)
+        assert s.p50_ms <= s.p95_ms <= s.p99_ms <= s.p999_ms <= s.max_ms
+
+    def test_server_metrics_snapshot_and_render(self):
+        m = ServerMetrics(window=8)
+        m.tenant("a").submitted += 3
+        m.tenant("a").served += 2
+        m.tenant("a").shed += 1
+        m.tenant("b").submitted += 1
+        m.tenant("b").deadline_misses += 1
+        m.observe_latency("a", 10.0)
+        m.observe_latency("a", 30.0)
+        m.note_queue_depth(5)
+        m.note_queue_depth(2)
+        snap = m.snapshot(compiled_plans=3, plan_evictions=1)
+        assert snap.submitted_total == 4
+        assert snap.shed_rate == pytest.approx(0.25)
+        assert snap.deadline_miss_rate == pytest.approx(0.25)
+        assert snap.queue_depth == 2 and snap.peak_queue_depth == 5
+        assert snap.tenants["a"].latency.n == 2
+        assert snap.compiled_plans == 3 and snap.plan_evictions == 1
+        text = m.render(snap)
+        assert 'cooc_serve_shed_total{tenant="a"} 1' in text
+        assert "cooc_serve_compiled_plans 3" in text
+        assert "cooc_serve_peak_queue_depth 5" in text
+
+    def test_snapshot_counters_are_frozen_copies(self):
+        m = ServerMetrics()
+        m.tenant("a").served += 1
+        snap = m.snapshot()
+        m.tenant("a").served += 10
+        assert snap.tenants["a"].counters.served == 1
+
+
+def _ctx(n_docs=120, vocab=32, seed=7, **kw):
+    return QueryContext.from_docs(synthetic_csl(n_docs, vocab, seed=seed),
+                                  vocab, **kw)
+
+
+def _server(ctx, tenants, **cfg_kw):
+    cfg = dict(depth=1, topk=4, beam=8, q_batch=4, compile_budget=4,
+               default_deadline_ms=120000.0, linger_ms=5.0)
+    cfg.update(cfg_kw)
+    return CoocServer(ctx, tenants=tenants, config=ServerConfig(**cfg))
+
+
+class TestCoocServer:
+    def test_served_result_matches_construct(self):
+        async def go():
+            ctx = _ctx()
+            server = _server(ctx, [TenantConfig("t")])
+            await server.start()
+            resp = await server.submit("t", [3])
+            await server.stop()
+            return ctx, resp
+
+        ctx, resp = asyncio.run(go())
+        assert resp.ok and resp.latency_ms > 0
+        spec = QuerySpec(seeds=(3,), depth=1, topk=4, beam=8)
+        assert resp.result.edges() == construct(ctx, spec).edges()
+
+    def test_concurrent_submits_batch_together(self):
+        async def go():
+            ctx = _ctx()
+            server = _server(ctx, [TenantConfig("t")], linger_ms=200.0)
+            await server.start()
+            await server.submit("t", [1])        # pay the compile alone
+            resps = await asyncio.gather(
+                *[server.submit("t", [s]) for s in (2, 3, 4, 5)])
+            await server.stop()
+            return resps
+
+        resps = asyncio.run(go())
+        assert all(r.ok for r in resps)
+        # the linger window coalesces the 4 concurrent same-plan submits
+        assert max(r.result.batch_occupancy for r in resps) >= 2
+
+    def test_burst_sheds_with_bounded_queue(self):
+        async def go():
+            ctx = _ctx()
+            server = _server(
+                ctx, [TenantConfig("t")],
+                policy=AdmissionPolicy(max_queue_depth=3))
+            await server.start()
+            await server.submit("t", [1])        # warm the executable
+            resps = await asyncio.gather(
+                *[server.submit("t", [s % 8 + 1]) for s in range(24)])
+            snap = server.snapshot()
+            await server.stop()
+            return resps, snap
+
+        resps, snap = asyncio.run(go())
+        shed = [r for r in resps if r.status == "shed"]
+        assert shed and all(r.reason == "queue_full" for r in shed)
+        assert all(r.result is None for r in shed)
+        assert snap.peak_queue_depth <= 3
+        assert snap.shed_total == len(shed)
+        assert all(r.ok or r.status == "shed" for r in resps)
+
+    def test_expired_in_queue_resolves_as_deadline_miss(self):
+        async def go():
+            ctx = _ctx()
+            server = _server(ctx, [TenantConfig("t")])
+            await server.start()
+            await server.submit("t", [1])        # warm (compile paid here)
+            # a deadline far smaller than one step: expires in queue while
+            # the first submit's sibling batch occupies the lane
+            first = asyncio.create_task(server.submit("t", [2]))
+            doomed = asyncio.create_task(
+                server.submit("t", [3], deadline_ms=0.000001))
+            r1, r2 = await asyncio.gather(first, doomed)
+            snap = server.snapshot()
+            await server.stop()
+            return r1, r2, snap
+
+        r1, r2, snap = asyncio.run(go())
+        assert r1.ok
+        assert r2.status == "deadline_miss"
+        assert snap.deadline_miss_total >= 1
+
+    def test_tenant_scope_isolation(self):
+        async def go():
+            ctx = _ctx(capacity=512)
+            ctx.ingest_docs([[1, 2]] * 5, max_len=4, scope="mine")
+            ctx.ingest_docs([[1, 3]] * 7, max_len=4, scope="theirs")
+            server = _server(ctx, [TenantConfig("a", scope="mine"),
+                                   TenantConfig("b")])
+            await server.start()
+            scoped = await server.submit("a", [1])
+            forbidden = await server.submit(
+                "a", dict(seeds=[1], scope="theirs"))
+            unscoped = await server.submit("b", [1])
+            await server.stop()
+            return ctx, scoped, forbidden, unscoped
+
+        ctx, scoped, forbidden, unscoped = asyncio.run(go())
+        # the scoped tenant's request was forced into its scope
+        assert scoped.ok
+        assert scoped.result.edges() == construct(
+            ctx, QuerySpec(seeds=(1,), depth=1, topk=4, beam=8,
+                           scope="mine")).edges()
+        assert scoped.result.edges()[(1, 2)] == 5
+        assert (1, 3) not in scoped.result.edges()
+        # naming another tenant's scope is an error response, not data
+        assert forbidden.status == "error"
+        assert "forbidden_scope" in forbidden.reason
+        # the unscoped tenant sees the whole index — the "theirs" docs
+        # plus whatever the synthetic corpus contributes
+        assert unscoped.result.edges()[(1, 3)] >= 7
+
+    def test_dedicated_context_tenant_is_isolated(self):
+        async def go():
+            shared = _ctx(capacity=256)
+            own = QueryContext.from_docs([[5, 6]] * 4, 32, capacity=256)
+            server = _server(shared, [TenantConfig("pub"),
+                                      TenantConfig("vip", ctx=own)])
+            await server.start()
+            vip = await server.submit("vip", [5])
+            await server.ingest("vip", [[5, 7]] * 9, max_len=4)
+            vip2 = await server.submit("vip", [5])
+            pub = await server.submit("pub", [5])
+            await server.stop()
+            return vip, vip2, pub
+
+        vip, vip2, pub = asyncio.run(go())
+        assert vip.result.edges() == {(5, 6): 4}
+        assert vip2.result.edges()[(5, 7)] == 9   # ingest visible at once
+        # the shared-context tenant never sees the dedicated corpus
+        assert (5, 6) not in pub.result.edges()
+
+    def test_unknown_tenant_and_bad_request(self):
+        async def go():
+            server = _server(_ctx(), [TenantConfig("t")])
+            await server.start()
+            with pytest.raises(KeyError, match="unknown tenant"):
+                await server.submit("ghost", [1])
+            bad = await server.submit("t", {"seeds": [1], "depht": 2})
+            await server.stop()
+            return bad
+
+        bad = asyncio.run(go())
+        assert bad.status == "error" and "bad_request" in bad.reason
+
+    def test_stop_without_drain_flushes_futures(self):
+        async def go():
+            server = _server(_ctx(), [TenantConfig("t")])
+            await server.start()
+            await server.submit("t", [1])        # warm
+            # saturate, then stop(drain=False) while requests are queued
+            pending = [asyncio.create_task(server.submit("t", [s % 8 + 1]))
+                       for s in range(12)]
+            await asyncio.sleep(0)               # let them enqueue
+            await server.stop(drain=False)
+            return await asyncio.gather(*pending)
+
+        resps = asyncio.run(go())
+        # every future resolved — served, or flushed as a shutdown error
+        assert all(r.status in ("ok", "error", "deadline_miss")
+                   for r in resps)
+        assert any(r.reason == "server_shutdown" for r in resps)
+
+    def test_compile_budget_enforced_across_server(self):
+        async def go():
+            server = _server(_ctx(), [TenantConfig("t")], compile_budget=2)
+            await server.start()
+            for beam in (8, 16, 24):             # 3 distinct executables
+                r = await server.submit("t", dict(seeds=[1], beam=beam))
+                assert r.ok
+            snap = server.snapshot()
+            await server.stop()
+            return snap
+
+        snap = asyncio.run(go())
+        assert snap.compiled_plans <= 2
+        assert snap.plan_evictions >= 1
+
+    def test_metrics_accumulate_across_phases(self):
+        async def go():
+            server = _server(_ctx(capacity=512),
+                             [TenantConfig("t", scope="s")])
+            await server.start()
+            await server.ingest("t", [[1, 2]] * 3, max_len=4)
+            await server.submit("t", [1])
+            text = server.render_metrics()
+            snap = server.snapshot()
+            await server.stop()
+            return text, snap
+
+        text, snap = asyncio.run(go())
+        assert snap.tenants["t"].counters.ingested_docs == 3
+        assert snap.served_total == 1
+        assert snap.latency.n == 1
+        assert 'cooc_serve_ingested_docs_total{tenant="t"} 3' in text

@@ -366,9 +366,11 @@ class TestEngineScopedServing:
         futs = [eng.submit(s) for s in specs]
         for fut, spec in zip(futs, specs):
             assert fut.result().edges() == construct(ctx, spec).edges()
-        # "a" and "b" share ONE scoped executable; unscoped is the second —
-        # the executor cache never grows per scope NAME
-        assert eng.compiled_plans == 2
+        # "a", "b" AND the unscoped plan share ONE executable: the engine
+        # always passes a scope-bitmap operand (all-ones when unscoped),
+        # so the executor cache never grows per scope name or per
+        # scoped-vs-not — only per shape-affecting plan field
+        assert eng.compiled_plans == 1
 
     def test_unknown_scope_fails_at_submit_with_queue_intact(self):
         """Regression: an unknown scope must be rejected at submit — a
