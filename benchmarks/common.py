@@ -1,12 +1,13 @@
 """Shared benchmark utilities: timing, memory tracking, CSV/JSON emission."""
 from __future__ import annotations
 
-import csv
 import json
 import os
 import time
 import tracemalloc
 from typing import Callable, Dict, List, Tuple
+
+from repro.core.atomic_io import atomic_write_text, csv_text
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
@@ -34,13 +35,11 @@ def host_peak_bytes(fn: Callable, *args) -> Tuple[int, float, object]:
 
 
 def write_csv(name: str, rows: List[Dict]) -> str:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    # atomic commit (temp -> fsync -> rename): a crash mid-run leaves the
+    # previous CSV intact, never a truncated one
     path = os.path.join(RESULTS_DIR, f"{name}.csv")
     if rows:
-        with open(path, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
-            w.writeheader()
-            w.writerows(rows)
+        atomic_write_text(path, csv_text(rows, list(rows[0].keys())))
     return os.path.normpath(path)
 
 
@@ -51,13 +50,13 @@ def write_bench_json(name: str, records: List[Dict], *,
     (``[{"name": ..., "value": ...}, ...]``) plus run metadata — the
     repo's perf trajectory is tracked from these artifacts (CI uploads
     them per run), so the schema is versioned and append-only."""
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    # these files double as the committed CI perf baseline — an in-place
+    # "w" open would truncate the baseline the moment a crash landed
+    # mid-dump, so the write goes through the atomic commit protocol
     path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
-    with open(path, "w") as f:
-        json.dump({"schema": 1, "bench": name, "quick": bool(quick),
-                   "generated_unix": time.time(),
-                   "records": records}, f, indent=2)
-        f.write("\n")
+    doc = {"schema": 1, "bench": name, "quick": bool(quick),
+           "generated_unix": time.time(), "records": records}
+    atomic_write_text(path, json.dumps(doc, indent=2) + "\n")
     return os.path.normpath(path)
 
 
@@ -97,10 +96,17 @@ def compare_records(baseline: Dict[str, float], records: List[Dict], *,
     """(report lines, regressed metric names): each current record vs the
     baseline, flagging directional moves worse than ``threshold``
     (relative).  Metrics with no recognized direction, no baseline, or a
-    non-positive baseline are shown but never regress."""
+    non-positive baseline are shown but never regress.
+
+    The comparison is two-sided: a baseline metric the run no longer
+    produces is a MISSING regression when it is gateable (silently
+    deleting a tracked throughput metric must not pass the perf gate),
+    and is reported either way."""
     lines, regressed = [], []
+    seen = set()
     for r in records:
         name, new = r["name"], r["value"]
+        seen.add(name)
         old = baseline.get(name)
         if old is None:
             lines.append(f"  {name}: {new:.6g}  (no baseline)")
@@ -116,6 +122,14 @@ def compare_records(baseline: Dict[str, float], records: List[Dict], *,
                      f"({rel:+.1%}, {direction} is better)  [{flag}]")
         if worse > threshold:
             regressed.append(name)
+    for name in sorted(set(baseline) - seen):
+        if metric_direction(name) is not None:
+            lines.append(f"  {name}: {baseline[name]:.6g} -> MISSING  "
+                         "[REGRESSED]")
+            regressed.append(name)
+        else:
+            lines.append(f"  {name}: {baseline[name]:.6g} -> missing  "
+                         "(not gated)")
     return lines, regressed
 
 

@@ -81,6 +81,22 @@ def parse_duration(spec: str) -> Optional[float]:
     return float(m.group(1)) * _DURATION_SECONDS[m.group(2)]
 
 
+def _resolve_mesh(mesh, devices):
+    """mesh= (prebuilt) XOR devices= (an int takes the first N local
+    devices, a sequence is used as given; terms are the split axis —
+    ``make_cooc_mesh(shard="docs")`` callers pass mesh=)."""
+    if mesh is not None and devices is not None:
+        raise ValueError("pass mesh= (a prebuilt query mesh) OR "
+                         "devices= (a device count/list to build a "
+                         "term-sharded one over), not both")
+    if devices is not None:
+        from repro.core.distributed import make_cooc_mesh
+        if isinstance(devices, int):
+            return make_cooc_mesh(devices)
+        return make_cooc_mesh(devices=devices)
+    return mesh
+
+
 class CoocIndex:
     """Text-level co-occurrence index: tokenizer + lexicon + live packed
     index + plan-aware query engine.
@@ -99,32 +115,23 @@ class CoocIndex:
                  dedup: bool = True, method: str = "gemm", q_batch: int = 8,
                  stopwords: Set[str] = DEFAULT_STOPWORDS,
                  on_overflow: str = "grow", window: Optional[int] = None,
-                 mesh=None, devices=None):
+                 mesh=None, devices=None, cold_store=None):
         if capacity is not None and window is not None:
             raise ValueError(
                 f"capacity={capacity} and window={window} are contradictory:"
                 " window mode pins the doc buffer at ceil(window/32)*32"
                 " slots and reuses them forever — pass only one")
-        if mesh is not None and devices is not None:
-            raise ValueError("pass mesh= (a prebuilt query mesh) OR "
-                             "devices= (a device count/list to build a "
-                             "term-sharded one over), not both")
-        if devices is not None:
-            # opt-in distributed serving: an int takes the first N local
-            # devices, a sequence is used as given; terms are the split
-            # axis (make_cooc_mesh(shard="docs") callers pass mesh=)
-            from repro.core.distributed import make_cooc_mesh
-            if isinstance(devices, int):
-                mesh = make_cooc_mesh(devices)
-            else:
-                mesh = make_cooc_mesh(devices=devices)
+        mesh = _resolve_mesh(mesh, devices)
         self.lexicon = Lexicon()
         self.stopwords = stopwords
         # window mode: no pre-allocation — set_window owns the ring sizing
         cap = max(int(capacity or 1024), 32) if window is None else 32
+        if cold_store is not None:
+            from repro.core.storage import make_storage
+            cold_store = make_storage(cold_store)
         self.ctx = QueryContext.from_docs([], max(int(vocab_capacity), 1),
                                           capacity=cap, window=window,
-                                          mesh=mesh)
+                                          mesh=mesh, cold_store=cold_store)
         self.engine = CoocEngine(self.ctx, depth=depth, topk=topk, beam=beam,
                                  dedup=dedup, method=method, q_batch=q_batch,
                                  on_overflow=on_overflow)
@@ -164,6 +171,10 @@ class CoocIndex:
                 "syntax ('7d', '24h', ...); a later query(scope="
                 f"{source!r}) would silently overwrite the tag with a "
                 "time bucket — pick a non-duration name")
+        if source == "all-time":
+            raise ValueError(
+                "source tag 'all-time' is reserved for the cold-tier scope "
+                "(live + evicted docs); pick another name")
         if self.ctx.window is not None and len(texts) > self.ctx.window:
             # reject BEFORE interning: the lexicon must not keep phantom
             # terms for a batch that never indexes
@@ -278,6 +289,13 @@ class CoocIndex:
             while len(self._bucket_state) > MAX_TIME_BUCKETS:
                 old = next(iter(self._bucket_state))
                 del self._bucket_state[old]
+                # flush the lane BEFORE dropping: engine requests already
+                # accepted against the evicted bucket may still be queued,
+                # and dropping their bitmap would poison (fail) them at
+                # step time — the 33rd distinct duration scope must never
+                # fail the first 32's queries
+                while any(r.spec.scope == old for r in self.engine.queue):
+                    self.engine.step()
                 self.ctx.drop_scope(old)
             return scope
         if scope not in self.ctx.scope_names():
@@ -327,6 +345,13 @@ class CoocIndex:
 
     def _materialize(self, k, scope, now, method,
                      **kwargs):
+        if scope == "all-time":
+            # the cold-tier scope: not a time bucket or tag — live docs
+            # plus every evicted block spilled to the cold store answer
+            # together (core.materialize resolves the tiers)
+            return materialize(self.ctx, k=int(k),
+                               method=method or self.engine.method,
+                               scope="all-time", **kwargs)
         name = self._resolve_scope(scope, now)
         return materialize(self.ctx, k=int(k),
                            method=method or self.engine.method, scope=name,
@@ -362,6 +387,92 @@ class CoocIndex:
         report.  Same k/scope/method semantics as :meth:`full_network`."""
         net = self._materialize(k, scope, now, method, **kwargs)
         return global_statistics(net, self.ctx.vocab_size)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path: str, *, keep: int = 2) -> str:
+        """Snapshot the ENTIRE index state under ``path`` — packed
+        postings, lexicon, streaming ring + scopes, doc timestamps,
+        time-bucket state, engine plan defaults, and any cold-tier blocks
+        — through the crash-safe commit protocol
+        (:mod:`repro.core.snapshot`: versioned blobs + checksums, the
+        ``CURRENT`` pointer swings only after everything is fsync'd).
+        ``keep`` retains that many snapshot generations.
+
+        :meth:`load` restores an index that answers every query
+        bit-exactly like this one (values AND tie order); warm caches
+        rebuild lazily on first use.
+        """
+        from repro.core import snapshot
+        extra_arrays = {"doc_time": np.asarray(self._doc_time, np.float64)}
+        extra_meta = {
+            "kind": "cooc",
+            "cooc": {
+                "lexicon": list(self.lexicon.id_to_term),
+                "stopwords": sorted(self.stopwords),
+                "engine": {"depth": self.engine.depth,
+                           "topk": self.engine.topk,
+                           "beam": self.engine.beam,
+                           "dedup": self.engine.dedup,
+                           "method": self.engine.method,
+                           "q_batch": self.engine.q_batch,
+                           "on_overflow": self.engine.on_overflow,
+                           "window": self.engine.window},
+                "bucket_state": {k: [int(e), float(c)]
+                                 for k, (e, c) in self._bucket_state.items()},
+            },
+        }
+        return snapshot.save_context(self.ctx, path,
+                                     extra_arrays=extra_arrays,
+                                     extra_meta=extra_meta, keep=keep)
+
+    @classmethod
+    def load(cls, path: str, *, mesh=None, devices=None, cold_store=None,
+             verify: bool = True) -> "CoocIndex":
+        """Restore a :meth:`save` snapshot.  ``mesh``/``devices`` are
+        restore-time choices (the same snapshot restores single-device or
+        sharded, bit-identically); ``cold_store`` receives the snapshot's
+        spilled blocks (same ``make_storage`` configs as the constructor;
+        a fresh in-memory dict when omitted and the snapshot has any)."""
+        from repro.core import snapshot
+        from repro.core.storage import make_storage
+        mesh = _resolve_mesh(mesh, devices)
+        if cold_store is not None:
+            cold_store = make_storage(cold_store)
+        arrays, meta = snapshot.read_snapshot(path, verify=verify)
+        if meta.get("kind") != "cooc":
+            raise snapshot.SnapshotError(
+                f"snapshot under {path!r} is a bare context (kind="
+                f"{meta.get('kind')!r}); restore it with "
+                "repro.core.snapshot.load_context instead")
+        ctx = snapshot.context_from_state(arrays, meta, mesh=mesh,
+                                          cold_store=cold_store)
+        cm = meta["cooc"]
+        eng = cm["engine"]
+        idx = cls.__new__(cls)
+        idx.lexicon = Lexicon()
+        for term in cm["lexicon"]:
+            idx.lexicon.add(term)
+        idx.stopwords = set(cm["stopwords"])
+        idx.ctx = ctx
+        idx.engine = CoocEngine(ctx, depth=int(eng["depth"]),
+                                topk=int(eng["topk"]), beam=int(eng["beam"]),
+                                dedup=bool(eng["dedup"]),
+                                method=eng["method"],
+                                q_batch=int(eng["q_batch"]),
+                                on_overflow=eng["on_overflow"],
+                                window=int(eng.get("window", 2048)))
+        doc_time = np.asarray(arrays["doc_time"], np.float64)
+        cap = ctx.index.capacity
+        if cap > len(doc_time):
+            doc_time = np.pad(doc_time, (0, cap - len(doc_time)))
+        idx._doc_time = doc_time
+        idx._lt_epoch = -1
+        idx._lt_slots = np.zeros((0,), np.int64)
+        idx._lt_times = np.zeros((0,), np.float64)
+        idx._bucket_state = {k: (int(v[0]), float(v[1]))
+                             for k, v in cm["bucket_state"].items()}
+        return idx
 
     # -- introspection ------------------------------------------------------
 

@@ -61,6 +61,26 @@ from repro.core.network import (  # noqa: F401
     top_edges,
 )
 from repro.core.materialize import materialize  # noqa: F401
+from repro.core.atomic_io import (  # noqa: F401
+    atomic_write_bytes,
+    atomic_write_text,
+    commit_dir,
+    staged_dir,
+)
+from repro.core.storage import (  # noqa: F401
+    ColdBlock,
+    FileStorage,
+    decode_block,
+    encode_block,
+    make_storage,
+)
+from repro.core.snapshot import (  # noqa: F401
+    SnapshotError,
+    load_context,
+    read_snapshot,
+    save_context,
+    write_snapshot,
+)
 from repro.core.distributed import (  # noqa: F401
     make_cooc_mesh,
     n_shards,

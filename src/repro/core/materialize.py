@@ -200,7 +200,10 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
     scope NAME (time bucket, source tag); scope_mask: an explicit (W,)
     uint32 doc bitmap (mutually exclusive with ``scope``).  Either way the
     result is exactly the network of an index holding only the scoped
-    documents.
+    documents.  The reserved name ``scope="all-time"`` widens instead of
+    narrowing: live docs PLUS every window-evicted block spilled to the
+    context's cold store (``QueryContext(cold_store=...)``) answer
+    together, exactly as if nothing had ever been evicted.
 
     Returns a :class:`CoocNetwork` with ``V * k`` edge slots — slot
     ``i*k + j`` is term ``i``'s j-th heaviest neighbor (``src=i``), ties
@@ -240,6 +243,34 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
     if shard_strategy not in ("auto", "rows", "cols"):
         raise ValueError(f"shard_strategy must be 'auto', 'rows' or 'cols', "
                          f"got {shard_strategy!r}")
+
+    if scope == "all-time":
+        # the cold-tier scope: live docs + every evicted block spilled to
+        # the context's cold store, answered through this same tiled path
+        # over the stacked bitmap (counts are additive over disjoint doc
+        # sets).  Cached per (epoch, cold_version): live ingest moves the
+        # epoch, a new spill moves the version — either invalidates.
+        combined = ctx.all_time_index()
+        if combined is ctx.index:
+            # nothing spilled (or no cold store): all-time == live
+            scope = None
+        else:
+            cache_key = None
+            ver = ctx.cold_version()
+            if use_cache:
+                mesh_key = (tuple(int(d.id) for d in mesh.devices.flat)
+                            if mesh is not None else None)
+                cache_key = ("materialize", "all-time", k, method, row_tile,
+                             col_tile, mesh_key, shard_strategy)
+                hit = ctx.cached_artifact(cache_key, ver)
+                if hit is not None:
+                    return hit
+            net = materialize(combined, k=k, method=method,
+                              row_tile=row_tile, col_tile=col_tile,
+                              mesh=mesh, shard_strategy=shard_strategy)
+            if cache_key is not None:
+                ctx.store_artifact(cache_key, net, ver)
+            return net
     strategy = None if mesh is None else (
         "rows" if shard_strategy == "auto" else shard_strategy)
 

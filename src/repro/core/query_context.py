@@ -102,11 +102,17 @@ class QueryContext:
     """Packed index + epoch-versioned caches + method dispatch table."""
 
     def __init__(self, index: PackedIndex, *, dtype=jnp.bfloat16,
-                 window: Optional[int] = None, mesh=None):
+                 window: Optional[int] = None, mesh=None, cold_store=None):
         if mesh is not None:
             from repro.core.distributed import validate_mesh
             validate_mesh(mesh)
         self._mesh = mesh
+        # cold tier: a dict-like (MutableMapping[str, bytes]) store; when
+        # set, every evicted block is spilled (re-packed + df) BEFORE its
+        # postings bits are cleared, and scope="all-time" materialization
+        # re-queries live + cold together (core.storage, core.materialize)
+        self._cold = cold_store
+        self._cold_seq = 0        # next spill key / cold-tier version
         self._index = index
         self._dtype = dtype
         self.epoch = 0
@@ -158,9 +164,11 @@ class QueryContext:
     @classmethod
     def from_docs(cls, doc_terms: Sequence[Sequence[int]], vocab_size: int, *,
                   capacity: Optional[int] = None, dtype=jnp.bfloat16,
-                  window: Optional[int] = None, mesh=None) -> "QueryContext":
+                  window: Optional[int] = None, mesh=None,
+                  cold_store=None) -> "QueryContext":
         return cls(pack_docs(doc_terms, vocab_size, capacity=capacity),
-                   dtype=dtype, window=window, mesh=mesh)
+                   dtype=dtype, window=window, mesh=mesh,
+                   cold_store=cold_store)
 
     @property
     def index(self) -> PackedIndex:
@@ -250,7 +258,13 @@ class QueryContext:
         return len(slots)
 
     def _retire_slots(self, slots: np.ndarray) -> None:
-        """One device retire pass + host scope cleanup for ``slots``."""
+        """One device retire pass + host scope cleanup for ``slots``.
+        With a cold store attached, the block's postings are spilled
+        (re-packed into a self-contained payload) BEFORE the bits are
+        cleared — eviction demotes the block to the cold tier instead of
+        destroying it."""
+        if self._cold is not None and len(slots):
+            self._spill_block(np.asarray(slots, np.int64))
         mask = slots_bitmap(slots, self._index.n_words)
         self._index = retire_docs(self._index, jnp.asarray(mask))
         for name in self._scopes:
@@ -269,6 +283,82 @@ class QueryContext:
         self._retire_slots(slots)
         self.epoch += 1
         return len(slots)
+
+    # -- cold tier ----------------------------------------------------------
+
+    @property
+    def cold_store(self):
+        """The attached cold-tier store (a MutableMapping[str, bytes]),
+        or None — without one, evicted blocks are simply destroyed."""
+        return self._cold
+
+    def cold_version(self) -> int:
+        """Monotonic spill counter: bumps once per spilled block, so
+        artifacts derived from the cold tier (the all-time network) can
+        version on it the way scoped artifacts version on
+        :meth:`scope_version`."""
+        return self._cold_seq
+
+    def cold_blocks(self) -> int:
+        return len(self._cold) if self._cold is not None else 0
+
+    def _spill_block(self, slots: np.ndarray) -> None:
+        """Extract ``slots``' postings from the live bitmap and write them
+        to the cold store as a self-contained :class:`~repro.core.storage.
+        ColdBlock` — its own word rows (one per 32 docs) + per-term df.
+        Only the touched word rows transfer off device, not the whole
+        (W, V) bitmap."""
+        from repro.core.storage import ColdBlock, encode_block
+        v = self._index.vocab_size
+        uw = np.unique(slots // 32)
+        rows = np.asarray(jax.device_get(
+            jnp.take(self._index.packed, jnp.asarray(uw, jnp.int32), axis=0)))
+        pos = np.searchsorted(uw, slots // 32)
+        bits = ((rows[pos] >> (slots % 32).astype(np.uint32)[:, None])
+                & np.uint32(1))                                    # (n, V)
+        df = bits.sum(axis=0).astype(np.int32)
+        n = len(slots)
+        nw = (n + 31) // 32
+        b = np.zeros((nw * 32, v), np.uint32)
+        b[:n] = bits
+        packed = np.bitwise_or.reduce(
+            b.reshape(nw, 32, v)
+            << np.arange(32, dtype=np.uint32)[None, :, None], axis=1)
+        key = f"block-{self._cold_seq:08d}"
+        self._cold[key] = encode_block(ColdBlock(packed, df, n, v))
+        self._cold_seq += 1
+
+    def all_time_index(self) -> PackedIndex:
+        """Live + cold tiers as ONE bare :class:`PackedIndex`: the cold
+        blocks' word rows stacked under the live bitmap (co-occurrence
+        counts are additive over disjoint doc sets, so any count method
+        over the combined bitmap answers over every doc ever ingested).
+        Returns the live index itself when nothing has spilled."""
+        if self._cold is None or len(self._cold) == 0:
+            return self._index
+        from repro.core.storage import decode_block
+        v = self._index.vocab_size
+        parts = [self._index.packed]
+        df = self._index.doc_freq
+        for key in sorted(self._cold):
+            blk = decode_block(self._cold[key])
+            cw, cdf = blk.packed, blk.doc_freq
+            if blk.vocab > v:
+                # only an all-zero overhang is droppable (shrink_vocab's
+                # contract on the live index, mirrored here)
+                if cdf[v:].any():
+                    raise ValueError(
+                        f"cold block {key} holds postings for terms >= the "
+                        f"live vocab {v}; cannot query it under this index")
+                cw, cdf = cw[:, :v], cdf[:v]
+            elif blk.vocab < v:
+                cw = np.pad(cw, ((0, 0), (0, v - blk.vocab)))
+                cdf = np.pad(cdf, (0, v - blk.vocab))
+            parts.append(jnp.asarray(cw))
+            df = df + jnp.asarray(cdf)
+        packed = jnp.concatenate(parts, axis=0)
+        return PackedIndex(packed, df,
+                           jnp.asarray(packed.shape[0] * 32, jnp.int32))
 
     # -- scopes -------------------------------------------------------------
 

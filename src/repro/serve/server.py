@@ -193,6 +193,25 @@ class CoocServer:
         self._started = False
         self._stopping = False
 
+    @classmethod
+    def from_snapshot(cls, path: str, *,
+                      tenants: Sequence[TenantConfig] = (),
+                      config: ServerConfig = ServerConfig(),
+                      mesh=None, cold_store=None,
+                      verify: bool = True) -> "CoocServer":
+        """Warm-start a server from a durable snapshot
+        (:func:`repro.core.snapshot.save_context` /
+        ``repro.api.CoocIndex.save``): the shared context — packed index,
+        streaming ring, scope bitmaps, cold tier — is restored bit-exactly
+        and the server is ready to serve the moment ``start()`` returns,
+        instead of re-ingesting the corpus from raw text.  ``mesh`` is a
+        restore-time choice: the same snapshot warm-starts single-device
+        or sharded serving."""
+        from repro.core.snapshot import load_context
+        ctx = load_context(path, mesh=mesh, cold_store=cold_store,
+                           verify=verify)
+        return cls(ctx, tenants=tenants, config=config)
+
     def _make_lane(self, name: str, ctx: QueryContext,
                    policy: AdmissionPolicy) -> _Lane:
         eng = CoocEngine(

@@ -6,8 +6,12 @@ Layout:
         arr_<i>.npy       one file per leaf (np.save, mmap-able)
 
 Fault-tolerance properties:
-* **atomic commit** — written to ``step_X.tmp`` then os.replace()'d; a
-  crash mid-save never corrupts the latest checkpoint;
+* **atomic commit** — written to ``step_X.tmp``, every file fsync'd, then
+  renamed into place and the parent directory fsync'd
+  (:func:`repro.core.atomic_io.commit_dir`, the same protocol snapshots
+  and benchmark baselines use); a crash mid-save — including between the
+  rename and the directory-metadata flush — never corrupts the latest
+  checkpoint: ``restore`` sees the previous step or the new one, complete;
 * **reshard-on-restore** — ``restore(dir, shardings=...)`` rebuilds each
   leaf with ``jax.make_array_from_callback``: every process/device reads
   only its own slices from the mmap'd npy, so a checkpoint written on a
@@ -33,6 +37,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.atomic_io import commit_dir
 
 _NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16", "int8",
            "uint64", "uint32", "uint16", "uint8", "bool"}
@@ -67,9 +73,11 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
                  "shape": list(arr.shape), "dtype": str(arr.dtype)})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)          # atomic commit
+        # fsync every file, rename, fsync the parent dir: without the
+        # fsyncs os.replace alone could commit a directory whose files
+        # are still dirty page cache — a power loss would then "atomically"
+        # publish a torn checkpoint
+        commit_dir(tmp, final)
         _gc(ckpt_dir, keep)
 
     if blocking:

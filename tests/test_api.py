@@ -170,6 +170,33 @@ class TestSourceTagScope:
         assert idx.full_network(scope="empty_batch") == {}
 
 
+class TestTimeBucketLRU:
+    def test_lru_eviction_never_poisons_queued_queries(self):
+        """Regression: the 33rd distinct duration scope LRU-evicts the
+        oldest time bucket — but engine requests already queued against
+        that bucket must still be answered, not failed.  The fix drains
+        the lane of requests naming the evicted scope BEFORE dropping its
+        bitmap."""
+        from repro.api import MAX_TIME_BUCKETS
+
+        t0 = 1_700_000_000.0
+        idx = CoocIndex.from_texts(CORPUS, depth=1, topk=4, beam=4,
+                                   q_batch=2)
+        idx.add_documents(["fresh co-occurrence keywords arrive hourly"],
+                          timestamp=t0 - 60)
+        # queue well past the bucket cap WITHOUT draining: every earlier
+        # future must survive the later submits' LRU evictions
+        futs = [idx.submit(["index"], scope=f"{i}h", now=t0)
+                for i in range(1, MAX_TIME_BUCKETS + 8)]
+        results = [f.result() for f in futs]
+        assert idx.engine.failed_total == 0
+        assert len(idx._bucket_state) <= MAX_TIME_BUCKETS
+        # every query answered against its own (identical-membership)
+        # bucket: identical edge sets across all of them
+        edges0 = results[0].edges()
+        assert all(r.edges() == edges0 for r in results[1:])
+
+
 class TestErrors:
     def test_unknown_seed_term_raises(self):
         idx = CoocIndex.from_texts(CORPUS)

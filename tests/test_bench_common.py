@@ -1,0 +1,95 @@
+"""benchmarks.common — the CI perf gate's comparison logic and the
+crash-safe baseline writes (regression: a deleted baseline metric used to
+pass --compare clean, and a crash mid-write truncated the committed
+baseline JSON)."""
+import json
+import os
+
+import pytest
+
+from benchmarks import common
+from repro.core import atomic_io
+
+
+class TestCompareRecords:
+    BASE = {"engine_qps": 100.0, "step_p99_ms": 5.0, "batch_occupancy": 7.5}
+
+    def test_regression_flagged(self):
+        lines, reg = common.compare_records(
+            self.BASE, [{"name": "engine_qps", "value": 50.0},
+                        {"name": "step_p99_ms", "value": 5.0},
+                        {"name": "batch_occupancy", "value": 7.5}])
+        assert reg == ["engine_qps"]
+        assert any("REGRESSED" in ln for ln in lines)
+
+    def test_within_threshold_ok(self):
+        _, reg = common.compare_records(
+            self.BASE, [{"name": "engine_qps", "value": 90.0},
+                        {"name": "step_p99_ms", "value": 5.5},
+                        {"name": "batch_occupancy", "value": 7.5}])
+        assert reg == []
+
+    def test_missing_gateable_baseline_regresses(self):
+        """Regression: deleting a tracked throughput metric from the run
+        must NOT pass the gate — only the new records used to be
+        iterated, so a missing baseline name was silently skipped."""
+        lines, reg = common.compare_records(
+            self.BASE, [{"name": "step_p99_ms", "value": 5.0},
+                        {"name": "batch_occupancy", "value": 7.5}])
+        assert reg == ["engine_qps"]
+        assert any("engine_qps" in ln and "MISSING" in ln for ln in lines)
+
+    def test_missing_ungateable_baseline_reported_not_gated(self):
+        lines, reg = common.compare_records(
+            self.BASE, [{"name": "engine_qps", "value": 100.0},
+                        {"name": "step_p99_ms", "value": 5.0}])
+        assert reg == []                      # no recognized direction
+        assert any("batch_occupancy" in ln and "missing" in ln
+                   for ln in lines)
+
+    def test_both_sides_missing(self):
+        lines, reg = common.compare_records(
+            self.BASE, [{"name": "brand_new_qps", "value": 1.0}])
+        assert set(reg) == {"engine_qps", "step_p99_ms"}
+        assert any("no baseline" in ln for ln in lines)
+
+
+class TestAtomicEmission:
+    def test_bench_json_round_trip(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+        records = [{"name": "engine_qps", "value": 123.0}]
+        path = common.write_bench_json("t", records)
+        assert common.load_bench_baselines(path) == {"engine_qps": 123.0}
+        doc = json.load(open(path))
+        assert doc["schema"] == 1 and doc["records"] == records
+        # no stray temp files left next to the committed artifact
+        assert all(not fn.startswith(".BENCH") for fn in os.listdir(tmp_path))
+
+    def test_csv_round_trip(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+        path = common.write_csv("t", [{"a": 1, "b": 2}, {"a": 3, "b": 4}])
+        assert open(path).read().splitlines() == ["a,b", "1,2", "3,4"]
+
+    def test_crashed_write_leaves_old_baseline(self, tmp_path, monkeypatch):
+        """The baseline the CI gate loads must never be truncated by a
+        crash mid-write — the old complete JSON survives."""
+        monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+        path = common.write_bench_json(
+            "t", [{"name": "engine_qps", "value": 100.0}])
+
+        class _Crash(BaseException):
+            pass
+
+        def boom(*a, **k):
+            raise _Crash()
+
+        for step in ("fsync_file", "replace"):
+            mp = pytest.MonkeyPatch()
+            try:
+                mp.setattr(atomic_io, step, boom)
+                with pytest.raises(_Crash):
+                    common.write_bench_json(
+                        "t", [{"name": "engine_qps", "value": 1.0}])
+            finally:
+                mp.undo()
+            assert common.load_bench_baselines(path) == {"engine_qps": 100.0}

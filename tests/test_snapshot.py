@@ -1,0 +1,609 @@
+"""Durable snapshot/restore + cold-tier spill + the crash-safe commit
+protocol.
+
+The contract under test (README §Design, persistence):
+
+* save -> load is BIT-exact: every count method, warm or cold caches,
+  windowed rings, named scopes, doc timestamps, time buckets — values
+  AND tie order;
+* a restored index keeps working: further ingest on the restored side
+  tracks the original exactly;
+* a crash at ANY step of the commit protocol (fsync / rename / pointer
+  swing) leaves a loadable snapshot — the complete old state or the
+  complete new one, never a torn in-between;
+* a window-evicted block spilled to the cold store stays queryable
+  through ``scope="all-time"``, exactly as if nothing was ever evicted;
+* the same snapshot restores single-device or onto a device mesh,
+  bit-identically.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CoocIndex
+from repro.core import (
+    QueryContext,
+    QuerySpec,
+    SnapshotError,
+    construct,
+    load_context,
+    materialize,
+    save_context,
+    to_edge_dict,
+)
+from repro.core import atomic_io
+from repro.core.snapshot import read_snapshot
+from repro.core.storage import ColdBlock, FileStorage, decode_block, make_storage
+from repro.train import checkpoint
+
+METHODS = ("gemm", "popcount", "pallas", "fused")
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    # This module compiles dozens of small executables (every method x
+    # scope x context-shape combination, twice per round-trip assertion).
+    # On the single-threaded CPU backend that extra resident compile state
+    # can tip a later large bfs_construct compile in another suite into a
+    # segfault inside XLA (jaxlib 0.4.37); dropping our executables at
+    # module teardown restores the compile environment the other suites
+    # were written against.
+    yield
+    jax.clear_caches()
+
+CORPUS = [
+    "graph neural networks learn node embeddings from graph structure",
+    "co-occurrence networks reveal semantic relationships in text corpora",
+    "inverted index maps keywords to documents for fast retrieval",
+    "keyword co-occurrence networks support text mining and retrieval",
+    "the inverted index makes co-occurrence network construction fast",
+    "fast retrieval of documents uses the inverted index keywords",
+    "text mining extracts keywords and builds co-occurrence networks",
+]
+
+DOCS = [[0, 1, 2], [1, 2, 3], [2, 3, 4], [0, 4, 5], [5, 6], [0, 6, 7],
+        [7, 8, 9], [1, 8], [3, 9, 10], [2, 10, 11]]
+VOCAB = 12
+
+
+def _net_identical(a, b, msg=""):
+    for f in ("src", "dst", "weight", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}/{f}")
+
+
+def _assert_ctx_equivalent(ctx_a, ctx_b, *, scopes=(None,), msg=""):
+    """Every query artifact bit-exact across the two contexts."""
+    for method in METHODS:
+        for scope in scopes:
+            spec = QuerySpec(seeds=(0, 2), depth=2, topk=4, beam=8,
+                             method=method, scope=scope)
+            _net_identical(construct(ctx_a, spec).network,
+                           construct(ctx_b, spec).network,
+                           f"{msg}/construct/{method}/{scope}")
+            _net_identical(
+                materialize(ctx_a, k=4, method=method, scope=scope),
+                materialize(ctx_b, k=4, method=method, scope=scope),
+                f"{msg}/materialize/{method}/{scope}")
+
+
+class TestContextRoundTrip:
+    def test_plain_context_bit_exact(self, tmp_path):
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        save_context(ctx, str(tmp_path / "snap"))
+        ctx2 = load_context(str(tmp_path / "snap"))
+        assert ctx2.n_docs == ctx.n_docs
+        assert ctx2.epoch == ctx.epoch
+        _assert_ctx_equivalent(ctx, ctx2, msg="plain")
+
+    def test_windowed_scoped_context_bit_exact(self, tmp_path):
+        ctx = QueryContext.from_docs([], VOCAB, capacity=32, window=6)
+        ctx.ingest_docs(DOCS[:4], scope="early")
+        ctx.ingest_docs(DOCS[4:8], scope="mid")
+        ctx.ingest_docs(DOCS[8:], scope="late")   # evicts the oldest block
+        assert ctx.evicted_docs_total > 0
+        save_context(ctx, str(tmp_path / "snap"))
+        ctx2 = load_context(str(tmp_path / "snap"))
+        assert ctx2.window == ctx.window
+        assert ctx2.live_docs == ctx.live_docs
+        assert ctx2.evicted_docs_total == ctx.evicted_docs_total
+        assert ctx2.scope_names() == ctx.scope_names()
+        assert ctx2._scope_ver == ctx._scope_ver
+        np.testing.assert_array_equal(ctx2.live_slots(), ctx.live_slots())
+        _assert_ctx_equivalent(ctx, ctx2, scopes=(None, "mid", "late"),
+                               msg="windowed")
+
+    def test_restored_context_keeps_streaming(self, tmp_path):
+        """The restored ring must continue EXACTLY like the original:
+        same slots assigned, same evictions, same query results."""
+        ctx = QueryContext.from_docs([], VOCAB, capacity=32, window=6)
+        ctx.ingest_docs(DOCS[:4], scope="a")
+        ctx.ingest_docs(DOCS[4:6], scope="b")
+        save_context(ctx, str(tmp_path / "snap"))
+        ctx2 = load_context(str(tmp_path / "snap"))
+        more = [[1, 5, 9], [0, 3, 11], [2, 7]]
+        s1 = ctx.ingest_docs(more, scope="c")     # forces an eviction
+        s2 = ctx2.ingest_docs(more, scope="c")
+        np.testing.assert_array_equal(s1, s2)
+        assert ctx2.evicted_docs_total == ctx.evicted_docs_total > 0
+        _assert_ctx_equivalent(ctx, ctx2, scopes=(None, "b", "c"),
+                               msg="resumed")
+
+    def test_derived_caches_not_serialized(self, tmp_path):
+        """Warm caches rebuild lazily — the snapshot holds only state."""
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        materialize(ctx, k=4)                     # warm the artifact cache
+        save_context(ctx, str(tmp_path / "snap"))
+        arrays, meta = read_snapshot(str(tmp_path / "snap"))
+        names = set(arrays)
+        assert names == {"packed", "doc_freq"} | {
+            f"block_{i:04d}" for i in range(meta["n_blocks"])}
+        ctx2 = load_context(str(tmp_path / "snap"))
+        assert ctx2.unpack_count == ctx.unpack_count  # monitoring continuity
+        _net_identical(materialize(ctx, k=4), materialize(ctx2, k=4),
+                       "lazy-warm")
+
+    def test_mmapable_blobs(self, tmp_path):
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        final = save_context(ctx, str(tmp_path / "snap"))
+        import json
+        with open(os.path.join(final, "manifest.json")) as f:
+            man = json.load(f)
+        blob = man["blobs"]["packed"]
+        arr = np.load(os.path.join(final, blob["file"]), mmap_mode="r")
+        np.testing.assert_array_equal(
+            arr, np.asarray(jax.device_get(ctx.index.packed)))
+
+    def test_corrupt_blob_raises(self, tmp_path):
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        final = save_context(ctx, str(tmp_path / "snap"))
+        import json
+        with open(os.path.join(final, "manifest.json")) as f:
+            man = json.load(f)
+        victim = os.path.join(final, man["blobs"]["packed"]["file"])
+        data = bytearray(open(victim, "rb").read())
+        data[-1] ^= 0xFF
+        with open(victim, "wb") as f:
+            f.write(bytes(data))
+        with pytest.raises(SnapshotError, match="checksum"):
+            load_context(str(tmp_path / "snap"))
+        # verify=False is the explicit opt-out (trusted local disk)
+        load_context(str(tmp_path / "snap"), verify=False)
+
+    def test_missing_and_future_snapshots(self, tmp_path):
+        with pytest.raises(SnapshotError, match="no snapshot"):
+            load_context(str(tmp_path / "nope"))
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        final = save_context(ctx, str(tmp_path / "snap"))
+        import json
+        with open(os.path.join(final, "manifest.json")) as f:
+            man = json.load(f)
+        man["version"] = 999
+        with open(os.path.join(final, "manifest.json"), "w") as f:
+            json.dump(man, f)
+        with pytest.raises(SnapshotError, match="newer"):
+            load_context(str(tmp_path / "snap"))
+
+    def test_keep_gc(self, tmp_path):
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        for _ in range(4):
+            save_context(ctx, str(tmp_path / "snap"), keep=2)
+        snaps = [d for d in os.listdir(tmp_path / "snap")
+                 if d.startswith("snap-")]
+        assert len(snaps) == 2
+        load_context(str(tmp_path / "snap"))      # CURRENT still valid
+
+
+class TestCoocIndexRoundTrip:
+    def _build(self):
+        t0 = 1_700_000_000.0
+        idx = CoocIndex(window=6, depth=2, topk=4, beam=8, q_batch=2)
+        idx.add_documents(CORPUS[:3], timestamp=t0 - 10 * 86400,
+                          source="old-news")
+        idx.add_documents(CORPUS[3:5], timestamp=t0 - 3600, source="news")
+        idx.add_documents(CORPUS[5:], timestamp=t0 - 60, source="fresh")
+        return idx, t0
+
+    def test_save_load_bit_exact_all_methods(self, tmp_path):
+        idx, t0 = self._build()
+        idx.network(["index"], scope="7d", now=t0)   # live time bucket
+        idx.save(str(tmp_path / "snap"))
+        idx2 = CoocIndex.load(str(tmp_path / "snap"))
+        assert idx2.n_terms == idx.n_terms
+        assert idx2.live_docs == idx.live_docs
+        assert idx2.window == idx.window
+        assert idx2._bucket_state == idx._bucket_state
+        np.testing.assert_array_equal(idx2._doc_time, idx._doc_time)
+        for method in METHODS:
+            assert (idx2.network(["index"], method=method)
+                    == idx.network(["index"], method=method))
+            assert (idx2.full_network(k=4, method=method)
+                    == idx.full_network(k=4, method=method))
+        for scope in ("news", "fresh", "7d"):
+            assert (idx2.network(["index"], scope=scope, now=t0)
+                    == idx.network(["index"], scope=scope, now=t0))
+            assert (idx2.full_network(k=4, scope=scope, now=t0)
+                    == idx.full_network(k=4, scope=scope, now=t0))
+
+    def test_post_load_ingest_parity(self, tmp_path):
+        idx, t0 = self._build()
+        idx.save(str(tmp_path / "snap"))
+        idx2 = CoocIndex.load(str(tmp_path / "snap"))
+        fresh = ["co-occurrence mining finds keyword structure",
+                 "new documents keep the index real time"]
+        idx.add_documents(fresh, timestamp=t0, source="newest")
+        idx2.add_documents(fresh, timestamp=t0, source="newest")
+        assert idx2.n_terms == idx.n_terms
+        assert idx2.network(["index"]) == idx.network(["index"])
+        assert (idx2.full_network(k=4, scope="newest")
+                == idx.full_network(k=4, scope="newest"))
+        assert (idx2.network(["index"], scope="1d", now=t0)
+                == idx.network(["index"], scope="1d", now=t0))
+
+    def test_engine_defaults_restored(self, tmp_path):
+        idx = CoocIndex.from_texts(CORPUS, depth=1, topk=3, beam=5,
+                                   q_batch=4, method="popcount",
+                                   on_overflow="grow")
+        idx.save(str(tmp_path / "snap"))
+        idx2 = CoocIndex.load(str(tmp_path / "snap"))
+        for f in ("depth", "topk", "beam", "dedup", "method", "q_batch",
+                  "on_overflow"):
+            assert getattr(idx2.engine, f) == getattr(idx.engine, f), f
+        assert sorted(idx2.stopwords) == sorted(idx.stopwords)
+        assert idx2.lexicon.id_to_term == idx.lexicon.id_to_term
+
+    def test_bare_context_snapshot_rejected(self, tmp_path):
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        save_context(ctx, str(tmp_path / "snap"))
+        with pytest.raises(SnapshotError, match="bare context"):
+            CoocIndex.load(str(tmp_path / "snap"))
+
+    def test_fresh_process_round_trip(self, tmp_path):
+        """The real restart: a separate interpreter loads the snapshot and
+        must reproduce the saved process's network exactly."""
+        idx, _ = self._build()
+        idx.save(str(tmp_path / "snap"))
+        want = sorted((a, b, w) for (a, b), w
+                      in idx.full_network(k=4).items())
+        code = (
+            "from repro.api import CoocIndex\n"
+            f"idx = CoocIndex.load({str(tmp_path / 'snap')!r})\n"
+            "net = sorted((a, b, w) for (a, b), w\n"
+            "             in idx.full_network(k=4).items())\n"
+            "for a, b, w in net:\n"
+            "    print(a, b, w)\n")
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr
+        got = [tuple(line.split()) for line in out.stdout.splitlines()]
+        assert [(a, b, int(w)) for a, b, w in got] == want
+
+
+class TestColdTier:
+    def test_all_time_equals_never_evicted_oracle(self, tmp_path):
+        """THE tiering guarantee: windowed + cold store answers
+        scope='all-time' exactly like an index that never evicted."""
+        cold = {}
+        win = QueryContext.from_docs([], VOCAB, capacity=64, window=4,
+                                     cold_store=cold)
+        oracle = QueryContext.from_docs([], VOCAB, capacity=64)
+        for lo in range(0, len(DOCS), 2):
+            win.ingest_docs(DOCS[lo:lo + 2])
+            oracle.ingest_docs(DOCS[lo:lo + 2])
+        assert win.evicted_docs_total > 0 and win.cold_blocks() > 0
+        for method in METHODS:
+            _net_identical(
+                materialize(win, k=4, method=method, scope="all-time"),
+                materialize(oracle, k=4, method=method),
+                f"all-time/{method}")
+        # live-only is genuinely narrower than all-time
+        live = to_edge_dict(materialize(win, k=4))
+        alltime = to_edge_dict(materialize(win, k=4, scope="all-time"))
+        assert live != alltime
+
+    def test_all_time_without_cold_store_is_live(self):
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        _net_identical(materialize(ctx, k=4, scope="all-time"),
+                       materialize(ctx, k=4), "no-cold")
+
+    def test_all_time_cache_invalidates_on_spill(self):
+        cold = {}
+        ctx = QueryContext.from_docs([], VOCAB, capacity=64, window=4,
+                                     cold_store=cold)
+        ctx.ingest_docs(DOCS[:4])
+        ctx.ingest_docs(DOCS[4:6])                # evicts block 0 -> spill
+        v1 = ctx.cold_version()
+        net1 = to_edge_dict(materialize(ctx, k=4, scope="all-time"))
+        ctx.ingest_docs(DOCS[6:10])               # more evictions
+        assert ctx.cold_version() > v1
+        net2 = to_edge_dict(materialize(ctx, k=4, scope="all-time"))
+        assert net1 != net2
+
+    def test_vocab_growth_across_spills(self):
+        """A block spilled under a smaller vocab pads up to the live V."""
+        cold = {}
+        ctx = QueryContext.from_docs([], 4, capacity=64, window=4,
+                                     cold_store=cold)
+        first = [[0, 1], [1, 2], [2, 3], [0, 3]]
+        second = [[0, 2], [1, 3]]
+        ctx.ingest_docs(first)
+        ctx.ingest_docs(second)       # evicts `first` while vocab is 4
+        assert ctx.cold_blocks() == 1
+        ctx.grow_vocab(VOCAB)
+        third = DOCS[:2]
+        ctx.ingest_docs(third)
+        # grow_vocab over-allocates (amortised doubling) — the oracle
+        # must sit at the same padded V for slot-identical networks
+        oracle = QueryContext.from_docs(first + second + third,
+                                        ctx.vocab_size, capacity=64)
+        _net_identical(materialize(ctx, k=4, scope="all-time"),
+                       materialize(oracle, k=4), "grown-vocab")
+
+    def test_cooc_index_all_time(self):
+        idx = CoocIndex(window=4, depth=2, topk=4, beam=8, cold_store={})
+        for lo in range(0, len(CORPUS), 2):
+            idx.add_documents(CORPUS[lo:lo + 2])  # window evicts most
+        assert idx.ctx.cold_blocks() > 0
+        oracle = CoocIndex.from_texts(CORPUS, depth=2, topk=4, beam=8)
+        assert (idx.full_network(k=4, scope="all-time")
+                == oracle.full_network(k=4))
+
+    def test_reserved_source_name(self):
+        idx = CoocIndex(window=4)
+        with pytest.raises(ValueError, match="reserved"):
+            idx.add_documents(CORPUS[:1], source="all-time")
+
+    def test_file_storage_durability(self, tmp_path):
+        store = make_storage({"type": "file", "path": str(tmp_path / "cold")})
+        assert isinstance(store, FileStorage)
+        ctx = QueryContext.from_docs([], VOCAB, capacity=64, window=4,
+                                     cold_store=store)
+        for lo in range(0, len(DOCS), 2):
+            ctx.ingest_docs(DOCS[lo:lo + 2])
+        assert len(store) > 0
+        # a FRESH handle over the same directory sees the same blocks
+        store2 = FileStorage(str(tmp_path / "cold"))
+        assert sorted(store2) == sorted(store)
+        for k in store:
+            assert store2[k] == store[k]
+            blk = decode_block(store2[k])
+            assert isinstance(blk, ColdBlock) and blk.n_docs > 0
+
+    def test_file_storage_mapping_contract(self, tmp_path):
+        s = FileStorage(str(tmp_path / "kv"))
+        s["a-1"] = b"x"
+        s["a-1"] = b"y"                           # overwrite
+        assert s["a-1"] == b"y" and len(s) == 1 and "a-1" in s
+        del s["a-1"]
+        assert len(s) == 0
+        with pytest.raises(KeyError):
+            s["a-1"]
+        with pytest.raises(KeyError, match="invalid"):
+            s["../escape"] = b"z"
+
+    def test_snapshot_carries_cold_tier(self, tmp_path):
+        cold = {}
+        ctx = QueryContext.from_docs([], VOCAB, capacity=64, window=4,
+                                     cold_store=cold)
+        for lo in range(0, len(DOCS), 2):
+            ctx.ingest_docs(DOCS[lo:lo + 2])
+        assert ctx.cold_blocks() > 0
+        save_context(ctx, str(tmp_path / "snap"))
+        ctx2 = load_context(str(tmp_path / "snap"))
+        assert ctx2.cold_blocks() == ctx.cold_blocks()
+        assert ctx2.cold_version() == ctx.cold_version()
+        assert sorted(ctx2.cold_store) == sorted(cold)
+        for method in ("gemm", "popcount"):
+            _net_identical(
+                materialize(ctx2, k=4, method=method, scope="all-time"),
+                materialize(ctx, k=4, method=method, scope="all-time"),
+                f"restored-cold/{method}")
+        # restored ring keeps spilling into the restored store
+        ctx.ingest_docs(DOCS[:2])
+        ctx2.ingest_docs(DOCS[:2])
+        assert ctx2.cold_version() == ctx.cold_version()
+        _net_identical(materialize(ctx2, k=4, scope="all-time"),
+                       materialize(ctx, k=4, scope="all-time"),
+                       "post-restore-spill")
+
+
+class _Crash(BaseException):
+    """Simulated kill -9: derives from BaseException so no library
+    except-Exception handler can swallow it."""
+
+
+class _CrashAt:
+    """Counts low-level commit ops, raising _Crash INSTEAD of executing
+    op number ``crash_at`` — i.e. the process dies between protocol
+    steps."""
+
+    NAMES = ("fsync_file", "fsync_path", "rename", "replace")
+
+    def __init__(self, monkeypatch, crash_at=None):
+        self.n = 0
+        self.crash_at = crash_at
+        for name in self.NAMES:
+            orig = getattr(atomic_io, name)
+
+            def wrapped(*a, _orig=orig, **kw):
+                if self.crash_at is not None and self.n == self.crash_at:
+                    raise _Crash(f"killed before op {self.n}")
+                self.n += 1
+                return _orig(*a, **kw)
+
+            monkeypatch.setattr(atomic_io, name, wrapped)
+
+
+def _count_ops(fn):
+    """Run ``fn`` once with counting (never-crashing) wrappers installed;
+    returns how many low-level commit ops it performed."""
+    mp = pytest.MonkeyPatch()
+    try:
+        counter = _CrashAt(mp)
+        fn()
+    finally:
+        mp.undo()
+    return counter.n
+
+
+def _crashed_at(k, fn):
+    """Run ``fn`` with the process 'killed' before commit op ``k``."""
+    mp = pytest.MonkeyPatch()
+    try:
+        counter = _CrashAt(mp, crash_at=k)
+        with pytest.raises(_Crash):
+            fn()
+    finally:
+        mp.undo()
+    assert counter.n == k
+
+
+class TestCrashInjection:
+    def _packed(self, path):
+        arrays, _ = read_snapshot(path)
+        return arrays["packed"]
+
+    def test_snapshot_survives_crash_at_every_step(self, tmp_path):
+        ctx_a = QueryContext.from_docs(DOCS[:5], VOCAB)
+        ctx_b = QueryContext.from_docs(DOCS, VOCAB)
+        packed_a = np.asarray(jax.device_get(ctx_a.index.packed))
+        packed_b = np.asarray(jax.device_get(ctx_b.index.packed))
+        probe = str(tmp_path / "probe")
+        save_context(ctx_a, probe)
+        total = _count_ops(lambda: save_context(ctx_b, probe))
+        assert total >= 6          # fsyncs + rename + pointer swing
+
+        outcomes = set()
+        for k in range(total):
+            d = str(tmp_path / f"crash-{k}")
+            save_context(ctx_a, d)
+            _crashed_at(k, lambda d=d: save_context(ctx_b, d))
+            # the contract: ALWAYS loadable, ALWAYS complete, old or new
+            got = self._packed(d)
+            if got.shape == packed_b.shape and (got == packed_b).all():
+                outcomes.add("new")
+            else:
+                np.testing.assert_array_equal(got, packed_a)
+                outcomes.add("old")
+            load_context(d)        # full restore parses too
+        # the sweep must actually exercise both sides of the commit point
+        assert outcomes == {"old", "new"}
+
+    def test_first_snapshot_crash_leaves_nothing_or_new(self, tmp_path):
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        total = _count_ops(lambda: save_context(ctx, str(tmp_path / "probe")))
+        for k in range(total):
+            d = str(tmp_path / f"crash-{k}")
+            _crashed_at(k, lambda d=d: save_context(ctx, d))
+            try:
+                ctx2 = load_context(d)
+            except SnapshotError:
+                continue           # nothing committed yet — fine
+            assert ctx2.n_docs == ctx.n_docs
+
+    def test_checkpoint_save_survives_crash_at_every_step(self, tmp_path):
+        tree_a = {"w": jnp.arange(12.0).reshape(3, 4), "step": jnp.asarray(1)}
+        tree_b = {"w": jnp.arange(12.0).reshape(3, 4) * 2,
+                  "step": jnp.asarray(2)}
+        probe = str(tmp_path / "probe")
+        checkpoint.save(probe, 1, tree_a)
+        total = _count_ops(lambda: checkpoint.save(probe, 2, tree_b))
+        assert total >= 4
+
+        outcomes = set()
+        for k in range(total):
+            d = str(tmp_path / f"crash-{k}")
+            checkpoint.save(d, 1, tree_a)
+            _crashed_at(k, lambda d=d: checkpoint.save(d, 2, tree_b))
+            restored, step = checkpoint.restore(d, tree_a)
+            assert step in (1, 2)
+            want = tree_a if step == 1 else tree_b
+            np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                          np.asarray(want["w"]))
+            outcomes.add(step)
+        assert outcomes == {1, 2}
+
+    def test_atomic_write_crash_leaves_old_file(self, tmp_path):
+        path = str(tmp_path / "f.json")
+        atomic_io.atomic_write_text(path, "OLD")
+        total = _count_ops(lambda: atomic_io.atomic_write_text(path, "NEW"))
+        for k in range(total):
+            atomic_io.atomic_write_text(path, "OLD")
+            _crashed_at(k, lambda: atomic_io.atomic_write_text(path, "NEW"))
+            assert open(path).read() in ("OLD", "NEW")
+
+
+class TestServerWarmStart:
+    def test_from_snapshot_serves_bit_exact(self, tmp_path):
+        import asyncio
+
+        from repro.serve.cooc_engine import CoocEngine
+        from repro.serve.server import CoocServer, ServerConfig, TenantConfig
+
+        ctx = QueryContext.from_docs(DOCS, VOCAB)
+        ctx.tag_scope("t0", list(range(5)))
+        save_context(ctx, str(tmp_path / "snap"))
+        cfg = ServerConfig(depth=2, topk=4, beam=8)
+        spec = QuerySpec(seeds=(0, 2), depth=2, topk=4, beam=8)
+        want = CoocEngine(ctx).submit(spec).result()
+
+        async def run():
+            srv = CoocServer.from_snapshot(
+                str(tmp_path / "snap"),
+                tenants=[TenantConfig("acme"),
+                         TenantConfig("scoped", scope="t0")],
+                config=cfg)
+            assert srv.ctx.scope_names() == ("t0",)
+            await srv.start()
+            try:
+                r = await srv.submit("acme", spec)
+                rs = await srv.submit("scoped", [0])
+            finally:
+                await srv.stop()
+            return r, rs
+
+        r, rs = asyncio.run(run())
+        assert r.ok and rs.ok
+        _net_identical(r.result.network, want.network, "warm-start")
+
+
+_N_DEV = len(jax.devices())
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(
+    _N_DEV < 2,
+    reason="needs a forced multi-device host "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+class TestMeshedRestore:
+    def test_restore_onto_mesh_bit_exact(self, tmp_path):
+        """mesh= is a restore-time choice: one snapshot, single-device and
+        sharded restores, identical answers."""
+        from repro.core import make_cooc_mesh
+
+        ctx = QueryContext.from_docs([], VOCAB, capacity=32, window=6)
+        ctx.ingest_docs(DOCS[:4], scope="a")
+        ctx.ingest_docs(DOCS[4:8], scope="b")
+        save_context(ctx, str(tmp_path / "snap"))
+        single = load_context(str(tmp_path / "snap"))
+        meshed = load_context(str(tmp_path / "snap"), mesh=make_cooc_mesh())
+        assert meshed.mesh is not None
+        _assert_ctx_equivalent(single, meshed, scopes=(None, "b"),
+                               msg="meshed-restore")
+
+    def test_cooc_index_restore_onto_mesh(self, tmp_path):
+        idx = CoocIndex.from_texts(CORPUS, depth=2, topk=4, beam=8)
+        idx.save(str(tmp_path / "snap"))
+        idx_m = CoocIndex.load(str(tmp_path / "snap"), devices=_N_DEV)
+        assert idx_m.mesh is not None
+        assert (idx_m.full_network(k=4) == idx.full_network(k=4))
+        assert (idx_m.network(["index"]) == idx.network(["index"]))
