@@ -36,8 +36,9 @@ def run(n_docs: int = 8000, vocab: int = 4096, topk: int = 16,
 
     nets, times = {}, {}
     for d in DEPTHS:
-        fn = jax.jit(lambda idx, s, d=d: bfs_construct(idx, s, depth=d,
-                                                       topk=topk, beam=beam))
+        fn = jax.jit(  # cooclint: disable=COOC005 -- depth sweep: one compile per swept depth IS the measurement
+            lambda idx, s, d=d: bfs_construct(idx, s, depth=d,
+                                              topk=topk, beam=beam))
         jax.block_until_ready(fn(index, seeds_j).src)    # compile
 
         def run_query(fn=fn):

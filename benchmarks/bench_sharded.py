@@ -99,7 +99,7 @@ def main(argv: List[str] | None = None) -> List[Dict]:
     from repro.core import QueryContext, make_cooc_mesh, materialize
     from repro.data import synthetic_csl
     from repro.serve.cooc_engine import CoocEngine
-    from benchmarks.common import section, write_csv
+    from benchmarks.common import section, write_csv, write_json
 
     n_dev = len(jax.devices())
     methods = tuple(m for m in args.methods.split(",") if m)
@@ -207,8 +207,10 @@ def main(argv: List[str] | None = None) -> List[Dict]:
     path = write_csv("sharded", rows)
     print(f"CSV -> {path}")
     if args.json_out:
-        with open(args.json_out, "w") as f:
-            json.dump(out, f)
+        # handoff file for the respawned child (read + unlinked by the
+        # parent): atomic commit so a crash mid-dump can't leave the
+        # parent a truncated half-record to parse
+        write_json(args.json_out, out)
     return out
 
 

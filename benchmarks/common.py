@@ -43,6 +43,14 @@ def write_csv(name: str, rows: List[Dict]) -> str:
     return os.path.normpath(path)
 
 
+def write_json(path: str, obj) -> str:
+    """Atomic JSON dump to an arbitrary ``path`` (``--json-out`` style
+    flags).  Same commit protocol as the baseline writers: a crash
+    mid-run leaves the previous file intact, never a truncated one."""
+    atomic_write_text(path, json.dumps(obj, indent=2) + "\n")
+    return os.path.normpath(path)
+
+
 def write_bench_json(name: str, records: List[Dict], *,
                      quick: bool = False) -> str:
     """Machine-readable per-bench record file ``BENCH_<name>.json`` under

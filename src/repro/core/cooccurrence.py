@@ -453,7 +453,7 @@ def _expand_level(index: PackedIndex, state: BFSState, topk: int, dedup: bool,
         flat_w = jnp.where(keep, flat_w, -1)
 
     n_next = b
-    w_next, cand_idx = jax.lax.top_k(flat_w, n_next)            # (B,)
+    w_next, cand_idx = jax.lax.top_k(flat_w, n_next)  # cooclint: disable=COOC002 -- n_next = b <= flat_w's B*topk columns by construction
     next_valid = w_next > 0
     next_dst = flat_dst[cand_idx]
     next_parent = flat_parent[cand_idx]

@@ -30,6 +30,7 @@ def _set_mode(mode: str) -> None:
 import jax  # noqa: E402
 
 from repro.configs import get_config, list_archs  # noqa: E402
+from repro.core.atomic_io import atomic_write_text  # noqa: E402
 from repro.launch import roofline as RL  # noqa: E402
 from repro.launch.cells import all_cells, plan_cell  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -111,10 +112,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
               f"roofline-fraction {rl.roofline_fraction:.3f}")
         print(f"  collectives: {rl.collectives.summary()}")
     if out_dir:
-        os.makedirs(out_dir, exist_ok=True)
+        # atomic commit (parent dirs created by the writer): the sweep
+        # driver globs these records, so a crash mid-dump must not leave
+        # it a truncated JSON cell to parse
         fn = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}__{mode}.json")
-        with open(fn, "w") as f:
-            json.dump(rec, f, indent=1)
+        atomic_write_text(fn, json.dumps(rec, indent=1) + "\n")
     return rec
 
 

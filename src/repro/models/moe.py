@@ -66,7 +66,7 @@ def moe_ffn(params: Dict, x: jax.Array, *, top_k: int, capacity_factor: float,
 
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
     probs = jax.nn.softmax(logits, axis=-1)                  # (T, E) fp32
-    top_w, top_i = jax.lax.top_k(probs, top_k)               # (T, k)
+    top_w, top_i = jax.lax.top_k(probs, top_k)  # cooclint: disable=COOC002 -- (T, k): static router fan-out, config keeps top_k <= E
     top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)   # renormalise
 
     cap = int(math.ceil(t * top_k * capacity_factor / e))

@@ -427,6 +427,11 @@ class CoocServer:
             lane.inflight_start = time.monotonic()
 
             def _run_batch(reqs=batch):
+                # submit + drain + RESOLVE all inside the executor: a
+                # CoocFuture.result() drives engine.step() while
+                # unresolved, i.e. it is device work — it must never run
+                # on the event loop (cooclint COOC003 enforces this
+                # lexically: no .result() in the async body below)
                 futs = []
                 for p in reqs:
                     try:
@@ -436,26 +441,28 @@ class CoocServer:
                 t0 = time.perf_counter()
                 lane.engine.run_until_drained()
                 step_ms = (time.perf_counter() - t0) * 1e3
-                return futs, step_ms
+                outs = []
+                for p, fut in futs:
+                    if isinstance(fut, Exception):
+                        outs.append((p, None, fut))
+                        continue
+                    try:
+                        outs.append((p, fut.result(), None))
+                    except Exception as e:
+                        outs.append((p, None, e))
+                return outs, step_ms
 
             async with lane.lock:
-                futs, step_ms = await loop.run_in_executor(None, _run_batch)
+                outs, step_ms = await loop.run_in_executor(None, _run_batch)
             lane.model.observe(exec_key, step_ms)
             lane.inflight_key = None
 
             t_done = time.monotonic()
-            for p, fut in futs:
+            for p, result, exc in outs:
                 latency_ms = (t_done - p.t_enqueue) * 1e3
-                if isinstance(fut, Exception):
+                if exc is not None:
                     self._resolve(lane, p, ServeResponse(
-                        p.tenant, "error", reason=str(fut),
-                        latency_ms=latency_ms))
-                    continue
-                try:
-                    result = fut.result()
-                except Exception as e:
-                    self._resolve(lane, p, ServeResponse(
-                        p.tenant, "error", reason=str(e),
+                        p.tenant, "error", reason=str(exc),
                         latency_ms=latency_ms))
                     continue
                 if t_done > p.deadline_ts:

@@ -1,0 +1,465 @@
+"""cooclint: fixture corpus per rule (positive / negative / suppressed),
+suppression machinery, CLI exit codes on seeded historical bugs, the
+meta-test that the committed tree is clean, and the jaxpr sync-point
+auditor (clean entry points + deliberately-broken fixtures).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:                       # tools/ lives at the repo root
+    sys.path.insert(0, REPO)
+
+from tools.cooclint.framework import (  # noqa: E402
+    all_rules,
+    lint_paths,
+    lint_source,
+    parse_suppressions,
+)
+
+SRC = "src/repro/somewhere.py"                 # a non-exempt src path
+
+
+def codes(src, path=SRC):
+    return [f.code for f in lint_source(textwrap.dedent(src), path)]
+
+
+# ---------------------------------------------------------------------------
+# framework: suppressions + registry
+# ---------------------------------------------------------------------------
+
+
+class TestFramework:
+    def test_rule_registry_is_complete(self):
+        assert set(all_rules()) == {
+            "COOC001", "COOC002", "COOC003", "COOC004", "COOC005"}
+
+    def test_suppression_parses_codes_and_justification(self):
+        sup = parse_suppressions(
+            'x = 1  # cooclint: disable=COOC001,COOC002 -- staged dir\n')
+        assert sup == {1: {"COOC001", "COOC002"}}
+
+    def test_suppression_silences_only_its_line_and_code(self):
+        src = '''
+        import shutil
+        shutil.rmtree(p)  # cooclint: disable=COOC001 -- GC
+        shutil.rmtree(q)
+        '''
+        assert codes(src) == ["COOC001"]       # only the unsuppressed line
+
+    def test_unused_suppression_is_a_finding(self):
+        assert codes('x = 1  # cooclint: disable=COOC001 -- nothing here\n'
+                     ) == ["COOC900"]
+
+    def test_wrong_code_suppression_keeps_finding_and_flags_itself(self):
+        src = 'f = open(p, "w")  # cooclint: disable=COOC002 -- wrong code\n'
+        assert sorted(codes(src)) == ["COOC001", "COOC900"]
+
+    def test_cooc900_cannot_be_suppressed(self):
+        with pytest.raises(ValueError, match="COOC900"):
+            lint_source('x = 1  # cooclint: disable=COOC900\n', SRC)
+
+    def test_malformed_marker_comment_raises(self):
+        with pytest.raises(ValueError, match="malformed"):
+            lint_source('x = 1  # cooclint: disabel=COOC001\n', SRC)
+
+    def test_syntax_error_reports_not_crashes(self):
+        assert codes("def f(:\n") == ["COOC999"]
+
+
+# ---------------------------------------------------------------------------
+# COOC001 unsafe-write
+# ---------------------------------------------------------------------------
+
+
+class TestUnsafeWrite:
+    def test_positive_bare_open_write_modes(self):
+        for mode in ("w", "wb", "a", "x", "r+"):
+            assert codes(f'f = open(p, "{mode}")') == ["COOC001"], mode
+
+    def test_positive_json_dump_np_save_replace_rmtree(self):
+        src = '''
+        import json, os, shutil
+        import numpy as np
+        json.dump(obj, fh)
+        np.save("out.npy", arr)
+        np.save(os.path.join(d, "x.npy"), arr)
+        os.replace(a, b)
+        shutil.rmtree(d)
+        '''
+        assert codes(src) == ["COOC001"] * 5
+
+    def test_negative_reads_buffers_and_exempt_files(self):
+        clean = '''
+        import numpy as np
+        f = open(p)                  # read
+        g = open(p, "rb")            # read
+        np.save(buf, arr)            # BytesIO-style buffer, not a path
+        s = json.dumps(obj)          # no file object involved
+        '''
+        assert codes(clean) == []
+        dirty = 'f = open(p, "w")'
+        assert codes(dirty, "src/repro/core/atomic_io.py") == []
+        assert codes(dirty, "tests/test_x.py") == []
+        assert codes(dirty, "tests/conftest.py") == []
+        assert codes(dirty, SRC) == ["COOC001"]
+
+    def test_suppressed(self):
+        assert codes(
+            'f = open(p, "w")  # cooclint: disable=COOC001 -- staged\n'
+        ) == []
+
+
+# ---------------------------------------------------------------------------
+# COOC002 unclamped-topk
+# ---------------------------------------------------------------------------
+
+
+class TestUnclampedTopK:
+    def test_positive_raw_k(self):
+        assert codes('w, i = jax.lax.top_k(x, k)') == ["COOC002"]
+        assert codes('w, i = lax.top_k(x, 128)') == ["COOC002"]
+
+    def test_negative_min_at_call_site_or_bound_name(self):
+        src = '''
+        def f(x, k):
+            w, i = jax.lax.top_k(x, min(k, x.shape[-1]))
+            k_eff = min(k, x.shape[-1])
+            w2, i2 = jax.lax.top_k(x, k_eff)
+        '''
+        assert codes(src) == []
+
+    def test_negative_clamp_in_enclosing_scope(self):
+        # the sharded-merge shape: clamp in the outer function, top_k
+        # inside the nested per-shard closure
+        src = '''
+        def outer(x, k):
+            k_loc = min(k, x.shape[-1])
+            def local(xs):
+                return jax.lax.top_k(xs, k_loc)
+            return local(x)
+        '''
+        assert codes(src) == []
+
+    def test_clamp_in_nested_scope_does_not_leak_out(self):
+        src = '''
+        def outer(x, k):
+            def local(xs):
+                k_loc = min(k, xs.shape[-1])
+                return jax.lax.top_k(xs, k_loc)
+            return jax.lax.top_k(x, k_loc)
+        '''
+        assert codes(src) == ["COOC002"]
+
+    def test_chunked_top_k_is_a_proven_sink(self):
+        assert codes('w, i = chunked_top_k(x, k)') == []
+
+    def test_sink_definition_must_keep_its_clamp(self):
+        good = '''
+        def chunked_top_k(x, k, n_chunks=16):
+            k_eff = min(k, x.shape[-1])
+            return jax.lax.top_k(x, k_eff)
+        '''
+        assert codes(good) == []
+        bad = '''
+        def chunked_top_k(x, k, n_chunks=16):
+            return jax.lax.top_k(x, k)
+        '''
+        # the unclamped internal call AND the broken-contract definition
+        assert sorted(codes(bad)) == ["COOC002", "COOC002"]
+
+    def test_suppressed(self):
+        assert codes(
+            'w, i = jax.lax.top_k(x, k)  # cooclint: disable=COOC002 -- ok\n'
+        ) == []
+
+
+# ---------------------------------------------------------------------------
+# COOC003 blocking-in-async
+# ---------------------------------------------------------------------------
+
+SERVE = "src/repro/serve/loop.py"
+
+
+class TestBlockingInAsync:
+    def test_positive_blocking_calls(self):
+        body = {
+            "time.sleep(1)": 1,
+            "jax.block_until_ready(x)": 1,
+            "x.block_until_ready()": 1,
+            "jax.device_get(x)": 1,
+            "open(p)": 1,
+            "fut.result()": 1,
+        }
+        for call, n in body.items():
+            src = f"async def loop():\n    {call}\n"
+            assert codes(src, SERVE) == ["COOC003"] * n, call
+
+    def test_negative_outside_serve_or_async(self):
+        src = "async def loop():\n    time.sleep(1)\n"
+        assert codes(src, "src/repro/core/somewhere.py") == []
+        assert codes("def loop():\n    time.sleep(1)\n", SERVE) == []
+        assert codes("async def loop():\n    await asyncio.sleep(1)\n",
+                     SERVE) == []
+
+    def test_negative_nested_def_runs_in_executor(self):
+        # the server's _run_batch shape: blocking work inside a nested
+        # def handed to run_in_executor is exactly right
+        src = '''
+        async def lane_loop(lane):
+            def _run_batch():
+                lane.engine.run_until_drained()
+                return [f.result() for f in lane.futs]
+            outs = await loop.run_in_executor(None, _run_batch)
+        '''
+        assert codes(src, SERVE) == []
+
+    def test_nested_async_def_is_still_checked(self):
+        src = '''
+        async def outer():
+            async def inner():
+                time.sleep(1)
+            await inner()
+        '''
+        assert codes(src, SERVE) == ["COOC003"]
+
+    def test_suppressed(self):
+        src = ("async def loop():\n"
+               "    time.sleep(1)  # cooclint: disable=COOC003 -- test rig\n")
+        assert codes(src, SERVE) == []
+
+
+# ---------------------------------------------------------------------------
+# COOC004 stale-cache-read
+# ---------------------------------------------------------------------------
+
+
+class TestStaleCacheRead:
+    def test_positive_unversioned_read(self):
+        src = '''
+        def hot_path(self, q):
+            pt = self._packed_t
+            return run(pt, q)
+        '''
+        assert codes(src) == ["COOC004"]
+
+    def test_positive_cached_artifact_without_version(self):
+        src = '''
+        def lookup(ctx, key):
+            return ctx.cached_artifact(key)
+        '''
+        assert codes(src) == ["COOC004"]
+
+    def test_negative_consults_epoch_or_version(self):
+        src = '''
+        def hot_path(self, q):
+            if self._pt_epoch != self.epoch:
+                self._rebuild()
+            return run(self._packed_t, q)
+
+        def lookup(ctx, key, scope):
+            ver = ctx.scope_version(scope)
+            return ctx.cached_artifact(key, ver)
+        '''
+        assert codes(src) == []
+
+    def test_negative_invalidation_is_not_a_read(self):
+        src = '''
+        def drop_scope(self, name):
+            self._scopes.pop(name, None)
+            self._scope_dev.pop(name, None)
+
+        def reset(self):
+            self._x_dense = None
+            del self._packed_t
+            self._artifact_cache.clear()
+        '''
+        assert codes(src) == []
+
+    def test_negative_evidence_in_enclosing_scope(self):
+        src = '''
+        def outer(self):
+            self._check_epoch()
+            def inner():
+                return self._packed_t
+            return inner()
+        '''
+        assert codes(src) == []
+
+    def test_suppressed(self):
+        src = ('def f(self):\n'
+               '    return self._packed_t'
+               '  # cooclint: disable=COOC004 -- repr only\n')
+        assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# COOC005 jit-in-hot-loop
+# ---------------------------------------------------------------------------
+
+
+class TestJitInHotLoop:
+    def test_positive_jit_and_pallas_call_in_loops(self):
+        assert codes('for d in ds:\n    fn = jax.jit(f)\n') == ["COOC005"]
+        assert codes('while True:\n    k = pl.pallas_call(kern)\n'
+                     ) == ["COOC005"]
+
+    def test_positive_reported_once_for_nested_loops(self):
+        src = '''
+        for a in xs:
+            for b in ys:
+                fn = jax.jit(f)
+        '''
+        assert codes(src) == ["COOC005"]
+
+    def test_negative_construction_outside_loop(self):
+        src = '''
+        fn = jax.jit(f)
+        for d in ds:
+            out = fn(d)
+
+        @jax.jit
+        def step(x):
+            return x + 1
+        '''
+        assert codes(src) == []
+
+    def test_suppressed(self):
+        assert codes(
+            'for d in ds:\n'
+            '    fn = jax.jit(f)  # cooclint: disable=COOC005 -- sweep\n'
+        ) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes on the three seeded historical bugs + meta-test
+# ---------------------------------------------------------------------------
+
+
+def run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.cooclint", *args],
+        cwd=REPO, capture_output=True, text=True)
+
+
+class TestCLI:
+    def test_seeded_bare_open_in_benchmarks_fails(self, tmp_path):
+        p = tmp_path / "bench_seeded.py"
+        p.write_text('import json\n'
+                     'with open("out.json", "w") as f:\n'
+                     '    json.dump({}, f)\n')
+        r = run_cli(str(p))
+        assert r.returncode == 1
+        assert "COOC001" in r.stdout
+
+    def test_seeded_unclamped_topk_fails(self, tmp_path):
+        p = tmp_path / "kernel_seeded.py"
+        p.write_text('import jax\n'
+                     'def f(x, k):\n'
+                     '    return jax.lax.top_k(x, k)\n')
+        r = run_cli(str(p))
+        assert r.returncode == 1
+        assert "COOC002" in r.stdout
+
+    def test_seeded_sleep_in_async_serve_fails(self, tmp_path):
+        d = tmp_path / "serve"
+        d.mkdir()
+        p = d / "loop_seeded.py"
+        p.write_text('import time\n'
+                     'async def lane_loop():\n'
+                     '    time.sleep(1)\n')
+        r = run_cli(str(p))
+        assert r.returncode == 1
+        assert "COOC003" in r.stdout
+
+    def test_clean_file_exits_zero_and_json_mode_parses(self, tmp_path):
+        p = tmp_path / "clean.py"
+        p.write_text("x = 1\n")
+        assert run_cli(str(p)).returncode == 0
+        r = run_cli(str(p), "--json")
+        doc = json.loads(r.stdout)
+        assert doc == {"files_checked": 1, "findings": []}
+
+    def test_committed_tree_is_clean(self):
+        # the dogfooding gate: CI green implies zero findings over the
+        # whole tree (src + benchmarks + examples + tools)
+        findings, n_files = lint_paths(
+            [os.path.join(REPO, d)
+             for d in ("src", "benchmarks", "examples", "tools")])
+        assert n_files > 80
+        assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: jaxpr sync-point auditor
+# ---------------------------------------------------------------------------
+
+
+class TestJaxprAudit:
+    def test_entry_points_are_clean(self):
+        # the four jitted entry points trace with no callbacks, no
+        # transfers, no 64-bit widening (sharded entries self-skip
+        # below 2 devices; CI forces 8)
+        from tools.cooclint.jaxpr_audit import assert_clean
+        assert_clean()
+
+    def test_broken_fixture_io_callback_is_flagged(self):
+        import jax
+        import jax.numpy as jnp
+        from tools.cooclint.jaxpr_audit import trace_and_audit
+
+        def broken(x):
+            from jax.experimental import io_callback
+            io_callback(lambda a: a,
+                        jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+            return x * 2
+
+        findings = trace_and_audit(
+            broken, (jax.ShapeDtypeStruct((4,), jnp.int32),), "broken")
+        assert findings and "io_callback" in findings[0]
+
+    def test_broken_fixture_device_get_sync_is_flagged(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from tools.cooclint.jaxpr_audit import trace_and_audit
+
+        def broken(x):
+            # the device_get anti-pattern: materialize on host mid-trace
+            host = np.asarray(jax.device_get(x))
+            return jnp.asarray(host) + 1
+
+        findings = trace_and_audit(
+            broken, (jax.ShapeDtypeStruct((4,), jnp.int32),), "broken")
+        assert findings and "host sync" in findings[0]
+
+    def test_broken_fixture_widening_is_flagged(self):
+        import jax
+        import jax.numpy as jnp
+        from tools.cooclint.jaxpr_audit import trace_and_audit
+
+        def broken(x):
+            return x.astype(jnp.int64) + 1
+
+        jax.config.update("jax_enable_x64", True)
+        try:
+            findings = trace_and_audit(
+                broken, (jax.ShapeDtypeStruct((4,), jnp.int32),), "broken")
+        finally:
+            jax.config.update("jax_enable_x64", False)
+        assert any("int64" in f for f in findings)
+
+    def test_cli_jaxpr_mode_runs(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                             + os.pathsep + env.get("PYTHONPATH", ""))
+        r = subprocess.run(
+            [sys.executable, "-m", "tools.cooclint", "--jaxpr"],
+            cwd=REPO, capture_output=True, text=True, env=env)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "bfs_construct_batch" in r.stdout

@@ -8,6 +8,7 @@ plan shape where possible so the compile is paid once per test, not per
 request.
 """
 import asyncio
+import time
 
 import numpy as np
 import pytest
@@ -297,6 +298,49 @@ class TestCoocServer:
         assert all(r.status in ("ok", "error", "deadline_miss")
                    for r in resps)
         assert any(r.reason == "server_shutdown" for r in resps)
+
+    def test_slow_step_does_not_stall_other_tenants_admission(self):
+        # regression for the event-loop audit around
+        # engine.block_until_ready: the device step (and future
+        # resolution) runs in an executor, so one tenant's pathologically
+        # slow step must not delay an unrelated tenant's admission or
+        # service.  Before the _run_batch refactor a blocking
+        # fut.result() on the loop would serialize the two lanes.
+        SLOW_S = 1.2
+
+        async def go():
+            slow_ctx, fast_ctx = _ctx(seed=7), _ctx(seed=11)
+            server = _server(fast_ctx, [TenantConfig("slow", ctx=slow_ctx),
+                                        TenantConfig("fast")])
+            await server.start()
+            # pay both compiles before the stall is injected
+            assert (await server.submit("slow", [1])).ok
+            assert (await server.submit("fast", [1])).ok
+
+            eng = server._lanes[server._tenant_lane["slow"]].engine
+            orig_drain = eng.run_until_drained
+
+            def stalled_drain(*a, **kw):
+                time.sleep(SLOW_S)               # executor thread: OK
+                return orig_drain(*a, **kw)
+
+            eng.run_until_drained = stalled_drain
+            slow_task = asyncio.create_task(server.submit("slow", [2]))
+            await asyncio.sleep(0.1)             # slow step enters flight
+            t0 = time.monotonic()
+            fast = await server.submit("fast", [2])
+            fast_elapsed = time.monotonic() - t0
+            slow_done_early = slow_task.done()
+            slow = await slow_task
+            await server.stop()
+            return fast, fast_elapsed, slow, slow_done_early
+
+        fast, fast_elapsed, slow, slow_done_early = asyncio.run(go())
+        assert fast.ok and slow.ok
+        # the fast tenant was admitted AND served while the slow step
+        # was still in flight
+        assert not slow_done_early
+        assert fast_elapsed < SLOW_S / 2
 
     def test_compile_budget_enforced_across_server(self):
         async def go():

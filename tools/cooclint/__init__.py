@@ -1,0 +1,18 @@
+"""cooclint — repo-specific static analysis for the co-occurrence stack.
+
+Layer 1: AST rules (:mod:`tools.cooclint.rules`) over the repo's Python
+sources, run through the framework in :mod:`tools.cooclint.framework`.
+Layer 2: jaxpr sync-point auditing of the jitted entry points
+(:mod:`tools.cooclint.jaxpr_audit`).
+
+CLI: ``python -m tools.cooclint [paths...] [--json] [--jaxpr]``.
+"""
+from tools.cooclint.framework import (  # noqa: F401
+    Finding,
+    Rule,
+    all_rules,
+    lint_paths,
+    lint_source,
+    register_rule,
+    render_report,
+)

@@ -1,0 +1,59 @@
+"""CLI: ``python -m tools.cooclint [paths...] [--json] [--jaxpr]``.
+
+Exit codes: 0 clean, 1 findings, 2 usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.cooclint.framework import all_rules, lint_paths, render_report
+
+DEFAULT_PATHS = ["src", "benchmarks", "examples", "tools"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.cooclint",
+        description="repo-specific static analysis "
+                    "(AST rules + jaxpr sync-point audit)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a JSON report instead of text")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="run the layer-2 jaxpr sync-point audit over the "
+                         "jitted entry points instead of the AST rules")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rule set and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, rule in sorted(all_rules().items()):
+            doc = (rule.__doc__ or "").strip().splitlines()[0]
+            print(f"{code}  {rule.name:<18} {doc}")
+        return 0
+
+    if args.jaxpr:
+        from tools.cooclint.jaxpr_audit import audit_entry_points
+        results = audit_entry_points()
+        for r in results:
+            print(r.render())
+        n_bad = sum(1 for r in results if not r.ok)
+        n_skip = sum(1 for r in results if r.status == "skipped")
+        print(f"cooclint --jaxpr: {len(results)} entry point(s), "
+              f"{n_bad} with findings, {n_skip} skipped")
+        return 1 if n_bad else 0
+
+    paths = args.paths or DEFAULT_PATHS
+    try:
+        findings, n_files = lint_paths(paths)
+    except (OSError, ValueError) as e:
+        print(f"cooclint: error: {e}", file=sys.stderr)
+        return 2
+    print(render_report(findings, n_files, as_json=args.as_json))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,241 @@
+"""cooclint rule framework: registry, suppressions, findings, reporting.
+
+The linter is two layers (see README.md §Design / Static analysis):
+
+* **Layer 1 (this framework + rules.py)** — AST rules over the repo's
+  Python sources.  Every rule encodes an invariant a past PR paid for in
+  real bugs (crash-unsafe writes, unclamped ``lax.top_k``, event-loop
+  blocking, stale cache reads, per-request compiles), so a violation is a
+  regression of a *fixed* bug class, not a style opinion.
+* **Layer 2 (jaxpr_audit.py)** — trace-based auditing of the jitted
+  entry points' jaxprs (no host callbacks, no 64-bit widening of the
+  packed postings, no device transfers inside a compiled region).
+
+Suppression syntax — same line as the finding, one or more codes::
+
+    with open(p, "w") as f:  # cooclint: disable=COOC001 -- staged tmp dir
+
+Everything after ``--`` is the committed one-line justification; the
+framework requires nothing after the codes but the repo's policy is that
+every committed suppression carries one.  A suppression that matches no
+finding is itself a finding (``COOC900 unused-suppression``) so the
+committed list can never rot: when the code a suppression excused goes
+away, CI forces the comment out with it.  COOC900 cannot be suppressed.
+
+Adding a rule: subclass :class:`Rule`, set ``code``/``name``/``message``
+class attributes, implement ``check(tree, path, src)`` yielding
+:class:`Finding`, and decorate with :func:`register_rule`.  Codes are
+append-only — never reuse a retired code.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import tokenize
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+#: Code of the meta-finding emitted for a suppression that excused nothing.
+UNUSED_SUPPRESSION = "COOC900"
+
+_MARKER = "cooclint:"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    path: str
+    line: int
+    col: int
+    code: str
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.code} [{self.rule}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base class for AST rules.  Subclasses set ``code`` (``COOC0xx``),
+    ``name`` (kebab-case slug) and implement :meth:`check`."""
+
+    code: str = ""
+    name: str = ""
+
+    def check(self, tree: ast.Module, path: str,
+              src: str) -> Iterable[Finding]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(path=path, line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       code=self.code, rule=self.name, message=message)
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register_rule(cls):
+    """Class decorator: instantiate and register a :class:`Rule` under its
+    code.  Duplicate codes are a programming error, not a config choice."""
+    rule = cls()
+    if not rule.code or not rule.name:
+        raise ValueError(f"rule {cls.__name__} must set code and name")
+    if rule.code in _REGISTRY:
+        raise ValueError(f"duplicate rule code {rule.code} "
+                         f"({cls.__name__} vs {type(_REGISTRY[rule.code]).__name__})")
+    _REGISTRY[rule.code] = rule
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    """code -> rule, importing the built-in rule set on first use."""
+    from tools.cooclint import rules  # noqa: F401  (registers on import)
+    return dict(_REGISTRY)
+
+
+# -- suppressions ------------------------------------------------------------
+
+
+def parse_suppressions(src: str) -> Dict[int, Set[str]]:
+    """line number -> set of codes disabled on that line.
+
+    Recognized comment form: ``# cooclint: disable=CODE[,CODE...]`` with
+    an optional `` -- justification`` tail.  Malformed marker comments
+    (the ``cooclint:`` prefix with anything but a well-formed disable
+    list) raise — a typo'd suppression must not silently suppress
+    nothing.
+    """
+    out: Dict[int, Set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(src).readline)
+        comments = [(t.start[0], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    except tokenize.TokenError:      # unterminated string etc.: the AST
+        return out                   # parse will report it, not us
+    for line, text in comments:
+        body = text.lstrip("#").strip()
+        if not body.startswith(_MARKER):
+            continue
+        rest = body[len(_MARKER):].strip()
+        rest = rest.split("--", 1)[0].strip()     # drop the justification
+        if not rest.startswith("disable="):
+            raise ValueError(
+                f"line {line}: malformed cooclint comment {text!r} "
+                "(expected '# cooclint: disable=COOC0xx[,COOC0xx] "
+                "-- justification')")
+        codes = {c.strip() for c in rest[len("disable="):].split(",")}
+        if not codes or any(not c for c in codes):
+            raise ValueError(
+                f"line {line}: empty code list in cooclint comment {text!r}")
+        if UNUSED_SUPPRESSION in codes:
+            raise ValueError(
+                f"line {line}: {UNUSED_SUPPRESSION} (unused-suppression) "
+                "cannot itself be suppressed — delete the stale comment "
+                "instead")
+        out.setdefault(line, set()).update(codes)
+    return out
+
+
+# -- per-file + per-tree execution -------------------------------------------
+
+
+def lint_source(src: str, path: str,
+                rules: Optional[Dict[str, Rule]] = None) -> List[Finding]:
+    """Run every rule over one source text; returns surviving findings
+    (suppressed ones removed, unused suppressions reported)."""
+    rules = rules if rules is not None else all_rules()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(path=path, line=e.lineno or 1, col=(e.offset or 0) + 1,
+                        code="COOC999", rule="syntax-error",
+                        message=f"cannot parse: {e.msg}")]
+    suppressions = parse_suppressions(src)
+    raw: List[Finding] = []
+    for rule in rules.values():
+        raw.extend(rule.check(tree, path, src))
+    used: Set[Tuple[int, str]] = set()
+    kept: List[Finding] = []
+    for f in sorted(raw, key=lambda f: (f.line, f.col, f.code)):
+        if f.code in suppressions.get(f.line, ()):
+            used.add((f.line, f.code))
+        else:
+            kept.append(f)
+    for line in sorted(suppressions):
+        for code in sorted(suppressions[line]):
+            if (line, code) not in used:
+                kept.append(Finding(
+                    path=path, line=line, col=1, code=UNUSED_SUPPRESSION,
+                    rule="unused-suppression",
+                    message=f"suppression of {code} matches no finding on "
+                            "this line — delete the stale comment"))
+    kept.sort(key=lambda f: (f.line, f.col, f.code))
+    return kept
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[str]:
+    """Expand files/directories to .py files (sorted, __pycache__ skipped)."""
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d != "__pycache__"
+                                 and not d.startswith("."))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Optional[Dict[str, Rule]] = None
+               ) -> Tuple[List[Finding], int]:
+    """Lint every .py file under ``paths``; returns (findings, n_files)."""
+    rules = rules if rules is not None else all_rules()
+    findings: List[Finding] = []
+    n = 0
+    for fn in iter_python_files(paths):
+        n += 1
+        with open(fn, encoding="utf-8") as f:
+            src = f.read()
+        findings.extend(lint_source(src, fn, rules))
+    return findings, n
+
+
+def render_report(findings: Sequence[Finding], n_files: int, *,
+                  as_json: bool = False) -> str:
+    if as_json:
+        return json.dumps({"files_checked": n_files,
+                           "findings": [f.to_json() for f in findings]},
+                          indent=2)
+    lines = [f.render() for f in findings]
+    lines.append(f"cooclint: {len(findings)} finding(s) in "
+                 f"{n_files} file(s) checked")
+    return "\n".join(lines)
+
+
+# -- shared AST helpers (used by rules.py) -----------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)

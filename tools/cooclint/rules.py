@@ -1,0 +1,519 @@
+"""Built-in cooclint rules.  Each encodes an invariant a past PR paid for:
+
+====== ================= ==========================================================
+code   name              invariant (origin)
+====== ================= ==========================================================
+COOC001 unsafe-write     all durable writes go through core/atomic_io.py (PR 8
+                         fixed three bare-open("w") crash-truncation bugs)
+COOC002 unclamped-topk   every lax.top_k / chunked_top_k k is provably clamped
+                         to the axis width via min(...) (PR 3/4 each fixed a
+                         k > V crash)
+COOC003 blocking-in-async no blocking call lexically on the event loop in the
+                         serving path (PR 7's batcher moves device work to
+                         executors; one stray sleep stalls every tenant)
+COOC004 stale-cache-read QueryContext cached artifacts are only read by code
+                         that consults epoch / scope_version / cold_version
+                         (PR 3/8 epoch-versioned every cache after eviction
+                         poisoning)
+COOC005 jit-in-hot-loop  jax.jit / pallas_call construction never happens
+                         inside a loop body (defeats the engine's LRU compile
+                         cache, PR 7)
+====== ================= ==========================================================
+
+Rules are deliberately *lexical* and conservative: they prove safety
+syntactically (e.g. ``k`` assigned from ``min(...)`` in an enclosing
+function scope) and demand an explicit justified suppression for
+anything they cannot prove.  False-negative room is accepted where the
+alternative is flagging idioms the repo relies on (e.g. ``np.save`` into
+a ``BytesIO`` buffer is not a durable write, so only literal/joined/call
+path arguments are flagged).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from tools.cooclint.framework import (
+    Finding,
+    Rule,
+    call_name,
+    register_rule,
+)
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _walk_scope(node: ast.AST) -> Iterable[ast.AST]:
+    """Walk a subtree but do not descend into nested function bodies."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, _FUNC_NODES):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _nested_functions(node: ast.AST) -> Iterable[ast.AST]:
+    """Function definitions whose innermost enclosing scope is ``node``."""
+    for n in _walk_scope(node):
+        if isinstance(n, _FUNC_NODES):
+            yield n
+
+
+def _is_test_path(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    base = norm.rsplit("/", 1)[-1]
+    return ("/tests/" in f"/{norm}" or base.startswith("test_")
+            or base == "conftest.py")
+
+
+# ---------------------------------------------------------------------------
+# COOC001 unsafe-write
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class UnsafeWrite(Rule):
+    """Durable writes outside core/atomic_io.py.
+
+    A bare ``open(p, "w")`` + write leaves a torn file if the process
+    dies mid-write; the repo's contract is temp → fsync → rename →
+    fsync-parent via :mod:`repro.core.atomic_io`.  Flags: ``open`` with
+    a writing mode, ``json.dump`` (writes through a file object),
+    ``np.save``/``np.savez*`` with a path-like first argument,
+    ``os.replace`` (the rename half of the protocol, meaningless without
+    the fsync half), and ``shutil.rmtree`` (destructive; must be staged
+    GC).  Exempt: ``core/atomic_io.py`` itself and test files.
+    """
+
+    code = "COOC001"
+    name = "unsafe-write"
+
+    _WRITE_MODE_CHARS = set("wax+")
+
+    def check(self, tree: ast.Module, path: str, src: str) -> Iterable[Finding]:
+        if path.replace("\\", "/").endswith("core/atomic_io.py"):
+            return
+        if _is_test_path(path):
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name is None:
+                continue
+            if name in ("open", "io.open"):
+                mode = self._mode_of(node)
+                if mode is not None and self._WRITE_MODE_CHARS & set(mode):
+                    yield self.finding(
+                        path, node,
+                        f"bare open(..., {mode!r}) — durable writes must go "
+                        "through core/atomic_io (atomic_write_text/"
+                        "atomic_write_bytes or staged_dir+commit_dir)")
+            elif name == "json.dump":
+                yield self.finding(
+                    path, node,
+                    "json.dump writes through a raw file object — use "
+                    "atomic_io.atomic_write_text(path, json.dumps(...))")
+            elif name in ("np.save", "numpy.save", "np.savez", "numpy.savez",
+                          "np.savez_compressed", "numpy.savez_compressed"):
+                if node.args and isinstance(
+                        node.args[0], (ast.Constant, ast.JoinedStr, ast.Call)):
+                    yield self.finding(
+                        path, node,
+                        f"{name} to a filesystem path is not crash-safe — "
+                        "serialize into a buffer and commit via atomic_io")
+            elif name == "os.replace":
+                yield self.finding(
+                    path, node,
+                    "os.replace outside atomic_io skips the fsync protocol — "
+                    "use atomic_io's commit helpers")
+            elif name == "shutil.rmtree":
+                yield self.finding(
+                    path, node,
+                    "shutil.rmtree is destructive — route deletion through a "
+                    "staged/GC path and justify with a suppression if "
+                    "intentional")
+
+    def _mode_of(self, node: ast.Call) -> Optional[str]:
+        mode: Optional[ast.AST] = None
+        if len(node.args) >= 2:
+            mode = node.args[1]
+        for kw in node.keywords:
+            if kw.arg == "mode":
+                mode = kw.value
+        if isinstance(mode, ast.Constant) and isinstance(mode.value, str):
+            return mode.value
+        return None
+
+
+# ---------------------------------------------------------------------------
+# COOC002 unclamped-topk
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class UnclampedTopK(Rule):
+    """``top_k`` with a ``k`` that is not provably ``min(...)``-clamped.
+
+    ``lax.top_k(x, k)`` with ``k > x.shape[-1]`` is a crash (PR 3 hit it
+    at tiny vocab, PR 4 at the materialize tail tile).  ``k`` counts as
+    proven iff it is literally ``min(...)`` at the call site or a name
+    assigned from ``min(...)`` in the enclosing function-scope stack
+    (sharded merge helpers clamp in the enclosing function and call
+    ``top_k`` inside nested per-shard closures).  Anything else —
+    including constants, which are only safe relative to shapes the
+    linter cannot see — needs a justified suppression.
+
+    ``chunked_top_k`` call sites are proven interprocedurally: the
+    wrapper opens with ``k_eff = min(k, v)`` and pads the result back to
+    ``(B, k)``, so it accepts any ``k`` by contract (clamping at its
+    call sites would *shrink the output* and break that contract).  The
+    proof is checked, not assumed — wherever a ``chunked_top_k``
+    function is *defined*, this rule verifies the definition still binds
+    a ``min(...)``-clamped name before its first ``top_k`` use.
+    """
+
+    code = "COOC002"
+    name = "unclamped-topk"
+
+    _TARGETS = ("top_k", "chunked_top_k")
+    _CLAMPING_SINKS = frozenset({"chunked_top_k"})
+
+    def check(self, tree: ast.Module, path: str, src: str) -> Iterable[Finding]:
+        yield from self._scope(tree, path, frozenset())
+        yield from self._check_sink_definitions(tree, path)
+
+    def _scope(self, scope: ast.AST, path: str,
+               inherited: frozenset) -> Iterable[Finding]:
+        clamped = set(inherited) | self._clamped_names(scope)
+        for node in _walk_scope(scope):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if name is None:
+                    continue
+                short = name.rsplit(".", 1)[-1]
+                if short not in self._TARGETS:
+                    continue
+                if short in self._CLAMPING_SINKS:
+                    continue  # proven at the definition site instead
+                k = self._k_arg(node)
+                if k is None or self._is_clamped(k, clamped):
+                    continue
+                yield self.finding(
+                    path, node,
+                    f"{name} k argument {ast.unparse(k)!r} is not provably "
+                    "clamped — bind it via k_eff = min(k, axis_size) in this "
+                    "or an enclosing function (or route through "
+                    "chunked_top_k, which clamps internally)")
+        for fn in _nested_functions(scope):
+            if isinstance(fn, ast.Lambda):
+                yield from self._scope_lambda(fn, path, frozenset(clamped))
+            else:
+                yield from self._scope(fn, path, frozenset(clamped))
+
+    def _scope_lambda(self, fn: ast.Lambda, path: str,
+                      inherited: frozenset) -> Iterable[Finding]:
+        wrapper = ast.Module(body=[ast.Expr(value=fn.body)], type_ignores=[])
+        for f in self._scope(wrapper, path, inherited):
+            yield f
+
+    def _check_sink_definitions(self, tree: ast.Module,
+                                path: str) -> Iterable[Finding]:
+        """The interprocedural proof behind ``_CLAMPING_SINKS``: every
+        *definition* of a sink must itself bind a ``min(...)`` name."""
+        for node in ast.walk(tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name in self._CLAMPING_SINKS
+                    and not self._clamped_names(node)):
+                yield self.finding(
+                    path, node,
+                    f"definition of clamping sink {node.name}() no longer "
+                    "binds a min(...)-clamped k — its call sites are "
+                    "exempted from this rule on the strength of that clamp")
+
+    def _clamped_names(self, scope: ast.AST) -> Set[str]:
+        names: Set[str] = set()
+        for node in _walk_scope(scope):
+            targets: List[Tuple[ast.AST, ast.AST]] = []
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        targets.append((t, node.value))
+                    elif (isinstance(t, ast.Tuple)
+                          and isinstance(node.value, ast.Tuple)
+                          and len(t.elts) == len(node.value.elts)):
+                        for te, ve in zip(t.elts, node.value.elts):
+                            if isinstance(te, ast.Name):
+                                targets.append((te, ve))
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                if isinstance(node.target, ast.Name):
+                    targets.append((node.target, node.value))
+            for target, value in targets:
+                if self._is_min(value):
+                    names.add(target.id)  # type: ignore[attr-defined]
+        return names
+
+    def _is_min(self, node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "min")
+
+    def _is_clamped(self, k: ast.AST, clamped: Set[str]) -> bool:
+        if self._is_min(k):
+            return True
+        if isinstance(k, ast.Name) and k.id in clamped:
+            return True
+        return False
+
+    def _k_arg(self, node: ast.Call) -> Optional[ast.AST]:
+        for kw in node.keywords:
+            if kw.arg == "k":
+                return kw.value
+        if len(node.args) >= 2:
+            return node.args[1]
+        return None
+
+
+# ---------------------------------------------------------------------------
+# COOC003 blocking-in-async
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class BlockingInAsync(Rule):
+    """Blocking calls lexically inside ``async def`` bodies in serve code.
+
+    Applies to files whose path contains ``serve``.  Checks only code
+    that actually runs on the event loop: nested ``def``/``lambda``
+    bodies are skipped because the serving path hands them to
+    ``run_in_executor`` (each nested ``async def`` is independently
+    checked as its own scope).  Flags ``time.sleep``,
+    ``block_until_ready``, ``device_get``, bare ``open`` (any mode —
+    file I/O blocks), and ``.result()`` (a concurrent-futures result
+    wait; awaiting is the async spelling).
+    """
+
+    code = "COOC003"
+    name = "blocking-in-async"
+
+    def check(self, tree: ast.Module, path: str, src: str) -> Iterable[Finding]:
+        if "serve" not in path.replace("\\", "/"):
+            return
+        for node in ast.walk(tree):
+            if isinstance(node, ast.AsyncFunctionDef):
+                yield from self._check_async_body(node, path)
+
+    def _check_async_body(self, fn: ast.AsyncFunctionDef,
+                          path: str) -> Iterable[Finding]:
+        for node in _walk_scope(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name == "time.sleep":
+                yield self.finding(
+                    path, node,
+                    f"time.sleep on the event loop inside async {fn.name}() "
+                    "stalls every tenant — await asyncio.sleep or move to an "
+                    "executor")
+            elif name is not None and (
+                    name == "block_until_ready"
+                    or name.endswith(".block_until_ready")):
+                yield self.finding(
+                    path, node,
+                    f"block_until_ready inside async {fn.name}() blocks the "
+                    "loop on device work — run it via run_in_executor")
+            elif name is not None and (
+                    name == "device_get" or name.endswith(".device_get")):
+                yield self.finding(
+                    path, node,
+                    f"device_get inside async {fn.name}() is a synchronous "
+                    "device→host transfer — run it via run_in_executor")
+            elif name in ("open", "io.open"):
+                yield self.finding(
+                    path, node,
+                    f"file I/O inside async {fn.name}() blocks the loop — "
+                    "move it to an executor")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "result" and not node.args
+                  and not node.keywords):
+                yield self.finding(
+                    path, node,
+                    f".result() inside async {fn.name}() is a blocking "
+                    "future wait — resolve results in the executor and "
+                    "return them, or await an asyncio future")
+
+
+# ---------------------------------------------------------------------------
+# COOC004 stale-cache-read
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class StaleCacheRead(Rule):
+    """Cache-field reads in functions that never consult a version.
+
+    The QueryContext caches (``_artifact_cache``, ``_x_dense``,
+    ``_packed_t``, ``_packed_t_pad``, ``_scope_dev``) are epoch/version
+    keyed; ingest, eviction and cold spill bump the versions, and a read
+    that skips the check serves poisoned post-eviction state (the PR 8
+    scope-eviction bug).  A function *reading* a cache field must
+    mention an epoch/version identifier (``epoch``, ``scope_version``,
+    ``cold_version``, ``cached_artifact``'s version argument, ...)
+    somewhere in its own or an enclosing function scope.  Invalidation
+    and replacement — ``.pop``/``.clear`` on a cache dict, assignment or
+    ``del`` of a cache field/entry — are not reads and are exempt.
+    """
+
+    code = "COOC004"
+    name = "stale-cache-read"
+
+    _CACHE_FIELDS = frozenset({
+        "_artifact_cache", "_x_dense", "_packed_t", "_packed_t_pad",
+        "_scope_dev",
+    })
+    _EVIDENCE_SUBSTRINGS = ("epoch", "version")
+
+    def check(self, tree: ast.Module, path: str, src: str) -> Iterable[Finding]:
+        for fn in _nested_functions(tree):
+            if isinstance(fn, ast.Lambda):
+                continue
+            yield from self._scope(fn, path, inherited_evidence=False)
+
+    def _scope(self, fn: ast.AST, path: str,
+               inherited_evidence: bool) -> Iterable[Finding]:
+        evidence = inherited_evidence or self._has_evidence(fn)
+        if not evidence:
+            exempt = self._invalidation_nodes(fn)
+            for node in _walk_scope(fn):
+                if id(node) in exempt:
+                    continue
+                hit = self._cache_access(node)
+                if hit is not None:
+                    yield self.finding(
+                        path, node,
+                        f"reads cached artifact {hit!r} but function "
+                        f"{getattr(fn, 'name', '<lambda>')}() never consults "
+                        "epoch/scope_version/cold_version — stale "
+                        "post-eviction state can be served")
+        for sub in _nested_functions(fn):
+            if isinstance(sub, ast.Lambda):
+                continue
+            yield from self._scope(sub, path, evidence)
+
+    def _invalidation_nodes(self, fn: ast.AST) -> Set[int]:
+        """ids of cache-field Attribute nodes used as invalidation /
+        replacement, not as reads: ``self._x.pop(...)`` / ``.clear()``,
+        ``self._x = ...``, ``del self._x``, ``self._x[k] = ...`` /
+        ``del self._x[k]``."""
+        exempt: Set[int] = set()
+
+        def is_cache_attr(n: ast.AST) -> bool:
+            return (isinstance(n, ast.Attribute)
+                    and n.attr in self._CACHE_FIELDS)
+
+        for node in _walk_scope(fn):
+            if isinstance(node, ast.Attribute):
+                if (is_cache_attr(node)
+                        and isinstance(node.ctx, (ast.Store, ast.Del))):
+                    exempt.add(id(node))
+                elif (node.attr in ("pop", "clear")
+                      and is_cache_attr(node.value)):
+                    exempt.add(id(node.value))
+            elif (isinstance(node, ast.Subscript)
+                  and is_cache_attr(node.value)
+                  and isinstance(node.ctx, (ast.Store, ast.Del))):
+                exempt.add(id(node.value))
+        return exempt
+
+    def _has_evidence(self, fn: ast.AST) -> bool:
+        for node in _walk_scope(fn):
+            ident: Optional[str] = None
+            if isinstance(node, ast.Attribute):
+                ident = node.attr
+            elif isinstance(node, ast.Name):
+                ident = node.id
+            elif isinstance(node, ast.keyword):
+                ident = node.arg
+            if ident is not None and any(
+                    s in ident.lower() for s in self._EVIDENCE_SUBSTRINGS):
+                return True
+        return False
+
+    def _cache_access(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Attribute) and node.attr in self._CACHE_FIELDS:
+            return node.attr
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name is not None and name.rsplit(".", 1)[-1] == "cached_artifact":
+                return "cached_artifact"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# COOC005 jit-in-hot-loop
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class JitInHotLoop(Rule):
+    """``jax.jit`` / ``pallas_call`` constructed inside a loop body.
+
+    Each such construction is a fresh executable: tracing + compilation
+    on every iteration, bypassing the engine's LRU compile budget.  The
+    engine pattern is to build the jitted callable once (module level,
+    cached ``_executor()``, or ``functools.lru_cache``) and loop over
+    *calls*, never over *constructions*.
+    """
+
+    code = "COOC005"
+    name = "jit-in-hot-loop"
+
+    _LOOPS = (ast.For, ast.AsyncFor, ast.While)
+
+    def check(self, tree: ast.Module, path: str, src: str) -> Iterable[Finding]:
+        for loop in ast.walk(tree):
+            if not isinstance(loop, self._LOOPS):
+                continue
+            for node in ast.walk(loop):
+                if node is loop:
+                    continue
+                if isinstance(node, self._LOOPS):
+                    continue  # the inner loop reports its own body
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if name is None:
+                    continue
+                short = name.rsplit(".", 1)[-1]
+                if short == "jit" or short == "pallas_call":
+                    if self._innermost_loop_is(tree, node, loop):
+                        yield self.finding(
+                            path, node,
+                            f"{name} constructed inside a loop — compiles a "
+                            "fresh executable per iteration; hoist the "
+                            "construction out of the loop (or cache it)")
+
+    def _innermost_loop_is(self, tree: ast.Module, target: ast.AST,
+                           loop: ast.AST) -> bool:
+        """True iff ``loop`` is the innermost loop enclosing ``target``
+        (prevents duplicate findings from nested loops)."""
+        path_stack: List[ast.AST] = []
+
+        def visit(node: ast.AST) -> Optional[bool]:
+            if node is target:
+                for anc in reversed(path_stack):
+                    if isinstance(anc, self._LOOPS):
+                        return anc is loop
+                return False
+            path_stack.append(node)
+            try:
+                for child in ast.iter_child_nodes(node):
+                    r = visit(child)
+                    if r is not None:
+                        return r
+            finally:
+                path_stack.pop()
+            return None
+
+        return bool(visit(tree))
