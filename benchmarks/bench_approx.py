@@ -1,0 +1,152 @@
+"""Approximate materialization: recall vs speedup vs the exact path.
+
+``materialize(mode="approx")`` prunes the (V, V) tile sweep down to the
+LSH-candidate row-blocks, so its win is the fraction of tiles it never
+counts — and its cost is the top-k edges those skipped tiles would have
+contributed.  This bench measures both sides at a fixed vocabulary: one
+exact popcount baseline, then a sweep over the permutation budget
+(``num_perm``), reporting per point the measured recall of the exact
+top-k edge set, the fraction of row-block tiles actually counted, and
+the wall-clock speedup over the exact run.
+
+The corpus is clustered (community structure), not the Zipf
+``synthetic_csl`` stream: LSH prunes on pairwise Jaccard similarity, and
+a Zipf categorical corpus has near-zero similarity everywhere — the
+regime where approx mode is the wrong tool and the bench would measure
+nothing.  Each doc samples one cluster's terms plus uniform noise, the
+regime the README's §Approximate mode documents.
+
+Signatures are epoch-versioned artifacts maintained incrementally by
+ingest, so the timed approx runs serve warm signatures and re-run only
+the banding + candidate counting — the steady-state query path.  Recall
+and tiles_fraction records carry no gate direction (they are quality
+curves, pinned by tests/test_differential.py); the ``speedup`` records
+are the CI-gated metrics.
+
+    PYTHONPATH=src python -m benchmarks.bench_approx
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import QueryContext, materialize
+from benchmarks.common import section, write_csv
+
+THRESHOLD = 0.5
+
+
+def clustered_corpus(vocab: int, n_docs: int, cluster: int, density: float,
+                     n_noise: int, seed: int) -> List[List[int]]:
+    """Community-structured docs: one cluster's terms kept with prob
+    ``density`` plus ``n_noise`` uniform terms (intra-cluster Jaccard
+    ~= density / (2 - density))."""
+    rng = np.random.default_rng(seed)
+    n_clusters = vocab // cluster
+    docs = []
+    for _ in range(n_docs):
+        c = int(rng.integers(0, n_clusters))
+        base = np.arange(c * cluster, (c + 1) * cluster)
+        keep = base[rng.random(cluster) < density]
+        noise = rng.integers(0, vocab, size=n_noise)
+        docs.append(sorted(set(map(int, keep)) | set(map(int, noise))))
+    return docs
+
+
+def _edge_rows(net) -> dict:
+    src, dst, w, ok = (np.asarray(getattr(net, f))
+                       for f in ("src", "dst", "weight", "valid"))
+    return {(int(s), int(d)): int(wt)
+            for s, d, wt, o in zip(src, dst, w, ok) if o}
+
+
+def main(argv: List[str] | None = None) -> List[Dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--n-docs", type=int, default=2048)
+    ap.add_argument("--cluster", type=int, default=32)
+    ap.add_argument("--density", type=float, default=0.85)
+    ap.add_argument("--noise", type=int, default=2)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--num-perms", type=int, nargs="+",
+                    default=[32, 64, 128])
+    args = ap.parse_args(argv)
+
+    section(f"Approximate materialization — V={args.vocab}, "
+            f"{args.n_docs} docs, k={args.k}, threshold={THRESHOLD}, "
+            f"num_perm sweep {args.num_perms}")
+    docs = clustered_corpus(args.vocab, args.n_docs, args.cluster,
+                            args.density, args.noise, seed=0)
+    ctx = QueryContext.from_docs(docs, args.vocab)
+
+    def run_exact():
+        net = materialize(ctx, k=args.k, method="popcount", use_cache=False)
+        jax.block_until_ready(net.weight)
+        return net
+
+    exact_net = run_exact()                    # compile
+    ts = []
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        run_exact()
+        ts.append(time.perf_counter() - t0)
+    t_exact = sorted(ts)[len(ts) // 2]
+    exact_edges = set(_edge_rows(exact_net))
+    print(f"    exact: {t_exact * 1e3:8.1f} ms   "
+          f"{len(exact_edges)} directed edges")
+
+    rows, out = [], []
+    for perm in args.num_perms:
+        def run_approx():
+            net = materialize(ctx, k=args.k, mode="approx",
+                              threshold=THRESHOLD, num_perm=perm,
+                              method="popcount", use_cache=False)
+            jax.block_until_ready(net.weight)
+            return net
+        net = run_approx()                     # compile + hash signatures
+        ts = []
+        for _ in range(args.repeats):
+            t0 = time.perf_counter()
+            net = run_approx()
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[len(ts) // 2]
+        approx = _edge_rows(net)
+        # weights that ARE emitted must be the exact counts — approx only
+        # drops edges, it never mis-counts them
+        wrong = [e for e, w in approx.items()
+                 if e in exact_edges and _edge_rows(exact_net)[e] != w]
+        assert not wrong, f"approx mis-counted edges: {wrong[:5]}"
+        recall = (len(approx.keys() & exact_edges) / len(exact_edges)
+                  if exact_edges else 1.0)
+        speedup = t_exact / t
+        st = net.stats
+        print(f"  perm={perm:>4}: {t * 1e3:8.1f} ms   "
+              f"speedup x{speedup:5.2f}   recall {recall:.3f}   "
+              f"tiles {st.tiles_fraction:.3f}   "
+              f"(est. recall {float(net.recall_estimate):.3f}, "
+              f"bands {st.bands}x{st.rows_per_band})")
+        rows.append({"vocab": args.vocab, "n_docs": args.n_docs,
+                     "k": args.k, "num_perm": perm,
+                     "threshold": THRESHOLD, "time_s": t,
+                     "exact_time_s": t_exact, "speedup": speedup,
+                     "recall": recall,
+                     "recall_estimate": float(net.recall_estimate),
+                     "tiles_fraction": st.tiles_fraction,
+                     "candidate_pairs": st.candidate_pairs})
+        out.append({"name": f"approx_speedup_vs_exact_p{perm}",
+                    "value": speedup})
+        out.append({"name": f"approx_recall_p{perm}", "value": recall})
+        out.append({"name": f"approx_tiles_fraction_p{perm}",
+                    "value": st.tiles_fraction})
+    path = write_csv("approx", rows)
+    print(f"CSV -> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,7 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     choices=("fig7", "fig5", "scaling", "engine_throughput",
                              "streaming", "full_network", "sharded",
-                             "serving", "roofline"))
+                             "serving", "approx", "roofline"))
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="BENCH_<name>.json file or directory of them; "
                          "exit 1 on any >20%% metric regression")
@@ -111,6 +111,11 @@ def main() -> int:
                      "120", "--rate", "30", "--burst", "48", "--hostile", "3",
                      "--max-queue-depth", "24"] if args.quick else [])
     run_bench("serving", lambda: bench_serving.main(serving_argv))
+
+    from benchmarks import bench_approx
+    approx_argv = (["--n-docs", "768", "--repeats", "3", "--num-perms",
+                    "32", "128"] if args.quick else [])
+    run_bench("approx", lambda: bench_approx.main(approx_argv))
 
     from benchmarks import roofline
     run_bench("roofline", roofline.main)

@@ -359,7 +359,7 @@ class CoocIndex:
 
     def full_network(self, k: int = 8, *, scope: Optional[str] = None,
                      now: Optional[float] = None,
-                     method: Optional[str] = None,
+                     method: Optional[str] = None, mode: str = "exact",
                      **kwargs) -> Dict[Tuple[str, str], int]:
         """The CORPUS-level network: every indexed term's top-``k``
         heaviest co-occurrence neighbors, as string edges
@@ -371,21 +371,28 @@ class CoocIndex:
         bucket ("7d") or source tag exactly as in :meth:`query`;
         ``method`` defaults to the engine's.  A warm context (no ingest
         since the last call) serves the cached result.
+
+        ``mode="approx"`` (plus ``threshold=`` / ``num_perm=`` knobs,
+        see :func:`repro.core.materialize.materialize`) sketch-prunes the
+        sweep: MinHash/LSH candidate pairs are exact-counted and the
+        rest skipped — every returned weight is exact, edges can only be
+        missed (unscoped and ``scope="all-time"`` only).
         """
-        net = self._materialize(k, scope, now, method, **kwargs)
+        net = self._materialize(k, scope, now, method, mode=mode, **kwargs)
         id2t = self.lexicon.id_to_term
         return {(id2t[a], id2t[b]): w
                 for (a, b), w in to_edge_dict(net).items()}
 
     def network_stats(self, k: int = 8, *, scope: Optional[str] = None,
                       now: Optional[float] = None,
-                      method: Optional[str] = None,
+                      method: Optional[str] = None, mode: str = "exact",
                       **kwargs) -> NetworkStats:
         """Global statistics of the materialized corpus network (node and
         edge counts, density, degree / weighted-degree distributions) —
         the Fig.-style numbers the downstream network-analysis consumers
-        report.  Same k/scope/method semantics as :meth:`full_network`."""
-        net = self._materialize(k, scope, now, method, **kwargs)
+        report.  Same k/scope/method/mode semantics as
+        :meth:`full_network`."""
+        net = self._materialize(k, scope, now, method, mode=mode, **kwargs)
         return global_statistics(net, self.ctx.vocab_size)
 
     # -- persistence --------------------------------------------------------

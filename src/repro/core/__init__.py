@@ -61,6 +61,17 @@ from repro.core.network import (  # noqa: F401
     top_edges,
 )
 from repro.core.materialize import materialize  # noqa: F401
+from repro.core.sketch import (  # noqa: F401
+    ApproxCoocNetwork,
+    ApproxStats,
+    block_signatures,
+    candidate_columns,
+    hash_coefficients,
+    lsh_params,
+    lsh_probabilities,
+    merge_signatures,
+    minhash_signatures,
+)
 from repro.core.atomic_io import (  # noqa: F401
     atomic_write_bytes,
     atomic_write_text,
@@ -87,5 +98,6 @@ from repro.core.distributed import (  # noqa: F401
     shard_kind,
     sharded_block_topk,
     sharded_counts,
+    sharded_signatures,
     validate_mesh,
 )

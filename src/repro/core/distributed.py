@@ -252,6 +252,62 @@ def sharded_counts(index: PackedIndex, masks: jax.Array, method: str,
 
 
 # ---------------------------------------------------------------------------
+# Sharded MinHash signatures (the approximate-materialization sketch)
+# ---------------------------------------------------------------------------
+
+
+def sharded_signatures(packed: jax.Array, a: jax.Array, b: jax.Array,
+                       mesh: Mesh, *, perm_tile: int = 16) -> jax.Array:
+    """Per-term MinHash signatures (V, P) uint32 under ``mesh`` —
+    bit-exact vs :func:`repro.core.sketch.minhash_signatures`.
+
+    Term mesh: each device hashes ITS V/n postings columns — the
+    signatures are computed term-sharded alongside the postings, and
+    only the (V/n, P) shard results cross the interconnect in the final
+    gather.  Doc mesh: each device hashes its word rows against GLOBAL
+    slot keys and the partial signatures merge with a ``pmin`` — min is
+    associative and commutative, so the merge is exact in any shard
+    order (all-zero padding rows hash to ``SIG_EMPTY`` and never move a
+    minimum; padding columns are sliced off after the gather).
+    """
+    from repro.core.sketch import signatures_from_packed
+    kind = shard_kind(mesh)
+    n = n_shards(mesh)
+    w, v = packed.shape
+
+    if kind == "terms":
+        v_pad = _round_up(v, n)
+        packed_p = _pad_dim(packed, 1, v_pad)
+        keys = jnp.arange(w * 32, dtype=jnp.uint32)
+
+        def local(packed_l, keys, a, b):
+            sig = signatures_from_packed(packed_l, keys, a, b,
+                                         perm_tile=perm_tile)
+            return _tiled_all_gather(sig, TERM_AXIS, axis=0, tile_axis=1)
+
+        out = _smap(local, mesh,
+                    in_specs=(P(None, TERM_AXIS), P(), P(), P()),
+                    out_specs=P(None, None))(packed_p, keys, a, b)
+        return out[:v]
+
+    w_pad = _round_up(w, n)
+    w_loc = w_pad // n
+    packed_p = _pad_dim(packed, 0, w_pad)
+
+    def local(packed_l, a, b):
+        off = jax.lax.axis_index(DOC_AXIS).astype(jnp.uint32) \
+            * jnp.uint32(w_loc * 32)
+        keys = off + jnp.arange(w_loc * 32, dtype=jnp.uint32)
+        sig = signatures_from_packed(packed_l, keys, a, b,
+                                     perm_tile=perm_tile)
+        return jax.lax.pmin(sig, DOC_AXIS)
+
+    return _smap(local, mesh,
+                 in_specs=(P(DOC_AXIS, None), P(), P()),
+                 out_specs=P(None, None))(packed_p, a, b)
+
+
+# ---------------------------------------------------------------------------
 # Sharded row-block top-k (materialize's merge under a mesh)
 # ---------------------------------------------------------------------------
 

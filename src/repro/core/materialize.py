@@ -42,6 +42,17 @@ artifacts — a warm context materializes with ZERO unpacks — and the
 finished network itself is cached per (k, method, scope) and invalidated
 by ingest/evict/grow epoch bumps (and by scope redefinition, via the
 per-scope version counters).
+
+**Approximate mode** (``mode="approx"``, :mod:`repro.core.sketch`): the
+exact sweep above is quadratic in V no matter how it is tiled.  The
+approximate mode prunes it with MinHash/LSH — per-term signatures over
+the packed postings generate candidate term pairs, and the exact
+counting machinery runs ONLY on each row block's candidate columns,
+gathered into a dense sub-index so the registry kernels and the sharded
+candidate merge are reused unchanged.  Candidates are exact-counted, so
+every *emitted* edge weight is exact; only edges whose endpoints never
+collided in a band can be missed (the recall/speedup differential
+harness in ``tests/test_differential.py`` measures exactly that trade).
 """
 from __future__ import annotations
 
@@ -50,6 +61,7 @@ from typing import Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.inverted_index import (
     PackedIndex,
@@ -58,6 +70,20 @@ from repro.core.inverted_index import (
 )
 from repro.core.network import CoocNetwork
 from repro.core.query import get_count_method
+from repro.core.sketch import (
+    DEFAULT_NUM_PERM,
+    DEFAULT_THRESHOLD,
+    TILE_QUANTUM,
+    ApproxCoocNetwork,
+    ApproxStats,
+    candidate_columns,
+    estimate_recall,
+    gathered_top_k,
+    hash_coefficients,
+    lsh_params,
+    minhash_signatures,
+    pad_candidates,
+)
 
 
 def _round_up(n: int, mult: int) -> int:
@@ -157,17 +183,79 @@ def _topk_row_blocks_rows(index: PackedIndex, packed_t: jax.Array,
                                   mesh=mesh)
 
 
-def _resolve_materialize_operands(index, method: str):
+@functools.partial(jax.jit,
+                   static_argnames=("k", "row_tile", "method", "mesh"))
+def _approx_topk_row_block(index: PackedIndex, packed_t: jax.Array,
+                           operands: Mapping[str, jax.Array], row_start,
+                           cand_cols: jax.Array, rows_pos: jax.Array, *,
+                           k: int, row_tile: int, method: str,
+                           mesh=None) -> Tuple[jax.Array, jax.Array]:
+    """Top-k neighbors for one row block over its LSH candidate columns
+    only — ``mode="approx"``'s tile step.
+
+    cand_cols: (C,) int32 sorted global candidate term ids, -1 padding
+    to the power-of-two tile bucket (``sketch.pad_candidates``);
+    rows_pos: (row_tile,) int32 position of each row's own term inside
+    cand_cols (== C when absent, matching no column).  The candidates
+    gather into a dense (W, C) sub-index with pad columns ZEROED — a pad
+    column counts 0 everywhere, so it can never emit a valid edge — and
+    the exact machinery runs on the sub-problem unchanged: the
+    count-method registry (or ``distributed.sharded_block_topk``'s
+    candidate merge under a mesh) produces the (row_tile, C) counts, and
+    the winners map back to global term ids.  Tie order matches the
+    exact path: candidates are gathered in ascending global-id order and
+    ``lax.top_k`` prefers earlier slots.
+    """
+    v = packed_t.shape[0]
+    c = cand_cols.shape[0]
+    rows = row_start + jnp.arange(row_tile, dtype=jnp.int32)        # (bm,)
+    masks = packed_t[jnp.clip(rows, 0, v - 1)]                      # (bm, W)
+    masks = jnp.where((rows < v)[:, None], masks, jnp.uint32(0))
+
+    pad = cand_cols < 0
+    safe = jnp.clip(cand_cols, 0, v - 1)
+    sub_packed = jnp.where(pad[None, :], jnp.uint32(0),
+                           jnp.take(index.packed, safe, axis=1))    # (W, C)
+    sub_df = jnp.where(pad, 0, jnp.take(index.doc_freq, safe))
+    sub_index = PackedIndex(sub_packed, sub_df, index.n_docs)
+    sub_ops = {}
+    if "x_dense" in operands:
+        x = operands["x_dense"]
+        sub_ops["x_dense"] = jnp.where(pad[None, :],
+                                       jnp.zeros((), x.dtype),
+                                       jnp.take(x, safe, axis=1))
+
+    if mesh is not None:
+        # candidate-merge the sub-problem across the mesh: rows_pos are
+        # the sub-problem's "row term" ids, so the shard-local self mask
+        # hits exactly the gathered self column (C when absent — no
+        # local column matches, since C divides into the shard padding)
+        from repro.core.distributed import sharded_block_topk
+        w_b, loc = sharded_block_topk(sub_index, masks, rows_pos, sub_ops,
+                                      k=k, method=method, mesh=mesh)
+        ids = jnp.take(jnp.maximum(cand_cols, 0), jnp.clip(loc, 0, c - 1))
+        return w_b, ids
+
+    blk = get_count_method(method).fn(sub_index, masks, sub_ops)    # (bm, C)
+    cols = jnp.arange(c, dtype=jnp.int32)
+    blk = jnp.where(cols[None, :] == rows_pos[:, None], -1, blk)
+    return gathered_top_k(blk, cand_cols, k)
+
+
+def _resolve_materialize_operands(index, method: str, needs=None):
     """(ctx-or-None, PackedIndex, packed_t, operands) for ``method``.
 
     The pallas path consumes the dense incidence (the cooccur GEMM's right
-    operand); registry methods declare their ``needs``.  With a
-    QueryContext every artifact is the epoch-versioned cache; a bare index
-    builds them one-shot.
+    operand); registry methods declare their ``needs`` (``needs=``
+    overrides — the approx path gathers candidate columns per block, so
+    it drops pre-padded artifacts whose layout can't survive the gather).
+    With a QueryContext every artifact is the epoch-versioned cache; a
+    bare index builds them one-shot.
     """
     from repro.core.query_context import QueryContext
-    needs = (("x_dense",) if method == "pallas"
-             else get_count_method(method).needs)
+    if needs is None:
+        needs = (("x_dense",) if method == "pallas"
+                 else get_count_method(method).needs)
     if isinstance(index, QueryContext):
         ctx = index
         return (ctx, ctx.index, ctx.packed_t(),
@@ -190,7 +278,10 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
                 scope_mask: Optional[jax.Array] = None,
                 row_tile: int = 128, col_tile: int = 512,
                 use_cache: bool = True, mesh=None,
-                shard_strategy: str = "auto") -> CoocNetwork:
+                shard_strategy: str = "auto", mode: str = "exact",
+                threshold: float = DEFAULT_THRESHOLD,
+                num_perm: int = DEFAULT_NUM_PERM,
+                sketch_seed: int = 0) -> CoocNetwork:
     """Materialize the corpus co-occurrence network, top-``k`` per term.
 
     index: a PackedIndex, or a QueryContext (cached artifacts + result
@@ -224,6 +315,23 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
       candidate-only top-k merge (per-device transient is the LOCAL
       shard's counts — the memory-bound regime's strategy);
     * ``"auto"`` (default) — ``"rows"``.
+
+    mode="approx" (``threshold=``, ``num_perm=``, ``sketch_seed=``):
+    sketch-pruned materialization (:mod:`repro.core.sketch`).  Per-term
+    MinHash signatures (``num_perm`` permutations) feed LSH banding at
+    the Jaccard ``threshold``; each row block is exact-counted ONLY
+    against its candidate columns, gathered into a dense tile (blocks
+    with no candidates are skipped outright).  Emitted edge weights are
+    exact; edges can only be *missed*, never wrong.  Returns an
+    :class:`~repro.core.sketch.ApproxCoocNetwork` — the same edge-slot
+    contract plus ``recall_estimate`` (sketch-estimated detection
+    probability of the emitted edges) and ``stats`` (tiles counted vs
+    the exact sweep, candidate pairs, chosen bands).  Scoped
+    materialization stays exact-only (a scope rewrites every filter
+    bitmap, so live signatures would estimate the wrong Jaccard);
+    ``scope="all-time"`` is supported — the combined live+cold index is
+    re-sketched.  Under a mesh the candidate tiles run through the
+    sharded candidate merge (``shard_strategy="rows"`` does not apply).
     """
     from repro.core.query_context import QueryContext
     if k < 1:
@@ -243,6 +351,22 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
     if shard_strategy not in ("auto", "rows", "cols"):
         raise ValueError(f"shard_strategy must be 'auto', 'rows' or 'cols', "
                          f"got {shard_strategy!r}")
+    if mode not in ("exact", "approx"):
+        raise ValueError(f"mode must be 'exact' or 'approx', got {mode!r}")
+    if mode == "approx":
+        if scope_mask is not None or (scope is not None
+                                      and scope != "all-time"):
+            raise ValueError(
+                "mode='approx' does not support scoped materialization: "
+                "a scope rewrites every filter bitmap, so the live "
+                "signatures would estimate the wrong Jaccard — "
+                "materialize the scope exactly, or sketch a dedicated "
+                "index holding only the scoped documents")
+        if shard_strategy == "rows":
+            raise ValueError(
+                "mode='approx' prunes per row block, so the whole-sweep "
+                "shard_strategy='rows' launch does not apply; use "
+                "'auto'/'cols' (the sharded candidate merge)")
 
     if scope == "all-time":
         # the cold-tier scope: live docs + every evicted block spilled to
@@ -261,16 +385,26 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
                 mesh_key = (tuple(int(d.id) for d in mesh.devices.flat)
                             if mesh is not None else None)
                 cache_key = ("materialize", "all-time", k, method, row_tile,
-                             col_tile, mesh_key, shard_strategy)
+                             col_tile, mesh_key, shard_strategy, mode,
+                             float(threshold), int(num_perm),
+                             int(sketch_seed))
                 hit = ctx.cached_artifact(cache_key, ver)
                 if hit is not None:
                     return hit
             net = materialize(combined, k=k, method=method,
                               row_tile=row_tile, col_tile=col_tile,
-                              mesh=mesh, shard_strategy=shard_strategy)
+                              mesh=mesh, shard_strategy=shard_strategy,
+                              mode=mode, threshold=threshold,
+                              num_perm=num_perm, sketch_seed=sketch_seed)
             if cache_key is not None:
                 ctx.store_artifact(cache_key, net, ver)
             return net
+    if mode == "approx":
+        return _materialize_approx(index, ctx, k=k, method=method,
+                                   row_tile=row_tile, mesh=mesh,
+                                   threshold=threshold, num_perm=num_perm,
+                                   sketch_seed=sketch_seed,
+                                   use_cache=use_cache)
     strategy = None if mesh is None else (
         "rows" if shard_strategy == "auto" else shard_strategy)
 
@@ -344,4 +478,110 @@ def materialize(index, *, k: int = 8, method: str = "gemm",
     )
     if cache_key is not None:
         ctx.store_artifact(cache_key, net, cache_ver)
+    return net
+
+
+def _materialize_approx(index, ctx, *, k: int, method: str, row_tile: int,
+                        mesh, threshold: float, num_perm: int,
+                        sketch_seed: int, use_cache: bool
+                        ) -> ApproxCoocNetwork:
+    """``mode="approx"``'s driver: signatures -> banding -> candidate
+    tiles -> exact counts on the candidates only.
+
+    The host loop mirrors the exact per-block loop, but each block
+    counts against ONLY its gathered candidate columns (power-of-two
+    bucketed widths, so recompiles are O(log V) shapes) and blocks with
+    no candidates are skipped without any device work.  Work accounting
+    runs in (row_tile, TILE_QUANTUM) tile units against the exact
+    sweep's total — the differential harness's ``tiles_fraction``.
+    """
+    pidx = ctx.index if ctx is not None else index
+    v = pidx.vocab_size
+    bm = min(row_tile, _round_up(v, 8))
+
+    cache_key = None
+    if ctx is not None and use_cache:
+        mesh_key = (tuple(int(d.id) for d in mesh.devices.flat)
+                    if mesh is not None else None)
+        cache_key = ("materialize", "approx", k, method, bm, mesh_key,
+                     float(threshold), int(num_perm), int(sketch_seed))
+        # epoch-checked inside cached_artifact; version 0 — approx serves
+        # the all-time scope only, so the epoch is the whole story
+        hit = ctx.cached_artifact(cache_key, version=0)
+        if hit is not None:
+            return hit
+
+    bands, rows_per_band = lsh_params(threshold, num_perm)
+    if ctx is not None:
+        sigs_dev = ctx.term_signatures(num_perm=num_perm, seed=sketch_seed)
+    else:
+        a_np, b_np = hash_coefficients(num_perm, sketch_seed)
+        sigs_dev = minhash_signatures(pidx.packed, jnp.asarray(a_np),
+                                      jnp.asarray(b_np))
+    sigs = np.asarray(jax.device_get(sigs_dev))
+    active = np.asarray(jax.device_get(pidx.doc_freq)) > 0
+    per_block, n_pairs = candidate_columns(sigs, b=bands, r=rows_per_band,
+                                           active=active, row_tile=bm)
+
+    # candidate tiles re-gather columns per block, so pre-padded operand
+    # layouts can't ride along: fused falls back to its packed-popcount
+    # path, pallas runs the registry postings kernel single-device and
+    # the cooccur GEMM's x_dense only under the sharded merge
+    needs = get_count_method(method).needs if method != "pallas" else ()
+    if method == "pallas" and mesh is not None:
+        needs = ("x_dense",)
+    needs = tuple(n for n in needs if n != "packed_t_pad")
+    _, pidx, packed_t, operands = _resolve_materialize_operands(
+        index, method, needs=needs)
+
+    n_stripes = _round_up(v, TILE_QUANTUM) // TILE_QUANTUM
+    n_blocks = _round_up(v, bm) // bm
+    tiles_counted = 0
+    ws, ids = [], []
+    for bi in range(n_blocks):
+        cols = per_block[bi]
+        if cols is None:
+            ws.append(jnp.full((bm, k), -1, jnp.int32))
+            ids.append(jnp.zeros((bm, k), jnp.int32))
+            continue
+        cand = pad_candidates(cols, v)                    # (C,) -1-padded
+        tiles_counted += len(cand) // TILE_QUANTUM
+        r0 = bi * bm
+        terms = np.arange(r0, r0 + bm, dtype=np.int64)
+        pos = np.minimum(np.searchsorted(cols, np.clip(terms, 0, v - 1)),
+                         len(cols) - 1)
+        present = (cols[pos] == terms) & (terms < v)
+        rows_pos = np.where(present, pos, len(cand)).astype(np.int32)
+        w_b, i_b = _approx_topk_row_block(
+            pidx, packed_t, operands, r0, jnp.asarray(cand),
+            jnp.asarray(rows_pos), k=k, row_tile=bm, method=method,
+            mesh=mesh)
+        ws.append(w_b)
+        ids.append(i_b)
+    run_w = jnp.concatenate(ws, axis=0)[:v]                       # (V, k)
+    run_i = jnp.concatenate(ids, axis=0)[:v]
+    valid = run_w > 0
+
+    w_np = np.asarray(jax.device_get(run_w))
+    i_np = np.asarray(jax.device_get(run_i))
+    valid_np = (w_np > 0).reshape(-1)
+    recall = estimate_recall(sigs, np.repeat(np.arange(v), k),
+                             i_np.reshape(-1), valid_np,
+                             b=bands, r=rows_per_band)
+    net = ApproxCoocNetwork(
+        src=jnp.repeat(jnp.arange(v, dtype=jnp.int32), k),
+        dst=jnp.where(valid, run_i, -1).reshape(-1),
+        weight=jnp.where(valid, run_w, 0).reshape(-1),
+        valid=valid.reshape(-1),
+        recall_estimate=recall,
+        stats=ApproxStats(tiles_counted=int(tiles_counted),
+                          tiles_total=int(n_blocks * n_stripes),
+                          candidate_pairs=int(n_pairs),
+                          num_perm=int(num_perm),
+                          threshold=float(threshold),
+                          bands=int(bands),
+                          rows_per_band=int(rows_per_band)),
+    )
+    if cache_key is not None:
+        ctx.store_artifact(cache_key, net)
     return net

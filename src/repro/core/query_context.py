@@ -132,6 +132,13 @@ class QueryContext:
         # WITHOUT an epoch bump, so artifacts derived from a scope key on
         # (epoch, scope_version) to stay correct across redefinitions
         self._scope_ver: Dict[str, int] = {}
+        # MinHash sketch state (core.sketch): per (num_perm, seed) config,
+        # the per-live-block signatures as (block_array, sig) pairs —
+        # strong refs matched by identity, so term_signatures() hashes
+        # only blocks it has never seen (a block's postings bits are
+        # immutable while it is live).  The merged (V, P) signature is
+        # served through the epoch-versioned artifact cache.
+        self._sketch_blocks: Dict[Tuple[int, int], list] = {}
         # streaming state: live ingest blocks (slot arrays, oldest first),
         # ring write head, named scope bitmaps + their device cache
         n0 = int(index.n_docs)
@@ -483,6 +490,65 @@ class QueryContext:
             self._packed_t_pad = self._place(p, ("terms", "docs"))
             self._ptp_epoch = self.epoch
         return self._packed_t_pad
+
+    def term_signatures(self, *, num_perm: int = 128, seed: int = 0
+                        ) -> jax.Array:
+        """Per-term MinHash signatures (V, num_perm) uint32 over the LIVE
+        postings (:mod:`repro.core.sketch`) — the approximate
+        materialization's pruning artifact, epoch-versioned through the
+        artifact cache like every other derived artifact.
+
+        Single-device the rebuild is INCREMENTAL: each live ingest
+        block's signature is hashed exactly once (keyed on block
+        identity — a live block's postings bits never change) and the
+        served signature is a min-reduce over the live blocks, so an
+        ingest hashes only the new block, an eviction just drops the
+        evicted block's part, and min's associativity + commutativity
+        makes the merge independent of ingest order.  Vocab growth pads
+        old block signatures with ``SIG_EMPTY`` (old blocks hold no
+        postings for new terms); vocab shrink slices (the dropped
+        columns were postings-free by :meth:`shrink_vocab`'s contract).
+        Under a mesh the signatures are computed sharded alongside the
+        postings (:func:`repro.core.distributed.sharded_signatures`).
+        """
+        from repro.core import sketch
+        cfg = (int(num_perm), int(seed))
+        key = ("minhash",) + cfg
+        # epoch-checked inside cached_artifact; version 0 — the key pins
+        # the config, ingest/evict/grow move the epoch
+        hit = self.cached_artifact(key, version=0)
+        if hit is not None:
+            return hit
+        v = self.vocab_size
+        a, b = sketch.hash_coefficients(num_perm, seed)
+        if self._mesh is not None:
+            from repro.core.distributed import sharded_signatures
+            sig = sharded_signatures(self._index.packed, jnp.asarray(a),
+                                     jnp.asarray(b), self._mesh)
+        else:
+            prev = {id(e[0]): e for e in self._sketch_blocks.get(cfg, [])}
+            ents = []
+            for blk in self._blocks:
+                ent = prev.get(id(blk))
+                if ent is None or ent[0] is not blk:
+                    ent = (blk, sketch.block_signatures(
+                        self._index.packed, blk, a, b))
+                elif ent[1].shape[0] != v:
+                    sig_b = ent[1]
+                    if sig_b.shape[0] > v:
+                        sig_b = sig_b[:v]
+                    else:
+                        sig_b = jnp.concatenate([
+                            sig_b,
+                            jnp.full((v - sig_b.shape[0], sig_b.shape[1]),
+                                     sketch.SIG_EMPTY, jnp.uint32)])
+                    ent = (blk, sig_b)
+                ents.append(ent)
+            self._sketch_blocks[cfg] = ents
+            sig = sketch.merge_signatures([e[1] for e in ents], v,
+                                          int(num_perm))
+        self.store_artifact(key, sig)
+        return sig
 
     def cached_artifact(self, key: Tuple, version: int = 0):
         """Epoch-checked lookup in the generic artifact cache (None on

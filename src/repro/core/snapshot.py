@@ -190,6 +190,24 @@ def context_state(ctx) -> Tuple[Dict[str, np.ndarray], dict]:
         for i, key in enumerate(sorted(ctx._cold)):
             arrays[f"cold_{i:04d}"] = np.frombuffer(ctx._cold[key], np.uint8)
             cold_keys.append(key)
+    # MinHash sketch state (term_signatures' incremental cache): one
+    # signature blob per (config, live block), keyed POSITIONALLY against
+    # block_NNNN — block identity (what the live cache keys on) is
+    # re-established on restore, so a restored context keeps streaming
+    # without re-hashing any block it already sketched
+    sketch_cfgs = []
+    block_pos = {id(b): i for i, b in enumerate(ctx._blocks)}
+    for ci, cfg in enumerate(sorted(ctx._sketch_blocks)):
+        saved = []
+        for ent in ctx._sketch_blocks[cfg]:
+            bi = block_pos.get(id(ent[0]))
+            if bi is None:
+                continue
+            arrays[f"sketch_{ci:02d}_{bi:04d}"] = np.asarray(
+                jax.device_get(ent[1]), np.uint32)
+            saved.append(bi)
+        sketch_cfgs.append({"num_perm": int(cfg[0]), "seed": int(cfg[1]),
+                            "blocks": saved})
     meta = {
         "kind": "context",
         "n_docs": int(idx.n_docs),
@@ -205,6 +223,7 @@ def context_state(ctx) -> Tuple[Dict[str, np.ndarray], dict]:
         "scope_ver": dict(ctx._scope_ver),
         "cold_seq": int(ctx._cold_seq),
         "cold_keys": cold_keys,
+        "sketch_cfgs": sketch_cfgs,
     }
     return arrays, meta
 
@@ -244,6 +263,13 @@ def context_from_state(arrays: Dict[str, np.ndarray], meta: dict, *,
             cold_store[key] = arrays[f"cold_{i:04d}"].tobytes()
     ctx._cold = cold_store
     ctx._cold_seq = int(meta.get("cold_seq", 0))
+    blocks = list(ctx._blocks)
+    for ci, cfg in enumerate(meta.get("sketch_cfgs", [])):
+        ctx._sketch_blocks[(int(cfg["num_perm"]), int(cfg["seed"]))] = [
+            (blocks[int(bi)],
+             jnp.asarray(np.ascontiguousarray(
+                 arrays[f"sketch_{ci:02d}_{int(bi):04d}"], np.uint32)))
+            for bi in cfg["blocks"]]
     return ctx
 
 

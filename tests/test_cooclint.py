@@ -173,6 +173,68 @@ class TestUnclampedTopK:
         # the unclamped internal call AND the broken-contract definition
         assert sorted(codes(bad)) == ["COOC002", "COOC002"]
 
+    def test_gathered_top_k_is_a_proven_sink(self):
+        # the approx tile path's sink: callers pass raw k, the definition
+        # owns the clamp against the gathered candidate width
+        assert codes('w, i = gathered_top_k(counts, cand, k)') == []
+
+    def test_gathered_top_k_definition_must_keep_its_clamp(self):
+        good = '''
+        def gathered_top_k(counts, cand, k):
+            k_eff = min(k, counts.shape[-1])
+            return jax.lax.top_k(counts, k_eff)
+        '''
+        assert codes(good) == []
+        bad = '''
+        def gathered_top_k(counts, cand, k):
+            return jax.lax.top_k(counts, k)
+        '''
+        # the unclamped internal call AND the broken-contract definition
+        assert sorted(codes(bad)) == ["COOC002", "COOC002"]
+
+    SKETCH = "src/repro/core/sketch.py"
+    UNCLAMPED = '''
+    def gather_block(counts, k):
+        x = counts
+        return jax.lax.top_k(x, k)
+    '''
+
+    def test_sketch_file_findings_anchor_to_the_enclosing_def(self):
+        fs = [f for f in lint_source(textwrap.dedent(self.UNCLAMPED),
+                                     self.SKETCH) if f.code == "COOC002"]
+        assert len(fs) == 1
+        assert fs[0].line == 2                 # the def line, not line 4
+        assert "enclosing def gather_block()" in fs[0].message
+
+    def test_sketch_name_hint_anchors_outside_the_sketch_file(self):
+        src = '''
+        def approx_candidates(x, k):
+            return jax.lax.top_k(x, k)
+        '''
+        fs = lint_source(textwrap.dedent(src), SRC)
+        assert [f.code for f in fs] == ["COOC002"]
+        assert fs[0].line == 2
+        # non-sketch names in the same generic path keep call-line anchors
+        plain = '''
+        def plain_path(x, k):
+            return jax.lax.top_k(x, k)
+        '''
+        fs = lint_source(textwrap.dedent(plain), SRC)
+        assert [f.code for f in fs] == ["COOC002"]
+        assert fs[0].line == 3
+
+    def test_sketch_call_line_suppression_cannot_waive(self):
+        # suppressing at the call line misses the def-anchored finding
+        # AND trips COOC900 — the waiver must sit on the def
+        src = ('def approx_candidates(x, k):\n'
+               '    return jax.lax.top_k(x, k)'
+               '  # cooclint: disable=COOC002 -- nope\n')
+        assert sorted(codes(src)) == ["COOC002", "COOC900"]
+        waived = ('def approx_candidates(x, k):'
+                  '  # cooclint: disable=COOC002 -- oracle-checked\n'
+                  '    return jax.lax.top_k(x, k)\n')
+        assert codes(waived) == []
+
     def test_suppressed(self):
         assert codes(
             'w, i = jax.lax.top_k(x, k)  # cooclint: disable=COOC002 -- ok\n'
@@ -463,3 +525,6 @@ class TestJaxprAudit:
             cwd=REPO, capture_output=True, text=True, env=env)
         assert r.returncode == 0, r.stdout + r.stderr
         assert "bfs_construct_batch" in r.stdout
+        # the approx-mode entries registered with the auditor
+        assert "materialize._approx_topk_row_block" in r.stdout
+        assert "sketch.minhash_signatures" in r.stdout

@@ -473,6 +473,80 @@ class TestNetworkOps:
             weight=jnp.asarray([1, 1], jnp.int32), valid=jnp.asarray([True, True]))
         assert edge_jaccard(net, net) == 1.0
 
+    def test_edge_jaccard_disjoint_overlap_empty(self):
+        def net(pairs):
+            s, d = (jnp.asarray(x, jnp.int32) for x in zip(*pairs))
+            n = len(pairs)
+            return CoocNetwork(s, d, jnp.ones((n,), jnp.int32),
+                               jnp.ones((n,), bool))
+        a = net([(0, 1), (1, 2)])
+        b = net([(3, 4), (4, 5)])
+        assert edge_jaccard(a, b) == 0.0
+        # {01, 12} vs {12, 23}: 1 shared of 3 union; direction-insensitive
+        c = net([(2, 1), (2, 3)])
+        assert edge_jaccard(a, c) == pytest.approx(1 / 3)
+        empty = CoocNetwork(jnp.zeros((2,), jnp.int32),
+                            jnp.zeros((2,), jnp.int32),
+                            jnp.zeros((2,), jnp.int32),
+                            jnp.zeros((2,), bool))
+        assert edge_jaccard(empty, empty) == 1.0
+        assert edge_jaccard(a, empty) == 0.0
+
+    def test_top_edges_tie_order_prefers_earlier_slot(self):
+        """Equal weights: ``lax.top_k`` keeps lower slot index first —
+        the tie contract every materialize/bfs consumer relies on."""
+        net = CoocNetwork(
+            src=jnp.asarray([9, 8, 7, 6], jnp.int32),
+            dst=jnp.asarray([1, 2, 3, 4], jnp.int32),
+            weight=jnp.asarray([5, 5, 5, 5], jnp.int32),
+            valid=jnp.asarray([True] * 4))
+        top = top_edges(net, 2)
+        np.testing.assert_array_equal(np.asarray(top.src), [9, 8])
+        np.testing.assert_array_equal(np.asarray(top.dst), [1, 2])
+        # limit > max_edges must clamp, not crash
+        assert top_edges(net, 99).max_edges == 4
+
+    def test_merge_duplicates_idempotent(self):
+        from repro.core import merge_duplicates
+        net = CoocNetwork(                       # (0,1) three times + (1,2)
+            src=jnp.asarray([0, 1, 0, 1, 3], jnp.int32),
+            dst=jnp.asarray([1, 0, 1, 2, 3], jnp.int32),
+            weight=jnp.asarray([4, 7, 2, 5, 9], jnp.int32),
+            valid=jnp.asarray([True, True, True, True, False]))
+        once = merge_duplicates(net, 4)
+        assert to_edge_dict(once) == {(0, 1): 7, (1, 2): 5}
+        # idempotent on the edge set (slot ORDER may re-compact: the
+        # second pass sorts the first pass's interspersed invalid slots
+        # to the back, so array-level identity is not the contract)
+        twice = merge_duplicates(once, 4)
+        assert to_edge_dict(twice) == to_edge_dict(once)
+        assert int(np.asarray(twice.valid).sum()) == int(
+            np.asarray(once.valid).sum())
+        thrice = merge_duplicates(twice, 4)
+        assert to_edge_dict(thrice) == to_edge_dict(once)
+
+    def test_degree_histogram_bounds(self):
+        from repro.core import degree_histogram, global_statistics
+        net = CoocNetwork(                       # star: 0-1, 0-2, 0-3
+            src=jnp.asarray([0, 0, 0], jnp.int32),
+            dst=jnp.asarray([1, 2, 3], jnp.int32),
+            weight=jnp.asarray([1, 2, 3], jnp.int32),
+            valid=jnp.asarray([True] * 3))
+        stats = global_statistics(net, 6)
+        h = degree_histogram(stats)
+        assert h[0] == 0                          # isolated terms aren't nodes
+        assert int(h.sum()) == stats.n_nodes
+        assert len(h) == stats.max_degree + 1
+        assert np.all(h >= 0)
+        np.testing.assert_array_equal(h, [0, 3, 0, 1])
+        # empty network: the all-zero one-bin histogram
+        empty = CoocNetwork(jnp.zeros((2,), jnp.int32),
+                            jnp.zeros((2,), jnp.int32),
+                            jnp.zeros((2,), jnp.int32),
+                            jnp.zeros((2,), bool))
+        np.testing.assert_array_equal(
+            degree_histogram(global_statistics(empty, 4)), [0])
+
 
 class TestGlobalStatistics:
     def test_known_triangle_plus_pendant(self):

@@ -20,7 +20,16 @@ scratch on the surviving docs after every mutation.
 Registered under the ``slow`` marker; the per-test example budget is
 ``COOC_DIFF_EXAMPLES`` (CI sets a reduced profile so the suite runs on
 every PR without blowing the time budget).
+
+The second half is the approximate-materialization differential: the
+sketch-pruned path (``mode="approx"``) against the exact oracle on
+clustered corpora — recall floor + tile budget at the default knobs,
+bit-exact weights on every emitted edge, monotone recall in the
+permutation budget (via nested prefix bands, see the test), and a
+(V, density, threshold, num_perm) sweep whose measured recall curve is
+committed to ``results/differential/approx_recall_curve.json``.
 """
+import json
 import os
 import subprocess
 import sys
@@ -46,10 +55,14 @@ from repro.core import (
     to_edge_dict,
     traversal_construct_host,
 )
+from repro.core import sketch
 
 pytestmark = pytest.mark.slow
 
 MAX_EXAMPLES = int(os.environ.get("COOC_DIFF_EXAMPLES", "12"))
+#: full sweep grid only at the default example budget; CI's reduced
+#: profile (COOC_DIFF_EXAMPLES=6) runs the small grid
+FULL_PROFILE = MAX_EXAMPLES >= 12
 METHODS = ("gemm", "popcount", "pallas", "fused")
 
 
@@ -271,6 +284,324 @@ class TestMaterializeMatchesOracle:
 
 
 # ---------------------------------------------------------------------------
+# Approximate (sketch-pruned) materialization: the recall/speedup
+# differential harness
+# ---------------------------------------------------------------------------
+
+ARTIFACT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "differential", "approx_recall_curve.json")
+
+
+def _clustered_corpus(vocab, n_docs, cluster, density, n_noise, seed):
+    """Docs drawn from ``vocab // cluster`` term communities: each doc
+    keeps every term of one community with probability ``density`` plus
+    ``n_noise`` uniform noise terms.  Intra-community term Jaccard is
+    ~``density / (2 - density)`` — the regime LSH prunes well — while
+    cross-community pairs co-occur only through noise."""
+    rng = np.random.default_rng(seed)
+    n_cl = vocab // cluster
+    docs = []
+    for _ in range(n_docs):
+        c = int(rng.integers(0, n_cl))
+        base = np.arange(c * cluster, (c + 1) * cluster)
+        keep = base[rng.random(cluster) < density]
+        noise = rng.integers(0, vocab, size=n_noise)
+        docs.append(sorted(set(map(int, keep)) | set(map(int, noise))))
+    return docs
+
+
+def _rows_by_attr(net):
+    """Directed {(src, dst): weight} of the valid slots — by attribute,
+    so CoocNetwork (4 fields) and ApproxCoocNetwork (6) both work."""
+    src, dst, w, ok = (np.asarray(getattr(net, f))
+                       for f in ("src", "dst", "weight", "valid"))
+    return {(int(s), int(d)): int(wt)
+            for s, d, wt, o in zip(src, dst, w, ok) if o}
+
+
+def _recall_of(approx_rows, exact_rows):
+    return len(set(approx_rows) & set(exact_rows)) / max(len(exact_rows), 1)
+
+
+def _pair_counts(docs, vocab):
+    """Symmetric exact pair-count matrix from the traversal oracle."""
+    m = np.zeros((vocab, vocab), np.int64)
+    for (a, b), w in traversal_construct_host(docs, vocab).items():
+        m[a, b] = m[b, a] = w
+    return m
+
+
+class TestApproxMaterialize:
+    def test_default_params_recall_floor_and_tile_budget(self):
+        """The acceptance cell: ``mode="approx"`` at the default knobs
+        (threshold 0.5, num_perm 128) on a clustered corpus recovers
+        >= 0.95 of the exact top-k edge set while counting <= 50% of the
+        exact path's row-block tiles — and every weight it does emit is
+        the exact pair count (the sketch prunes, never estimates)."""
+        vocab, k = 384, 8
+        docs = _clustered_corpus(vocab, 500, 16, 0.9, 1, seed=0)
+        ctx = QueryContext.from_docs(docs, vocab)
+        exact = _rows_by_attr(materialize(ctx, k=k, method="popcount"))
+        net = materialize(ctx, k=k, mode="approx", method="popcount")
+        rows = _rows_by_attr(net)
+
+        assert _recall_of(rows, exact) >= 0.95
+        assert net.stats.tiles_fraction <= 0.5
+        assert net.stats.tiles_counted > 0
+        assert net.stats.candidate_pairs > 0
+        assert net.stats.bands * net.stats.rows_per_band <= net.stats.num_perm
+
+        m = _pair_counts(docs, vocab)
+        for (a, b), w in rows.items():
+            assert m[a, b] == w, (a, b)
+
+        # the self-reported estimate is a probability and, on a corpus
+        # whose similar pairs sit above the threshold, a tight one
+        assert 0.8 <= float(net.recall_estimate) <= 1.0
+
+        # CoocNetwork contract: same slot layout, consumable by the
+        # host-side network helpers unchanged
+        assert net.max_edges == vocab * k
+        assert int(net.num_edges()) == int(np.asarray(net.valid).sum())
+        assert to_edge_dict(net)
+
+        warm = materialize(ctx, k=k, mode="approx", method="popcount")
+        assert warm is net
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=max(MAX_EXAMPLES // 3, 3), deadline=None)
+    def test_methods_agree_bit_exact(self, seed):
+        """All four count methods produce the IDENTICAL approximate
+        network — the candidate gather feeds the same kernels the exact
+        path uses, so method equivalence must survive the pruning."""
+        vocab = 256
+        docs = _clustered_corpus(vocab, 250, 16, 0.8, 1, seed)
+        ctx = QueryContext.from_docs(docs, vocab)
+        nets = {m: materialize(ctx, k=6, mode="approx", num_perm=64,
+                               method=m)
+                for m in METHODS}
+        ref = nets["gemm"]
+        for m in METHODS[1:]:
+            for f in ("src", "dst", "weight", "valid"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ref, f)),
+                    np.asarray(getattr(nets[m], f)), err_msg=m)
+            assert nets[m].stats == ref.stats
+
+    def test_monotone_recall_in_num_perm(self):
+        """Recall is monotone in the permutation budget.
+
+        Measured end-to-end recall under ``lsh_params``' free (b, r)
+        re-optimisation is NOT monotone example-by-example (the optimiser
+        trades false positives for false negatives differently at each
+        budget), so the assertion pins rows-per-band and grows bands over
+        a PREFIX of one signature array: bands of the larger budget are a
+        superset of the smaller's, candidate sets are nested, and an
+        exact-top-k edge present in a candidate set survives any candidate
+        superset (at most k-1 columns outrank it anywhere).  Under that
+        construction measured recall is provably non-decreasing — the
+        assertion is deterministic, not statistical."""
+        vocab, k, r = 384, 8, 4
+        ladder = (8, 16, 32, 64, 128)
+        for seed in (0, 1):
+            docs = _clustered_corpus(vocab, 400, 16, 0.7, 2, seed)
+            ctx = QueryContext.from_docs(docs, vocab)
+            exact = _rows_by_attr(materialize(ctx, k=k, method="popcount"))
+            sigs = np.asarray(ctx.term_signatures(num_perm=ladder[-1]))
+            active = np.asarray(ctx.index.doc_freq) > 0
+            m = _pair_counts(docs, vocab)
+            recalls = []
+            for num_perm in ladder:
+                per_block, _ = sketch.candidate_columns(
+                    sigs, b=num_perm // r, r=r, active=active, row_tile=64)
+                emitted = set()
+                for bi, cols in enumerate(per_block):
+                    if cols is None:
+                        continue
+                    for a in range(bi * 64, min(bi * 64 + 64, vocab)):
+                        cand = cols[cols != a]
+                        if not len(cand):
+                            continue
+                        w = m[a, cand]
+                        for j in np.lexsort((cand, -w))[:k]:
+                            if w[j] > 0:
+                                emitted.add((a, int(cand[j])))
+                recalls.append(_recall_of(emitted, exact))
+            assert all(lo <= hi + 1e-12
+                       for lo, hi in zip(recalls, recalls[1:])), recalls
+            assert recalls[-1] >= 0.95, recalls
+            assert recalls[-1] - recalls[0] >= 0.2, recalls   # budget matters
+
+    def test_recall_sweep_emits_curve_artifact(self):
+        """The (V, density, threshold, num_perm) sweep against the exact
+        oracle; the measured curve lands in
+        ``results/differential/approx_recall_curve.json`` (atomic write),
+        and the default-knob cell re-asserts the acceptance floor."""
+        from benchmarks.common import write_json
+        if FULL_PROFILE:
+            grid_v, grid_d = (384, 512), (0.7, 0.9)
+            grid_t, grid_p = (0.5, 0.7), (32, 128)
+        else:
+            grid_v, grid_d = (384,), (0.9,)
+            grid_t, grid_p = (0.5,), (32, 128)
+        cells = []
+        for vocab in grid_v:
+            for density in grid_d:
+                docs = _clustered_corpus(vocab, vocab + 128, 16, density,
+                                         1, seed=7)
+                ctx = QueryContext.from_docs(docs, vocab)
+                exact = _rows_by_attr(
+                    materialize(ctx, k=8, method="popcount"))
+                for threshold in grid_t:
+                    for num_perm in grid_p:
+                        net = materialize(ctx, k=8, mode="approx",
+                                          method="popcount",
+                                          threshold=threshold,
+                                          num_perm=num_perm)
+                        cells.append({
+                            "vocab": vocab, "density": density,
+                            "threshold": threshold, "num_perm": num_perm,
+                            "n_docs": len(docs), "k": 8,
+                            "recall": _recall_of(_rows_by_attr(net), exact),
+                            "recall_estimate": float(net.recall_estimate),
+                            "tiles_fraction": net.stats.tiles_fraction,
+                            "candidate_pairs": net.stats.candidate_pairs,
+                            "bands": net.stats.bands,
+                            "rows_per_band": net.stats.rows_per_band,
+                        })
+        path = write_json(ARTIFACT_PATH, {
+            "schema": 1, "profile": "full" if FULL_PROFILE else "reduced",
+            "oracle": "materialize(mode='exact', method='popcount')",
+            "cells": cells})
+        assert os.path.exists(path)
+        assert json.loads(open(path).read())["cells"] == cells
+        default = [c for c in cells
+                   if c["threshold"] == 0.5 and c["num_perm"] == 128
+                   and c["density"] == 0.9]
+        assert default, "sweep grid must include the default-knob cell"
+        for c in default:
+            assert c["recall"] >= 0.95, c
+            assert c["tiles_fraction"] <= 0.5, c
+
+    def test_mode_validation(self):
+        docs = _clustered_corpus(64, 40, 16, 0.8, 1, 0)
+        ctx = QueryContext.from_docs(docs, 64)
+        with pytest.raises(ValueError):
+            materialize(ctx, mode="bogus")
+        with pytest.raises(ValueError):
+            materialize(ctx, mode="approx", scope="tag0")
+        with pytest.raises(ValueError):
+            materialize(ctx, mode="approx", shard_strategy="rows")
+
+    def test_api_full_network_and_stats_thread_mode(self):
+        """api-level: ``CoocIndex.full_network(mode="approx")`` returns
+        string edges whose weights are exact pair counts, and
+        ``network_stats(mode="approx")`` consumes the approx net."""
+        from repro.api import CoocIndex
+        texts = [" ".join(f"w{t}" for t in doc)
+                 for doc in _clustered_corpus(96, 150, 16, 0.9, 1, 3)]
+        idx = CoocIndex.from_texts(texts, vocab_capacity=96)
+        exact = idx.full_network(4)
+        approx = idx.full_network(4, mode="approx", num_perm=64)
+        assert approx
+        # emitted weights are exact: when the edge also survives in the
+        # exact net it must carry the identical count
+        for edge, w in approx.items():
+            if edge in exact:
+                assert exact[edge] == w, edge
+        stats = idx.network_stats(4, mode="approx", num_perm=64)
+        assert stats.n_edges == len(to_edge_dict(
+            materialize(idx.ctx, k=4, mode="approx", num_perm=64,
+                        method=idx.engine.method)))
+
+    def test_incremental_signatures_match_scratch(self):
+        """``QueryContext.term_signatures`` hashes each ingest block once
+        and min-merges: after every ingest / retire / grow the merged
+        signature equals a from-scratch hash of the live postings."""
+        vocab = 48
+        a, b = sketch.hash_coefficients(32, 0)
+
+        def scratch(ctx):
+            return np.asarray(sketch.minhash_signatures(
+                ctx.index.packed, jnp.asarray(a), jnp.asarray(b)))
+
+        rng = np.random.default_rng(0)
+        ctx = QueryContext.from_docs([], vocab, window=64)
+        for i in range(4):
+            blk = [rng.integers(0, ctx.vocab_size,
+                                rng.integers(1, 8)).tolist()
+                   for _ in range(6)]
+            ctx.ingest_docs(blk, max_len=8)
+            np.testing.assert_array_equal(
+                np.asarray(ctx.term_signatures(num_perm=32)), scratch(ctx),
+                err_msg=f"ingest {i}")
+        ctx.retire_oldest_block()
+        np.testing.assert_array_equal(
+            np.asarray(ctx.term_signatures(num_perm=32)), scratch(ctx),
+            err_msg="retire")
+        ctx.grow_vocab(vocab + 13)
+        np.testing.assert_array_equal(
+            np.asarray(ctx.term_signatures(num_perm=32)), scratch(ctx),
+            err_msg="grow")
+
+    def test_ingest_invalidates_approx_cache(self):
+        """Epoch bump on ingest: the warm approx artifact is dropped and
+        the rebuild equals a from-scratch context bit-for-bit (the
+        incremental signature path must not drift from scratch)."""
+        vocab = 96
+        docs = _clustered_corpus(vocab, 120, 16, 0.9, 1, 5)
+        extra = _clustered_corpus(vocab, 10, 16, 0.9, 1, 6)
+        ctx = QueryContext.from_docs([], vocab, window=256)
+        ctx.ingest_docs(docs, max_len=24)
+        warm = materialize(ctx, k=4, mode="approx", num_perm=32,
+                           method="popcount")
+        ctx.ingest_docs(extra, max_len=24)
+        rebuilt = materialize(ctx, k=4, mode="approx", num_perm=32,
+                              method="popcount")
+        assert rebuilt is not warm
+        fresh = QueryContext.from_docs(docs + extra, vocab)
+        ref = materialize(fresh, k=4, mode="approx", num_perm=32,
+                          method="popcount")
+        for f in ("src", "dst", "weight", "valid"):
+            np.testing.assert_array_equal(np.asarray(getattr(rebuilt, f)),
+                                          np.asarray(getattr(ref, f)),
+                                          err_msg=f)
+
+    def test_snapshot_roundtrip_preserves_signatures(self, tmp_path,
+                                                     monkeypatch):
+        """Snapshot save/restore carries the per-block signatures: the
+        restored context serves ``term_signatures`` WITHOUT rehashing
+        (block_signatures is poisoned to prove it) and the approx network
+        rebuilds bit-identically."""
+        from repro.core import load_context, save_context
+        vocab = 64
+        ctx = QueryContext.from_docs([], vocab, window=128)
+        for i in range(3):
+            ctx.ingest_docs(_clustered_corpus(vocab, 30, 16, 0.85, 1, i),
+                            max_len=24)
+        net = materialize(ctx, k=4, mode="approx", num_perm=32,
+                          method="popcount")
+        sig = np.asarray(ctx.term_signatures(num_perm=32))
+        save_context(ctx, str(tmp_path / "snap"))
+        ctx2 = load_context(str(tmp_path / "snap"))
+        assert ctx2._sketch_blocks
+
+        def _poisoned(*a, **k):
+            raise AssertionError("restore must not rehash live blocks")
+
+        monkeypatch.setattr(sketch, "block_signatures", _poisoned)
+        np.testing.assert_array_equal(
+            np.asarray(ctx2.term_signatures(num_perm=32)), sig)
+        net2 = materialize(ctx2, k=4, mode="approx", num_perm=32,
+                           method="popcount")
+        for f in ("src", "dst", "weight", "valid"):
+            np.testing.assert_array_equal(np.asarray(getattr(net, f)),
+                                          np.asarray(getattr(net2, f)),
+                                          err_msg=f)
+
+
+# ---------------------------------------------------------------------------
 # Sharded vs single-device equivalence (the forced-multi-device harness)
 # ---------------------------------------------------------------------------
 
@@ -387,6 +718,30 @@ class TestShardedEquivalence:
                     materialize(ctxs[shard], k=k, method=m, scope="tag0"),
                     f"mat-scoped/{shard}/{m}")
 
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=max(MAX_EXAMPLES // 3, 3), deadline=None)
+    def test_approx_materialize_bit_exact(self, seed):
+        """mode="approx" under both shard kinds == single device, bit
+        for bit: the signatures are computed sharded alongside the
+        postings and the candidate merge runs through
+        ``sharded_block_topk``, so this covers the whole distributed
+        sketch path."""
+        vocab = 96
+        docs = _clustered_corpus(vocab, 150, 16, 0.85, 1, seed)
+        ctx0 = QueryContext.from_docs(docs, vocab)
+        ref = materialize(ctx0, k=4, mode="approx", num_perm=32,
+                          method="popcount")
+        for shard in SHARDS:
+            ctxm = QueryContext.from_docs(docs, vocab,
+                                          mesh=make_cooc_mesh(shard=shard))
+            for m in ("popcount", "gemm"):
+                net = materialize(ctxm, k=4, mode="approx", num_perm=32,
+                                  method=m)
+                _assert_net_identical(ref, net, f"approx/{shard}/{m}")
+                assert net.stats == ref.stats, (shard, m)
+                np.testing.assert_allclose(float(net.recall_estimate),
+                                           float(ref.recall_estimate))
+
 
 SHARDED_SMOKE = textwrap.dedent("""
     import os
@@ -415,6 +770,22 @@ SHARDED_SMOKE = textwrap.dedent("""
                 np.testing.assert_array_equal(
                     np.asarray(getattr(ma, f)), np.asarray(getattr(mb, f)))
         print("SHARDED-SMOKE-OK", shard)
+    # approximate (sketch-pruned) materialize: clustered docs so LSH has
+    # real candidates to find; must be bit-exact against single device
+    base = [list(range(c * 8, c * 8 + 8)) for c in range(12)]
+    docs2 = [base[i % 12][: 2 + (i % 7)] for i in range(60)]
+    ctx0 = QueryContext.from_docs(docs2, 96)
+    ra = materialize(ctx0, k=4, mode="approx", num_perm=32,
+                     method="popcount")
+    for shard in ("terms", "docs"):
+        ctxm = QueryContext.from_docs(docs2, 96,
+                                      mesh=make_cooc_mesh(shard=shard))
+        rb = materialize(ctxm, k=4, mode="approx", num_perm=32,
+                         method="popcount")
+        for f in ("src", "dst", "weight", "valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ra, f)), np.asarray(getattr(rb, f)))
+    print("SHARDED-SMOKE-APPROX-OK")
 """)
 
 
@@ -434,3 +805,4 @@ def test_sharded_smoke_8_virtual_devices():
                            os.path.abspath(__file__))))
     assert r.returncode == 0, r.stderr[-3000:]
     assert r.stdout.count("SHARDED-SMOKE-OK") == 2
+    assert "SHARDED-SMOKE-APPROX-OK" in r.stdout

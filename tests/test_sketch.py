@@ -1,0 +1,200 @@
+"""Property suite for the MinHash/LSH sketch layer (core/sketch.py).
+
+The LSH optimizer (``lsh_params``) is asserted against its own
+brute-force grid: the chosen (b, r) respects the permutation budget,
+minimizes the weighted FP/FN objective over EVERY feasible (b, r), and
+is Pareto-non-dominated — no alternative achieves strictly lower
+false-negative mass at the threshold without paying more false-positive
+mass.  (Pure FN minimality is degenerate — r=1 always wins it — which
+is exactly why the objective is weighted; the Pareto form is the
+meaningful "FN no worse than any alternative" statement.)
+
+The signature algebra is asserted exact: per-block signatures min-merge
+to the monolithic whole-index signature for ANY partition of the doc
+slots and ANY permutation of the merge order (min is associative +
+commutative), which is what makes the incremental ``term_signatures``
+path independent of how ingest happened to batch the stream.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack_docs
+from repro.core.sketch import (
+    TILE_QUANTUM,
+    _fp_fn_integrals,
+    _round_up,
+    block_signatures,
+    estimate_recall,
+    gathered_top_k,
+    hash_coefficients,
+    lsh_params,
+    lsh_probabilities,
+    merge_signatures,
+    minhash_signatures,
+    pad_candidates,
+)
+
+MAX_EXAMPLES = int(os.environ.get("COOC_DIFF_EXAMPLES", "12"))
+FN_WEIGHT = 0.75          # lsh_params' default, mirrored by the grid check
+
+
+class TestLshOptimizer:
+    @given(st.integers(5, 95), st.integers(1, 128))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_budget_minimality_and_pareto(self, t100, num_perm):
+        t = t100 / 100.0
+        b, r = lsh_params(t, num_perm)
+        assert b >= 1 and r >= 1
+        assert b * r <= num_perm
+        fp0, fn0 = _fp_fn_integrals(t, b, r)
+        cost0 = (1.0 - FN_WEIGHT) * fp0 + FN_WEIGHT * fn0
+        for bb in range(1, num_perm + 1):
+            for rr in range(1, num_perm // bb + 1):
+                fp, fn = _fp_fn_integrals(t, bb, rr)
+                cost = (1.0 - FN_WEIGHT) * fp + FN_WEIGHT * fn
+                assert cost0 <= cost + 1e-12, (bb, rr)
+                # Pareto non-domination: an alternative that is no worse
+                # on FP must not be strictly better on FN
+                assert not (fp <= fp0 + 1e-15 and fn < fn0 - 1e-12), (bb, rr)
+
+    @given(st.integers(1, 32), st.integers(1, 8))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_s_curve_shape(self, b, r):
+        s = np.linspace(0.0, 1.0, 101)
+        p = lsh_probabilities(s, b, r)
+        assert float(p[0]) == 0.0
+        assert float(p[-1]) == pytest.approx(1.0)
+        assert np.all(p >= 0.0) and np.all(p <= 1.0)
+        assert np.all(np.diff(p) >= -1e-12)          # monotone in s
+
+    def test_input_validation(self):
+        for bad_t in (0.0, 1.0, -0.5, 1.5):
+            with pytest.raises(ValueError):
+                lsh_params(bad_t, 16)
+        with pytest.raises(ValueError):
+            lsh_params(0.5, 0)
+        with pytest.raises(ValueError):
+            lsh_params(0.5, 16, fn_weight=1.0)
+
+    def test_known_calibration_points(self):
+        """Pinned outputs at the knobs the repo documents (README
+        §Approximate mode) — a silent objective change must fail loudly,
+        because the committed recall curve was measured at these."""
+        assert lsh_params(0.5, 128) == (26, 4)
+        assert lsh_params(0.5, 64) == (16, 4)
+        assert lsh_params(0.5, 32) == (10, 3)
+        assert lsh_params(0.5, 16) == (6, 2)
+
+
+def _random_corpus(rng, n_docs, vocab):
+    return [rng.integers(0, vocab, rng.integers(0, 8)).tolist()
+            for _ in range(n_docs)]
+
+
+class TestSignatureAlgebra:
+    @given(st.integers(0, 10**6), st.integers(1, 6))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_partition_and_merge_order_invariance(self, seed, n_parts):
+        """Any slot partition, per-part signatures, merged in any order
+        == the monolithic signature of the whole packed index.  This is
+        the exact form of ingest-order independence: however the stream
+        was batched into blocks, and whatever order the per-block
+        signatures are merged in, the served signature is identical."""
+        rng = np.random.default_rng(seed)
+        vocab, n_docs, num_perm = 40, 70, 16
+        docs = _random_corpus(rng, n_docs, vocab)
+        idx = pack_docs(docs, vocab)
+        a, b = hash_coefficients(num_perm, seed=1)
+        full = np.asarray(minhash_signatures(idx.packed, jnp.asarray(a),
+                                             jnp.asarray(b)))
+        slots = rng.permutation(n_docs)
+        parts = [p for p in np.array_split(slots, n_parts) if len(p)]
+        sigs = [block_signatures(idx.packed, np.asarray(p, np.int64), a, b)
+                for p in parts]
+        for _ in range(3):
+            order = rng.permutation(len(sigs))
+            merged = merge_signatures([sigs[i] for i in order], vocab,
+                                      num_perm)
+            np.testing.assert_array_equal(np.asarray(merged), full)
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_refining_a_partition_changes_nothing(self, seed):
+        """Splitting one ingest block into two (the update path's view of
+        a re-batched stream) leaves the merged signature bit-identical."""
+        rng = np.random.default_rng(seed)
+        vocab, n_docs, num_perm = 32, 48, 8
+        idx = pack_docs(_random_corpus(rng, n_docs, vocab), vocab)
+        a, b = hash_coefficients(num_perm)
+        half = n_docs // 2
+        coarse = merge_signatures(
+            [block_signatures(idx.packed, np.arange(n_docs, dtype=np.int64),
+                              a, b)], vocab, num_perm)
+        fine = merge_signatures(
+            [block_signatures(idx.packed, np.arange(half, dtype=np.int64),
+                              a, b),
+             block_signatures(idx.packed,
+                              np.arange(half, n_docs, dtype=np.int64),
+                              a, b)], vocab, num_perm)
+        np.testing.assert_array_equal(np.asarray(coarse), np.asarray(fine))
+
+    def test_hash_coefficients_contract(self):
+        a, b = hash_coefficients(64, seed=3)
+        assert a.dtype == np.uint32 and b.dtype == np.uint32
+        assert a.shape == (64,) and b.shape == (64,)
+        assert np.all(a % 2 == 1)           # odd multiplier == unit mod 2^32
+        a2, b2 = hash_coefficients(64, seed=3)
+        np.testing.assert_array_equal(a, a2)
+        np.testing.assert_array_equal(b, b2)
+        a3, _ = hash_coefficients(64, seed=4)
+        assert not np.array_equal(a, a3)
+
+
+class TestTileHelpers:
+    @given(st.integers(0, 10**6), st.integers(1, 24), st.integers(1, 10))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_gathered_top_k_matches_numpy(self, seed, c, k):
+        rng = np.random.default_rng(seed)
+        counts = rng.integers(0, 5, size=(3, c)).astype(np.int32)
+        cand = np.sort(rng.choice(200, size=c, replace=False)).astype(
+            np.int32)
+        w, ids = gathered_top_k(jnp.asarray(counts), jnp.asarray(cand), k)
+        assert w.shape == (3, k) and ids.shape == (3, k)
+        k_eff = min(k, c)
+        for row in range(3):
+            order = np.lexsort((np.arange(c), -counts[row]))[:k_eff]
+            np.testing.assert_array_equal(np.asarray(w)[row, :k_eff],
+                                          counts[row][order])
+            np.testing.assert_array_equal(np.asarray(ids)[row, :k_eff],
+                                          cand[order])
+        if k_eff < k:                       # -1/0 padding past the tile
+            assert np.all(np.asarray(w)[:, k_eff:] == -1)
+            assert np.all(np.asarray(ids)[:, k_eff:] == 0)
+
+    @given(st.integers(1, 400), st.integers(1, 520))
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    def test_pad_candidates_bucket_contract(self, c, vocab):
+        c = min(c, vocab)
+        cols = np.arange(c, dtype=np.int32)      # any sorted ids work
+        out = pad_candidates(cols, vocab)
+        cap = _round_up(vocab, TILE_QUANTUM)
+        assert len(out) >= c
+        assert len(out) <= cap
+        assert len(out) % TILE_QUANTUM == 0
+        # power-of-two bucketing keeps the compiled-shape count O(log V)
+        assert (len(out) == cap
+                or (len(out) & (len(out) - 1) == 0
+                    and (len(out) == TILE_QUANTUM or len(out) // 2 < c)))
+        np.testing.assert_array_equal(out[:c], cols)
+        assert np.all(out[c:] == -1)
+
+    def test_estimate_recall_no_edges_is_one(self):
+        sigs = np.zeros((4, 8), np.uint32)
+        r = estimate_recall(sigs, np.zeros(4, np.int64),
+                            np.zeros(4, np.int64),
+                            np.zeros(4, bool), b=4, r=2)
+        assert float(r) == 1.0

@@ -3,7 +3,8 @@
 The AST rules (layer 1) catch what the source *says*; this layer checks
 what the compiler will actually *execute*.  Each serving-critical entry
 point — ``bfs_construct_batch``, the fused ``level_step``, the
-materialize tile step, and the sharded merge paths — is abstractly
+materialize tile step, the approximate (sketch-pruned) tile step and
+MinHash signature kernel, and the sharded merge paths — is abstractly
 traced with :func:`jax.make_jaxpr` over shape/dtype stand-ins (no device
 work, no real data) and its jaxpr is walked recursively (into
 pjit/scan/while/shard_map sub-jaxprs) asserting:
@@ -211,6 +212,32 @@ def _audit_materialize_tile() -> List[str]:
         kwargs=dict(k=_K, row_tile=8, col_tile=16, method="gemm"))
 
 
+def _audit_approx_tile() -> List[str]:
+    import jax.numpy as jnp
+    from repro.core.materialize import _approx_topk_row_block
+    index = _abstract_index()
+    packed_t = _sds((_V, _W), jnp.uint32)
+    row_start = _sds((), jnp.int32)
+    cand_cols = _sds((16,), jnp.int32)        # one 64-wide stripe would be
+    rows_pos = _sds((8,), jnp.int32)          # overkill at _V=64; 16 is the
+    return trace_and_audit(                   # same primitive set
+        _approx_topk_row_block,
+        (index, packed_t, {}, row_start, cand_cols, rows_pos),
+        "materialize._approx_topk_row_block",
+        kwargs=dict(k=_K, row_tile=8, method="popcount"))
+
+
+def _audit_minhash_signatures() -> List[str]:
+    import jax.numpy as jnp
+    from repro.core.sketch import minhash_signatures
+    packed = _sds((_W, _V), jnp.uint32)
+    a = _sds((16,), jnp.uint32)
+    b = _sds((16,), jnp.uint32)
+    return trace_and_audit(
+        minhash_signatures, (packed, a, b), "sketch.minhash_signatures",
+        kwargs=dict(perm_tile=8))
+
+
 def _sharded_mesh():
     import jax
     from repro.core.distributed import make_cooc_mesh
@@ -258,6 +285,8 @@ ENTRY_POINTS: Dict[str, Callable[[], List[str]]] = {
     "bfs_construct_batch": _audit_bfs_construct_batch,
     "level_step": _audit_level_step,
     "materialize._topk_row_block": _audit_materialize_tile,
+    "materialize._approx_topk_row_block": _audit_approx_tile,
+    "sketch.minhash_signatures": _audit_minhash_signatures,
     "sharded_counts": _audit_sharded_counts,
     "sharded_block_topk": _audit_sharded_block_topk,
 }

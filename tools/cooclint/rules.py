@@ -5,9 +5,10 @@ code   name              invariant (origin)
 ====== ================= ==========================================================
 COOC001 unsafe-write     all durable writes go through core/atomic_io.py (PR 8
                          fixed three bare-open("w") crash-truncation bugs)
-COOC002 unclamped-topk   every lax.top_k / chunked_top_k k is provably clamped
-                         to the axis width via min(...) (PR 3/4 each fixed a
-                         k > V crash)
+COOC002 unclamped-topk   every lax.top_k / chunked_top_k / gathered_top_k k is
+                         provably clamped to the axis width via min(...)
+                         (PR 3/4 each fixed a k > V crash; PR 10's sketch
+                         path anchors findings to the enclosing def)
 COOC003 blocking-in-async no blocking call lexically on the event loop in the
                          serving path (PR 7's batcher moves device work to
                          executors; one stray sleep stalls every tenant)
@@ -165,27 +166,50 @@ class UnclampedTopK(Rule):
     including constants, which are only safe relative to shapes the
     linter cannot see — needs a justified suppression.
 
-    ``chunked_top_k`` call sites are proven interprocedurally: the
-    wrapper opens with ``k_eff = min(k, v)`` and pads the result back to
-    ``(B, k)``, so it accepts any ``k`` by contract (clamping at its
-    call sites would *shrink the output* and break that contract).  The
-    proof is checked, not assumed — wherever a ``chunked_top_k``
-    function is *defined*, this rule verifies the definition still binds
-    a ``min(...)``-clamped name before its first ``top_k`` use.
+    ``chunked_top_k`` / ``gathered_top_k`` call sites are proven
+    interprocedurally: each wrapper opens with ``k_eff = min(k, ...)``
+    and pads the result back to ``(B, k)``, so it accepts any ``k`` by
+    contract (clamping at its call sites would *shrink the output* and
+    break that contract).  The proof is checked, not assumed — wherever
+    a sink function is *defined*, this rule verifies the definition
+    still binds a ``min(...)``-clamped name before its first ``top_k``
+    use.
+
+    Sketch-path strictness: a finding inside ``core/sketch.py`` or
+    inside a function whose name mentions ``approx``/``sketch`` is
+    anchored to the enclosing ``def`` line, not the call line.  The
+    approximate path gathers *variable-width* candidate tiles, so a
+    same-line suppression proven against one width is no proof at all —
+    anchoring to the definition forces the justification (and any later
+    ``COOC900`` rot-check) to live where the clamp belongs.
     """
 
     code = "COOC002"
     name = "unclamped-topk"
 
-    _TARGETS = ("top_k", "chunked_top_k")
-    _CLAMPING_SINKS = frozenset({"chunked_top_k"})
+    _TARGETS = ("top_k", "chunked_top_k", "gathered_top_k")
+    _CLAMPING_SINKS = frozenset({"chunked_top_k", "gathered_top_k"})
+    _SKETCH_HINTS = ("approx", "sketch")
 
     def check(self, tree: ast.Module, path: str, src: str) -> Iterable[Finding]:
-        yield from self._scope(tree, path, frozenset())
+        yield from self._scope(tree, path, frozenset(), None)
         yield from self._check_sink_definitions(tree, path)
 
-    def _scope(self, scope: ast.AST, path: str,
-               inherited: frozenset) -> Iterable[Finding]:
+    def _sketch_anchor(self, path: str,
+                       enclosing: Optional[ast.AST]) -> Optional[ast.AST]:
+        """The node a sketch-path finding anchors to (the enclosing
+        ``def``), or None when normal call-line anchoring applies."""
+        if enclosing is None:
+            return None
+        if path.replace("\\", "/").endswith("core/sketch.py"):
+            return enclosing
+        name = getattr(enclosing, "name", "").lower()
+        if any(h in name for h in self._SKETCH_HINTS):
+            return enclosing
+        return None
+
+    def _scope(self, scope: ast.AST, path: str, inherited: frozenset,
+               enclosing: Optional[ast.AST]) -> Iterable[Finding]:
         clamped = set(inherited) | self._clamped_names(scope)
         for node in _walk_scope(scope):
             if isinstance(node, ast.Call):
@@ -200,22 +224,30 @@ class UnclampedTopK(Rule):
                 k = self._k_arg(node)
                 if k is None or self._is_clamped(k, clamped):
                     continue
+                anchor = self._sketch_anchor(path, enclosing)
+                where = node if anchor is None else anchor
+                suffix = ("" if anchor is None else
+                          " [sketch path: anchored to the enclosing def "
+                          f"{getattr(anchor, 'name', '?')}() — suppress "
+                          "there, not at the call line]")
                 yield self.finding(
-                    path, node,
+                    path, where,
                     f"{name} k argument {ast.unparse(k)!r} is not provably "
                     "clamped — bind it via k_eff = min(k, axis_size) in this "
                     "or an enclosing function (or route through "
-                    "chunked_top_k, which clamps internally)")
+                    "chunked_top_k/gathered_top_k, which clamp internally)"
+                    + suffix)
         for fn in _nested_functions(scope):
             if isinstance(fn, ast.Lambda):
-                yield from self._scope_lambda(fn, path, frozenset(clamped))
+                yield from self._scope_lambda(fn, path, frozenset(clamped),
+                                              enclosing)
             else:
-                yield from self._scope(fn, path, frozenset(clamped))
+                yield from self._scope(fn, path, frozenset(clamped), fn)
 
-    def _scope_lambda(self, fn: ast.Lambda, path: str,
-                      inherited: frozenset) -> Iterable[Finding]:
+    def _scope_lambda(self, fn: ast.Lambda, path: str, inherited: frozenset,
+                      enclosing: Optional[ast.AST]) -> Iterable[Finding]:
         wrapper = ast.Module(body=[ast.Expr(value=fn.body)], type_ignores=[])
-        for f in self._scope(wrapper, path, inherited):
+        for f in self._scope(wrapper, path, inherited, enclosing):
             yield f
 
     def _check_sink_definitions(self, tree: ast.Module,
